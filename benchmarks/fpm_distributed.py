@@ -1,0 +1,58 @@
+"""Distributed FPM: clustered vs round-robin candidate placement.
+
+Spawns an 8-device subprocess (the bench process itself must keep seeing
+1 device). Reports rows-touched (HBM-locality proxy) and wall time.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+
+CODE = """
+import json, time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.data.transactions import load
+from repro.core.tidlist import pack_database
+from repro.core.distributed_fpm import mine_distributed
+db, p = load('mushroom', seed=0)
+db = db[:2000]
+bm = pack_database(db, p.n_dense_items)
+ms = int(p.support * len(db))
+mesh = Mesh(np.array(jax.devices()).reshape(8), ('data',))
+out = {}
+for pol in ['clustered', 'round_robin']:
+    t0 = time.time()
+    res, stats = mine_distributed(bm, ms, mesh, policy=pol, max_k=5)
+    out[pol] = {'wall_s': time.time() - t0, 'found': len(res), **stats}
+print(json.dumps(out))
+"""
+
+
+def run():
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(CODE)],
+                       capture_output=True, text=True, timeout=560,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def main():
+    print("bench,us_per_call,derived")
+    out = run()
+    for pol, v in out.items():
+        print(f"dist_fpm_{pol},{v['wall_s'] * 1e6:.0f},"
+              f"rows_touched={v['rows_touched']};found={v['found']}")
+    ratio = (out["round_robin"]["rows_touched"]
+             / max(out["clustered"]["rows_touched"], 1))
+    print(f"dist_fpm_locality,0,rows_ratio_rr_over_clustered={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

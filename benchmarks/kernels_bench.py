@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks (jnp reference path on CPU; Pallas numbers are
+structural — interpret mode is not a perf proxy, so we benchmark the
+jnp oracle and report the kernel's analytic VMEM/roofline terms)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitmap_join.ref import bitmap_join_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.masked_gram.ref import masked_gram_ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def timeit(fn, *args, repeats=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / repeats
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # bitmap_join: E=4096 extensions x W=4096 words (0.5M transactions)
+    prefix = jnp.asarray(rng.integers(0, 2 ** 32, 4096, dtype=np.uint32))
+    exts = jnp.asarray(rng.integers(0, 2 ** 32, (4096, 4096),
+                                    dtype=np.uint32))
+    f = jax.jit(bitmap_join_ref)
+    dt = timeit(f, prefix, exts)
+    bytes_moved = exts.nbytes + prefix.nbytes
+    rows.append({"name": "bitmap_join_4096x4096", "wall_s": dt,
+                 "tpu_mem_bound_s": bytes_moved / HBM_BW})
+
+    # masked_gram: 512 items x 8192 transactions
+    a = jnp.asarray((rng.random((512, 8192)) < 0.4), jnp.bfloat16)
+    mask = jnp.asarray((rng.random(8192) < 0.5), jnp.bfloat16)
+    f = jax.jit(masked_gram_ref)
+    dt = timeit(f, a, mask)
+    flops = 2 * 512 * 512 * 8192
+    rows.append({"name": "masked_gram_512x8192", "wall_s": dt,
+                 "tpu_compute_bound_s": flops / PEAK_FLOPS})
+
+    # flash attention: BH=8, S=2048, D=128
+    q = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    dt = timeit(f, q, k, v, repeats=3)
+    flops = 4 * 8 * 2048 * 2048 * 128
+    rows.append({"name": "flash_attention_8x2048x128", "wall_s": dt,
+                 "tpu_compute_bound_s": flops / PEAK_FLOPS})
+    return rows
+
+
+def main():
+    print("bench,us_per_call,derived")
+    for r in run():
+        extra = {k: v for k, v in r.items() if k not in ("name", "wall_s")}
+        ds = ";".join(f"{k}={v:.3e}" for k, v in extra.items())
+        print(f"{r['name']},{r['wall_s'] * 1e6:.0f},{ds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Clustered vs one-hot MoE dispatch: wall time + FLOPs (smoke scale).
+
+The framework-level incarnation of the paper's comparison: bucketed
+(sorted) dispatch vs the dense one-hot baseline. The dry-run supplies the
+production-scale HLO numbers (EXPERIMENTS.md §Perf); this bench gives a
+runnable, CPU-scale wall-time contrast.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_smoke_config
+from repro.models import moe as moe_mod
+from repro.models.registry import build_model
+
+
+def run(t: int = 4096, e: int = 16, k: int = 4, d: int = 256,
+        repeats: int = 20) -> List[Dict]:
+    cfg = get_smoke_config("dbrx-132b").with_(
+        d_model=d, dtype="float32",
+        moe=MoEConfig(n_experts=e, top_k=k, capacity_factor=1.25))
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    p = jax.tree.map(lambda a: a[0], m.init(key)["blocks"]["moe"])
+    x = jax.random.normal(key, (t, cfg.d_model), jnp.float32)
+    rows = []
+    for name, fn, g in [
+            ("clustered", moe_mod.moe_clustered, 4),
+            ("onehot", moe_mod.moe_onehot, max(1, t // 1024))]:
+        jf = jax.jit(lambda p, x: fn(cfg, p, x, g))
+        jf(p, x)[0].block_until_ready()
+        t0 = time.time()
+        for _ in range(repeats):
+            y, _ = jf(p, x)
+        y.block_until_ready()
+        dt = (time.time() - t0) / repeats
+        # analytic dispatch flops
+        c = moe_mod._capacity(cfg, t // g)
+        if name == "onehot":
+            disp_flops = 2 * t * e * c * (d + 2)     # dispatch+combine
+        else:
+            disp_flops = 0                            # sort/gather only
+        rows.append({"policy": name, "wall_s": dt,
+                     "dispatch_flops": disp_flops})
+    return rows
+
+
+def main():
+    print("bench,us_per_call,derived")
+    rows = run()
+    base = {r["policy"]: r for r in rows}
+    sp = base["onehot"]["wall_s"] / base["clustered"]["wall_s"]
+    for r in rows:
+        print(f"moe_dispatch_{r['policy']},{r['wall_s'] * 1e6:.0f},"
+              f"dispatch_flops={r['dispatch_flops']:.2e}")
+    print(f"moe_dispatch_speedup,0,clustered_vs_onehot={sp:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

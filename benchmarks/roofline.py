@@ -1,0 +1,107 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline
+table (single-pod cells) and writes results/roofline.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+DRYRUN_DIR = Path("results/dryrun")
+
+
+def load_cells(mesh: str = "pod", tag: str = "") -> List[Dict]:
+    out = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            continue
+        parts = r["cell"].split("__")
+        cell_tag = parts[3] if len(parts) > 3 else ""
+        if parts[2] != mesh or cell_tag != tag:
+            continue
+        out.append(r)
+    return out
+
+
+def fraction_of_roofline(r: Dict) -> float:
+    """useful work time / achievable step time ~= MODEL_FLOPS/peak over
+    max(term)."""
+    terms = r["roofline"]
+    bound = max(terms.values())
+    useful = r["model_flops_per_device"] / 197e12
+    return useful / bound if bound else 0.0
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = ("| cell | compute_s | memory_s | collective_s | dominant | "
+           "useful/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: fraction_of_roofline(r)):
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} × {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{fraction_of_roofline(r):.4f} |")
+    return hdr + "\n".join(lines)
+
+
+def optimized_table(base_rows: List[Dict]) -> str:
+    """Baseline vs best tagged (optimized) variant per cell."""
+    best: Dict[str, Dict] = {}
+    for f in sorted(DRYRUN_DIR.glob("*__pod__*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            continue
+        key = f"{r['arch']}__{r['shape']}"
+        cur = best.get(key)
+        if cur is None or (max(r["roofline"].values())
+                           < max(cur["roofline"].values())):
+            best[key] = r
+    lines = ["| cell | dominant term: baseline → optimized | variant | "
+             "roofline frac: baseline → optimized |",
+             "|---|---|---|---|"]
+    n = 0
+    for b in base_rows:
+        key = f"{b['arch']}__{b['shape']}"
+        o = best.get(key)
+        if o is None:
+            continue
+        bb, oo = max(b["roofline"].values()), max(o["roofline"].values())
+        if oo >= bb * 0.99:
+            continue
+        tag = o["cell"].split("__")[-1]
+        lines.append(
+            f"| {key} | {bb:.2f} s → {oo:.2f} s ({bb/oo:.2f}×) | {tag} | "
+            f"{fraction_of_roofline(b):.4f} → {fraction_of_roofline(o):.4f} |")
+        n += 1
+    if n == 0:
+        return ""
+    return ("\n\n## §Perf: baseline vs optimized cells\n\n"
+            + "\n".join(lines))
+
+
+def main():
+    rows = load_cells("pod")
+    if not rows:
+        print("bench,us_per_call,derived")
+        print("roofline,0,no_dryrun_results_yet")
+        return
+    md = "# Roofline (single-pod 16x16, per-device terms)\n\n" + table(rows)
+    md += optimized_table(rows)
+    mrows = load_cells("multipod")
+    if mrows:
+        md += ("\n\n## Multi-pod (2x16x16) compile proof — per-device "
+               "terms\n\n" + table(mrows))
+    Path("results").mkdir(exist_ok=True)
+    Path("results/roofline.md").write_text(md + "\n")
+    print("bench,us_per_call,derived")
+    for r in rows:
+        print(f"roofline_{r['arch']}__{r['shape']},0,"
+              f"dom={r['dominant']};frac={fraction_of_roofline(r):.4f}")
+
+
+if __name__ == "__main__":
+    main()

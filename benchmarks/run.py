@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+  fpm_policies     Fig. 1  (normalized runtimes, Cilk vs Clustered)
+  fpm_locality     Table 1 (locality metrics)
+  fpm_scaling      worker scaling
+  fpm_distributed  clustered vs round-robin placement on an 8-dev mesh
+  moe_dispatch     framework-level clustered vs one-hot dispatch
+  kernels_bench    kernel micro-benches + analytic TPU bounds
+  roofline         aggregates results/dryrun into results/roofline.md
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fpm_distributed, fpm_locality, fpm_policies,
+                        fpm_scaling, kernels_bench, moe_dispatch, roofline,
+                        serve_bench)
+
+ALL = [
+    ("fpm_policies", fpm_policies.main),
+    ("fpm_locality", fpm_locality.main),
+    ("fpm_scaling", fpm_scaling.main),
+    ("fpm_distributed", fpm_distributed.main),
+    ("moe_dispatch", moe_dispatch.main),
+    ("kernels_bench", kernels_bench.main),
+    ("serve_bench", serve_bench.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, fn in ALL:
+        if only and name != only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failed:
+        print(f"# failures: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

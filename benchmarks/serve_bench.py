@@ -1,0 +1,47 @@
+"""Serving throughput (smoke scale): batched KV-cache decode tok/s per
+family — dense, MoE (clustered dispatch), SSM (O(1) state)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+
+ARCHS = ["olmo-1b", "dbrx-132b", "mamba2-1.3b"]
+
+
+def run(batch: int = 8, gen: int = 32) -> List[Dict]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        cache = m.init_cache(batch, gen + 1)
+        decode = jax.jit(m.decode_step, donate_argnums=(1,))
+        tok = jnp.zeros((batch, 1), jnp.int32)
+        logits, cache = decode(params, cache, tok, jnp.int32(0))  # warmup
+        t0 = time.time()
+        for i in range(gen):
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            logits, cache = decode(params, cache, tok, jnp.int32(i + 1))
+        logits.block_until_ready()
+        dt = time.time() - t0
+        rows.append({"arch": arch, "family": cfg.family,
+                     "tok_s": batch * gen / dt,
+                     "ms_per_step": dt / gen * 1e3})
+    return rows
+
+
+def main():
+    print("bench,us_per_call,derived")
+    for r in run():
+        print(f"serve_{r['arch']},{r['ms_per_step'] * 1e3:.0f},"
+              f"family={r['family']};tok_s={r['tok_s']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Distributed FPM on a multi-device mesh: the paper's clustered
+scheduling as owner-computes placement (spawns an 8-device subprocess).
+
+Run:  PYTHONPATH=src python examples/distributed_mining.py
+"""
+import subprocess
+import sys
+import textwrap
+
+CODE = """
+import sys; sys.path.insert(0, "src")
+import time
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.data.transactions import load
+from repro.core.tidlist import pack_database
+from repro.core.fpm import mine_serial
+from repro.core.distributed_fpm import mine_distributed
+
+db, p = load('mushroom', seed=0)
+db = db[:2500]
+bm = pack_database(db, p.n_dense_items)
+ms = int(0.22 * len(db))
+print(f"{len(db)} transactions over 8 devices, min_support={ms}")
+ref = mine_serial(bm, ms, max_k=4)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ('data',))
+for pol in ['round_robin', 'clustered']:
+    t0 = time.time()
+    res, stats = mine_distributed(bm, ms, mesh, policy=pol, max_k=4)
+    assert res == ref
+    print(f"[{pol:11s}] wall={time.time()-t0:5.2f}s "
+          f"rows_touched={stats['rows_touched']:7d} "
+          f"candidates={stats['candidates']}")
+print("clustered placement touches fewer bitmap rows: the prefix join "
+      "is computed once per bucket (owner-computes locality).")
+"""
+
+
+def main():
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(CODE)],
+                       env=env, text=True)
+    sys.exit(r.returncode)
+
+
+if __name__ == "__main__":
+    main()

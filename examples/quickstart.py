@@ -1,0 +1,45 @@
+"""Quickstart: the paper's system in 60 seconds.
+
+1. Generate a transaction database (FIMI-profile synthetic).
+2. Mine it with the Cilk-style policy, then the clustered policy.
+3. Show the locality metrics that explain the difference (the paper's
+   Fig. 1 + Table 1 story).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core.fpm import mine, mine_serial
+from repro.core.tidlist import pack_database
+from repro.data.transactions import load
+
+
+def main():
+    db, prof = load("chess", seed=0)
+    bitmaps = pack_database(db, prof.n_dense_items)
+    min_support = int(prof.support * len(db))
+    print(f"synthetic 'chess' profile: {len(db)} transactions, "
+          f"{prof.n_dense_items} items, min_support={min_support}")
+
+    ref = mine_serial(bitmaps, min_support, max_k=4)
+    print(f"serial Apriori: {len(ref)} frequent itemsets\n")
+
+    for policy in ("cilk", "clustered"):
+        res, met = mine(bitmaps, min_support, policy=policy,
+                        n_workers=4, max_k=4)
+        assert res == ref
+        s = met.scheduler
+        print(f"[{policy:9s}] wall={met.wall_s:6.2f}s  "
+              f"prefix-cache hit rate={met.cache_hit_rate:6.1%}  "
+              f"steals={int(s['steals']):5d}  "
+              f"tasks/steal={s['tasks_per_steal']:.2f}")
+
+    print("\nThe clustered policy runs tasks that share a (k-1)-prefix "
+          "back-to-back\non one worker, so the prefix intersection is "
+          "computed once and reused —\nthe paper's dTLB/IPC win, "
+          "observable here as the cache-hit-rate gap.")
+
+
+if __name__ == "__main__":
+    main()

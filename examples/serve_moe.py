@@ -1,0 +1,59 @@
+"""Serve a small MoE model with batched requests: prefill + decode with
+a KV cache, clustered expert dispatch.
+
+Run:  PYTHONPATH=src python examples/serve_moe.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_smoke_config
+from repro.models.registry import build_model
+
+
+def main():
+    cfg = get_smoke_config("dbrx-132b").with_(
+        d_model=128, n_heads=8, n_kv_heads=4, vocab_size=2048,
+        n_layers=4, moe=MoEConfig(n_experts=8, top_k=2))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    batch, prompt_len, gen_len = 8, 24, 24
+    max_len = prompt_len + gen_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (batch, prompt_len), 0, cfg.vocab_size)
+
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    cache = model.init_cache(batch, max_len)
+
+    t0 = time.time()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, prompts[:, i:i + 1],
+                               jnp.int32(i))
+    print(f"prefill {batch}x{prompt_len}: {(time.time()-t0)*1e3:.0f} ms")
+
+    outs = []
+    t0 = time.time()
+    for i in range(gen_len):
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        outs.append(np.asarray(tok))
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + i))
+    dt = time.time() - t0
+    print(f"decode  {batch}x{gen_len}: {dt*1e3:.0f} ms "
+          f"({batch*gen_len/dt:.0f} tok/s)")
+    gen = np.concatenate(outs, axis=1)
+    print("request 0 generated ids:", gen[0].tolist())
+    # consistency: greedy decode must be deterministic
+    assert gen.shape == (batch, gen_len)
+
+
+if __name__ == "__main__":
+    main()

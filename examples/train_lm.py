@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred
+steps with checkpointing + fault injection + recovery.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(~100M params; pass --tiny for a CI-speed run.)
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.data.lm_pipeline import make_batch_iter
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.runtime.fault import FaultInjector, run_with_recovery
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = ModelConfig(name="tiny", family="dense", n_layers=2,
+                          d_model=128, n_heads=4, n_kv_heads=4, d_ff=512,
+                          vocab_size=1024, tie_embeddings=True)
+        args.steps = min(args.steps, 60)
+    else:
+        # ~100M params: 12L x 768d (GPT-2-small-ish, swiglu)
+        cfg = ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                          d_model=768, n_heads=12, n_kv_heads=12,
+                          d_ff=2048, vocab_size=32768,
+                          tie_embeddings=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params; "
+          f"{args.steps} steps @ {args.batch}x{args.seq}")
+
+    ocfg = OptimizerConfig(lr=6e-4, warmup_steps=args.steps // 10,
+                           total_steps=args.steps)
+    opt_state = adamw.init(params)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        upd, opt_state, metrics = adamw.update(ocfg, grads, opt_state,
+                                               params)
+        return (adamw.apply_updates(params, upd), opt_state,
+                dict(metrics, loss=loss))
+
+    batch_iter = make_batch_iter(cfg.vocab_size, args.batch, args.seq)
+    losses = []
+
+    def on_metrics(step, m):
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"  step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(m['lr']):.2e}", flush=True)
+
+    # inject a fault at 40% of the run to demo checkpoint recovery
+    inj = FaultInjector(fail_at=[int(args.steps * 0.4)])
+    (params, opt_state), report = run_with_recovery(
+        step_fn=train_step, init_state=(params, opt_state),
+        batch_iter=batch_iter, n_steps=args.steps,
+        ckpt_dir="results/example_ckpt", ckpt_every=25,
+        fault_injector=inj, on_metrics=on_metrics)
+
+    print(f"\nrecovered from {report.restarts} injected fault(s); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Config system: model / shape / mesh / run configs.
+
+Every assigned architecture gets a module in this package exposing
+``CONFIG`` (the exact published dims) and ``smoke_config()`` (a reduced
+same-family config for CPU smoke tests). ``repro.configs.registry`` maps
+``--arch <id>`` to these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # 'clustered' = sorted/bucketed dispatch (paper-aligned);
+    # 'onehot'    = GShard one-hot einsum dispatch (unclustered baseline).
+    dispatch: str = "clustered"
+    router_dtype: str = "float32"
+    # token-group count for dispatch; 0 = auto (clustered: one group per
+    # DP shard so sort/scatter stay device-local; onehot: ~1024-token
+    # groups, the classic GShard grouping).
+    n_groups: int = 0
+    onehot_group: int = 1024
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    # A (negative real) init range
+    a_init_range: Tuple[float, float] = (1.0, 16.0)
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: Mamba2 backbone + a single *shared* attention block
+    applied every ``attn_every`` backbone layers."""
+    attn_every: int = 6
+    shared_attn: bool = True
+    # sliding window used for the shared attn block at long context
+    long_ctx_window: int = 4096
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 4
+    n_frames: int = 1500        # whisper 30s @ 50Hz after conv stub
+    frontend: str = "stub"      # precomputed frame embeddings via input_specs()
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"       # rmsnorm | layernorm | nonparametric_ln
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    act: str = "silu"           # silu (swiglu) | gelu (plain mlp)
+    glu: bool = True            # gated FFN
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "full"         # none | dots | full
+    scan_layers: bool = True
+    # attention memory policy: blockwise (online-softmax lax.scan) above this
+    # many query tokens; keeps prefill_32k within HBM without Pallas on CPU.
+    attn_block_q: int = 1024
+    attn_blockwise_threshold: int = 8192
+    use_pallas: bool = False    # TPU target: flash-attention kernel path
+    # f32 attention logits/softmax (default). False = bf16 softmax: halves
+    # the S^2 HBM traffic on the jnp path (the Pallas flash kernel removes
+    # it entirely on TPU) — EXPERIMENTS.md §Perf hillclimb A.
+    attn_softmax_f32: bool = True
+    # KV-cache dtype for decode: bfloat16 | int8 (per-(pos,head) scales;
+    # halves decode HBM traffic — EXPERIMENTS.md §Perf extensions)
+    kv_cache_dtype: str = "bfloat16"
+    # long-context: subquadratic families only (ssm/hybrid) may run long_500k
+    subquadratic: bool = False
+
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- analytical parameter counts (for MODEL_FLOPS = 6*N*D) ----
+    def param_count(self) -> int:
+        """Total parameters (analytical)."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: top_k of n_experts)."""
+        return _param_count(self, active_only=True)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    n = 0
+    # embeddings (counted once; lm head tied or not)
+    n += cfg.vocab_size * d
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * d
+
+    def attn_params() -> int:
+        p = d * cfg.n_heads * hd            # q
+        p += 2 * d * cfg.n_kv_heads * hd    # k, v
+        p += cfg.n_heads * hd * d           # o
+        if cfg.qkv_bias:
+            p += (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+        return p
+
+    def ffn_params(dff: int) -> int:
+        mult = 3 if cfg.glu else 2
+        return mult * d * dff
+
+    def norm_params() -> int:
+        if cfg.norm == "nonparametric_ln":
+            return 0
+        return d if cfg.norm == "rmsnorm" else 2 * d
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer = attn_params() + ffn_params(cfg.d_ff) + 2 * norm_params()
+        n += cfg.n_layers * per_layer
+    elif cfg.family == "moe":
+        m = cfg.moe
+        e = m.top_k if active_only else m.n_experts
+        per_layer = (attn_params() + e * ffn_params(cfg.d_ff)
+                     + d * m.n_experts        # router
+                     + 2 * norm_params())
+        n += cfg.n_layers * per_layer
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * d
+        nheads = d_in // s.headdim
+        per_layer = (d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)  # in_proj
+                     + s.d_conv * (d_in + 2 * s.n_groups * s.d_state)      # conv
+                     + nheads * 2                                          # A, dt_bias
+                     + d_in                                                # D skip + norm
+                     + d_in * d                                            # out_proj
+                     + norm_params())
+        n += cfg.n_layers * per_layer
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * d
+        nheads = d_in // s.headdim
+        mamba_layer = (d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+                       + s.d_conv * (d_in + 2 * s.n_groups * s.d_state)
+                       + nheads * 2 + d_in + d_in * d + norm_params())
+        n += cfg.n_layers * mamba_layer
+        # one shared attn+ffn block (params counted once; reused)
+        n += attn_params() + ffn_params(cfg.d_ff) + 2 * norm_params()
+    elif cfg.family == "audio":
+        ed = cfg.encdec
+        enc_layer = attn_params() + ffn_params(cfg.d_ff) + 2 * norm_params()
+        dec_layer = 2 * attn_params() + ffn_params(cfg.d_ff) + 3 * norm_params()
+        n += ed.encoder_layers * enc_layer + cfg.n_layers * dec_layer
+    else:
+        raise ValueError(cfg.family)
+    return n
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524288, 1,   "decode"),
+}
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    zero: bool = True            # shard optimizer state over DP axes
+    compress_grads: bool = False # int8 error-feedback all-reduce
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+    # sharding rule-set name (see repro.parallel.sharding.RULESETS)
+    sharding_rules: str = "default"
+    microbatches: int = 1        # >1 enables grad accumulation
+    pipeline_stages: int = 1     # >1 enables pipeline parallelism
+
+
+def smoke_shape(kind: str = "train") -> ShapeConfig:
+    if kind == "train":
+        return ShapeConfig("smoke_train", 128, 4, "train")
+    if kind == "prefill":
+        return ShapeConfig("smoke_prefill", 256, 2, "prefill")
+    return ShapeConfig("smoke_decode", 256, 2, "decode")

@@ -1,0 +1,25 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion, VQ image tokens (image tokens share the text
+vocab; the VQ tokenizer frontend is a stub: input_specs() supplies token
+ids, which is exactly chameleon's early-fusion interface).
+[arXiv:2405.09818; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    norm="rmsnorm",
+    qkv_bias=False,
+    rope_theta=10000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                        d_ff=96, vocab_size=512)

@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig.
+
+Cells: every arch × its applicable shapes. ``long_500k`` only for
+subquadratic families (ssm/hybrid); decode shapes skipped for
+encoder-only archs (none assigned here — whisper is enc-dec and decodes).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.configs import (chameleon_34b, dbrx_132b, glm4_9b, mamba2_1_3b,
+                           olmo_1b, qwen2_5_14b, qwen3_moe_235b, stablelm_3b,
+                           whisper_tiny, zamba2_1_2b)
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+_MODULES = {
+    "dbrx-132b": dbrx_132b,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b,
+    "mamba2-1.3b": mamba2_1_3b,
+    "olmo-1b": olmo_1b,
+    "stablelm-3b": stablelm_3b,
+    "qwen2.5-14b": qwen2_5_14b,
+    "glm4-9b": glm4_9b,
+    "zamba2-1.2b": zamba2_1_2b,
+    "chameleon-34b": chameleon_34b,
+    "whisper-tiny": whisper_tiny,
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
+    """The assigned shape cells for one architecture."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue  # full-attention archs skip 500k decode (DESIGN.md §4)
+        out.append(s)
+    return out
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """All (arch, shape) dry-run cells."""
+    cells = []
+    for arch in ARCH_IDS:
+        for s in applicable_shapes(get_config(arch)):
+            cells.append((arch, s.name))
+    return cells

@@ -1,0 +1,27 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 —
+encoder-decoder; conv frontend is a STUB (input_specs() provides precomputed
+frame embeddings [B, n_frames, d_model]). [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig, EncDecConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                 # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    norm="layernorm",
+    glu=False,
+    act="gelu",
+    rope_theta=0.0,             # whisper uses learned/sinusoidal positions
+    encdec=EncDecConfig(encoder_layers=4, n_frames=1500, frontend="stub"),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256, encdec=EncDecConfig(encoder_layers=2, n_frames=50),
+    )

@@ -1,0 +1,28 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]"""
+from repro.configs.base import ModelConfig, SSMConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    norm="rmsnorm",
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, headdim=64, chunk=256),
+    hybrid=HybridConfig(attn_every=6, shared_attn=True, long_ctx_window=4096),
+    subquadratic=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.with_(
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=256,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, headdim=16, chunk=32),
+        hybrid=HybridConfig(attn_every=2, shared_attn=True, long_ctx_window=64),
+    )

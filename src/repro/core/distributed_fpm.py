@@ -1,0 +1,243 @@
+"""Distributed (multi-device) Apriori under shard_map — the paper's
+clustered scheduling transposed to a TPU mesh (DESIGN.md §3, layer 2).
+
+Level-synchronous mining. Item TID-bitmaps are sharded over devices
+(owner = item % n_devices). Candidates for level k are partitioned into
+per-device work lists under one of two assignment policies:
+
+  clustered    whole prefix-buckets are placed together (owner = the
+               bucket's first item's owner, with cluster-granularity
+               rebalancing — the paper's bucket steal). The device
+               computes each bucket's (k-1)-prefix intersection ONCE and
+               sweeps the bucket's extensions against it while the prefix
+               stays register/VMEM-resident (the bitmap_join kernel's
+               tiling on TPU). Per-candidate HBM traffic: ~1 bitmap row.
+  round_robin  the Cilk-style analogue: candidates scattered with no
+               locality; every candidate performs its full k-way join
+               (prefix recomputed per task). Per-candidate HBM traffic:
+               ~k bitmap rows + no reuse across neighbours.
+
+Both policies return identical supports. The locality difference shows up
+in (a) rows-touched stats here, (b) HLO FLOPs/bytes of the per-level
+kernel in the dry-run (benchmarks/fpm_distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.itemsets import Itemset, gen_candidates, prefix_hash
+from repro.core import tidlist
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusteredPlan:
+    prefixes: np.ndarray     # [n_dev, max_b, k-1] int32, -1 padded
+    exts: np.ndarray         # [n_dev, max_b, max_e] int32, -1 padded
+    order: List[List[Itemset]]   # per-device candidate order (b-major)
+    rows_touched: int = 0
+
+
+@dataclasses.dataclass
+class RoundRobinPlan:
+    cand_items: np.ndarray   # [n_dev, max_c, k] int32, -1 padded
+    order: List[List[Itemset]]
+    rows_touched: int = 0
+
+
+def plan_clustered(cands: Sequence[Itemset], n_dev: int,
+                   items_per_dev: int = 0) -> ClusteredPlan:
+    buckets: Dict[Tuple[int, Itemset], List[int]] = {}
+    for c in cands:
+        buckets.setdefault((prefix_hash(c), c[:-1]), []).append(c[-1])
+    loads = np.zeros(n_dev, np.int64)
+    per_dev: List[List[Tuple[Itemset, List[int]]]] = [[] for _ in
+                                                      range(n_dev)]
+    for (h, pref), ext in sorted(buckets.items(),
+                                 key=lambda kv: (-len(kv[1]), kv[0][0])):
+        owner = (min(pref[0] // items_per_dev, n_dev - 1)
+                 if items_per_dev else pref[0] % n_dev)
+        tgt = int(np.argmin(loads))
+        if loads[owner] > 2 * loads[tgt] + len(ext):
+            owner = tgt                       # steal the whole bucket
+        per_dev[owner].append((pref, sorted(ext)))
+        loads[owner] += len(ext)
+    k = len(cands[0])
+    max_b = max(1, max(len(v) for v in per_dev))
+    max_e = max(1, max((len(e) for v in per_dev for _, e in v), default=1))
+    prefixes = np.full((n_dev, max_b, k - 1), -1, np.int32)
+    exts = np.full((n_dev, max_b, max_e), -1, np.int32)
+    order: List[List[Itemset]] = [[] for _ in range(n_dev)]
+    rows = 0
+    for d, lst in enumerate(per_dev):
+        for b, (pref, ext) in enumerate(lst):
+            prefixes[d, b] = pref
+            exts[d, b, :len(ext)] = ext
+            order[d].extend(pref + (e,) for e in ext)
+            rows += (k - 1) + len(ext)
+    return ClusteredPlan(prefixes, exts, order, rows)
+
+
+def plan_round_robin(cands: Sequence[Itemset], n_dev: int) -> RoundRobinPlan:
+    per_dev: List[List[Itemset]] = [[] for _ in range(n_dev)]
+    for i, c in enumerate(cands):
+        per_dev[i % n_dev].append(c)
+    k = len(cands[0])
+    max_c = max(1, max(len(v) for v in per_dev))
+    arr = np.full((n_dev, max_c, k), -1, np.int32)
+    for d, lst in enumerate(per_dev):
+        for j, c in enumerate(lst):
+            arr[d, j] = c
+    rows = sum(k * len(lst) for lst in per_dev)
+    return RoundRobinPlan(arr, per_dev, rows)
+
+
+# ---------------------------------------------------------------------------
+# Per-device kernels (shard_map bodies)
+# ---------------------------------------------------------------------------
+
+
+def _kernel_clustered(bitmaps_local, prefixes, exts, axis_name: str,
+                      k: int):
+    """prefixes: [max_b, k-1]; exts: [max_b, max_e] -> counts [max_b*max_e].
+
+    One prefix join per bucket; extensions swept against the resident
+    prefix (vmapped bitmap_join shape)."""
+    full = jax.lax.all_gather(bitmaps_local, axis_name, axis=0, tiled=True)
+
+    def bucket(pref, ext):
+        rows = full[jnp.maximum(pref, 0)]          # [k-1, W]
+        pbm = rows[0]
+        for j in range(1, k - 1):
+            pbm = jnp.bitwise_and(pbm, rows[j])    # prefix AND — once
+        erows = full[jnp.maximum(ext, 0)]          # [max_e, W]
+        joined = jnp.bitwise_and(erows, pbm[None, :])
+        cnt = jax.lax.population_count(joined).astype(jnp.int32).sum(-1)
+        return jnp.where((ext >= 0) & (pref[0] >= 0), cnt, -1)
+
+    counts = jax.vmap(bucket)(prefixes, exts)      # [max_b, max_e]
+    return counts.reshape(-1)
+
+
+def _kernel_round_robin(bitmaps_local, cand_items, axis_name: str, k: int):
+    """cand_items: [max_c, k] -> counts [max_c]; full k-way join each."""
+    full = jax.lax.all_gather(bitmaps_local, axis_name, axis=0, tiled=True)
+    rows = full[jnp.maximum(cand_items, 0)]        # [max_c, k, W]
+    joined = rows[:, 0]
+    for j in range(1, k):
+        joined = jnp.bitwise_and(joined, rows[:, j])
+    counts = jax.lax.population_count(joined).astype(jnp.int32).sum(-1)
+    return jnp.where(cand_items[:, 0] >= 0, counts, -1)
+
+
+def shard_bitmaps(bitmaps: np.ndarray, n_dev: int) -> np.ndarray:
+    """Contiguous-block owner layout: item i lives on device
+    i // items_per_dev, so a tiled all_gather restores item order."""
+    n_items, w = bitmaps.shape
+    pad = (-n_items) % n_dev
+    return np.pad(bitmaps, ((0, pad), (0, 0)))   # [I_padded, W]
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def mine_distributed(bitmaps: np.ndarray, min_support: int, mesh: Mesh,
+                     *, policy: str = "clustered", max_k: int = 6,
+                     axis_name: Optional[str] = None
+                     ) -> Tuple[Dict[Itemset, int], Dict[str, int]]:
+    """Level-synchronous distributed Apriori. Returns (supports, stats)."""
+    axis_name = axis_name or mesh.axis_names[0]
+    n_dev = mesh.shape[axis_name]
+    n_items = bitmaps.shape[0]
+    sharded = shard_bitmaps(bitmaps, n_dev)      # [I_padded, W]
+    items_per_dev = sharded.shape[0] // n_dev
+    bm_dev = jax.device_put(jnp.asarray(sharded),
+                            NamedSharding(mesh, P(axis_name)))
+
+    supports = tidlist.popcount32(bitmaps).sum(axis=1)
+    result: Dict[Itemset, int] = {
+        (i,): int(supports[i]) for i in range(n_items)
+        if supports[i] >= min_support}
+    frequent = sorted(result)
+    stats = {"levels": 0, "candidates": 0, "rows_touched": 0}
+
+    k = 2
+    while frequent and k <= max_k:
+        cands = gen_candidates(frequent)
+        if not cands:
+            break
+        stats["levels"] += 1
+        stats["candidates"] += len(cands)
+
+        if policy == "clustered":
+            plan = plan_clustered(cands, n_dev, items_per_dev)
+            fn = shard_map(
+                functools.partial(_kernel_clustered, axis_name=axis_name,
+                                  k=k),
+                mesh=mesh,
+                in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+                out_specs=P(axis_name))
+            counts = np.asarray(jax.jit(fn)(
+                bm_dev,
+                jax.device_put(jnp.asarray(plan.prefixes.reshape(
+                    -1, plan.prefixes.shape[2])),
+                    NamedSharding(mesh, P(axis_name))),
+                jax.device_put(jnp.asarray(plan.exts.reshape(
+                    -1, plan.exts.shape[2])),
+                    NamedSharding(mesh, P(axis_name)))))
+            counts = counts.reshape(n_dev, -1)
+        elif policy == "round_robin":
+            plan = plan_round_robin(cands, n_dev)
+            fn = shard_map(
+                functools.partial(_kernel_round_robin,
+                                  axis_name=axis_name, k=k),
+                mesh=mesh,
+                in_specs=(P(axis_name), P(axis_name)),
+                out_specs=P(axis_name))
+            counts = np.asarray(jax.jit(fn)(
+                bm_dev,
+                jax.device_put(jnp.asarray(plan.cand_items.reshape(
+                    -1, plan.cand_items.shape[2])),
+                    NamedSharding(mesh, P(axis_name)))))
+            counts = counts.reshape(n_dev, -1)
+        else:
+            raise ValueError(policy)
+        stats["rows_touched"] += plan.rows_touched
+
+        frequent = []
+        for d in range(n_dev):
+            dev_counts = counts[d]
+            if policy == "clustered":
+                # counts are bucket-major with -1 padding; valid entries
+                # appear in exactly the order the planner emitted order[d]
+                it = iter(plan.order[d])
+                for v in dev_counts:
+                    if v < 0:
+                        continue
+                    c = next(it)
+                    if v >= min_support:
+                        result[c] = int(v)
+                        frequent.append(c)
+            else:
+                for j, c in enumerate(plan.order[d]):
+                    v = int(dev_counts[j])
+                    if v >= min_support:
+                        result[c] = v
+                        frequent.append(c)
+        frequent.sort()
+        k += 1
+    return result, stats

@@ -1,0 +1,330 @@
+"""PFunc analogue: a task-parallel runtime with *pluggable scheduling
+policies* and *task attributes* (Sections 3-4 of the paper).
+
+- ``Task`` carries an attribute (``attr``) — the paper's "task priority",
+  which for FPM is a reference to the k-itemset being mined.
+- A *policy* owns the per-worker queue structure and steal semantics:
+    CilkPolicy      — per-worker LIFO deque, steal ONE task from the
+                      opposite end of a random victim (Cilk-style work
+                      stealing [Blumofe & Leiserson]).
+    FifoPolicy      — per-worker FIFO deque, steal one.
+    ClusteredPolicy — per-worker *hash table of buckets* keyed by the
+                      task attribute's cluster hash; workers drain one
+                      bucket at a time; steals take an ENTIRE bucket
+                      (the paper's contribution).
+- Worker threads release the GIL inside task bodies (numpy/jax compute),
+  so wall-clock speedups are real on this container.
+
+Hardware counters (PAPI in the paper) are replaced by scheduler-level
+locality metrics: per-worker steal counts, tasks-per-steal, and bucket
+switches; the FPM driver adds a prefix-intersection cache whose hit rate
+is the direct analogue of the paper's dTLB locality (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import collections
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class Task:
+    fn: Callable[..., Any]
+    args: Tuple
+    attr: Any = None          # task attribute (paper: the itemset ref)
+    result: Any = None
+
+
+@dataclass
+class WorkerStats:
+    tasks_run: int = 0
+    steals: int = 0           # successful steal operations
+    tasks_stolen: int = 0     # tasks acquired via steals
+    steal_attempts: int = 0   # victim probes (incl. empty)
+    bucket_switches: int = 0  # clustered: times the drain bucket changed
+
+
+class SchedulingPolicy:
+    """The scheduler 'concept' (paper §3): queue structure + steal rule."""
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self.locks = [threading.Lock() for _ in range(n_workers)]
+
+    def put(self, worker: int, task: Task) -> None:
+        raise NotImplementedError
+
+    def get(self, worker: int) -> Optional[Task]:
+        raise NotImplementedError
+
+    def steal(self, thief: int, victim: int) -> List[Task]:
+        raise NotImplementedError
+
+    def approx_len(self, worker: int) -> int:
+        raise NotImplementedError
+
+
+class CilkPolicy(SchedulingPolicy):
+    """LIFO deque per worker; steal one task from the other end."""
+
+    def __init__(self, n_workers: int):
+        super().__init__(n_workers)
+        self.queues: List[collections.deque] = [collections.deque()
+                                                for _ in range(n_workers)]
+
+    def put(self, worker, task):
+        with self.locks[worker]:
+            self.queues[worker].append(task)
+
+    def get(self, worker):
+        with self.locks[worker]:
+            q = self.queues[worker]
+            return q.pop() if q else None       # LIFO (depth-first)
+
+    def steal(self, thief, victim):
+        with self.locks[victim]:
+            q = self.queues[victim]
+            return [q.popleft()] if q else []   # breadth end, one task
+
+    def approx_len(self, worker):
+        return len(self.queues[worker])
+
+
+class FifoPolicy(CilkPolicy):
+    def get(self, worker):
+        with self.locks[worker]:
+            q = self.queues[worker]
+            return q.popleft() if q else None
+
+
+class ClusteredPolicy(SchedulingPolicy):
+    """Paper §4: hash-table-of-buckets queues; bucket-granularity steals.
+
+    ``cluster_of(attr)`` maps a task attribute to its bucket key (for FPM:
+    XOR of item hashes over the (k-1)-prefix).
+    """
+
+    def __init__(self, n_workers: int,
+                 cluster_of: Callable[[Any], int] = hash):
+        super().__init__(n_workers)
+        self.cluster_of = cluster_of
+        self.tables: List[Dict[int, collections.deque]] = [
+            dict() for _ in range(n_workers)]
+        self._drain: List[Optional[int]] = [None] * n_workers
+        self.sizes = [0] * n_workers
+
+    def put(self, worker, task):
+        key = self.cluster_of(task.attr)
+        with self.locks[worker]:
+            self.tables[worker].setdefault(key, collections.deque()
+                                           ).append(task)
+            self.sizes[worker] += 1
+
+    def get(self, worker):
+        with self.locks[worker]:
+            tab = self.tables[worker]
+            if not tab:
+                return None
+            key = self._drain[worker]
+            if key is None or key not in tab:
+                # move to the first non-empty bucket (paper: iterate
+                # buckets from the first non-empty one)
+                key = next(iter(tab))
+                self._drain[worker] = key
+            q = tab[key]
+            task = q.popleft()
+            if not q:
+                del tab[key]
+                self._drain[worker] = None
+            self.sizes[worker] -= 1
+            return task
+
+    def steal(self, thief, victim):
+        with self.locks[victim]:
+            tab = self.tables[victim]
+            for key in list(tab):
+                if key == self._drain[victim]:
+                    continue                    # don't yank the hot bucket
+                q = tab.pop(key)
+                self.sizes[victim] -= len(q)
+                return list(q)                  # the WHOLE bucket
+            # only the drain bucket remains: take it anyway
+            for key in list(tab):
+                q = tab.pop(key)
+                self.sizes[victim] -= len(q)
+                self._drain[victim] = None
+                return list(q)
+            return []
+
+    def approx_len(self, worker):
+        return self.sizes[worker]
+
+
+class NearestNeighborPolicy(ClusteredPolicy):
+    """The paper's FUTURE-WORK proposal (§6), implemented: a dynamic
+    policy where a thread picks the bucket *nearest* to the task it just
+    executed (here: largest item overlap between bucket keys, which are
+    the prefix tuples themselves). Pairs with the hierarchical prefix
+    cache in repro.core.fpm — neighbouring buckets share sub-prefixes, so
+    partial intersections get reused across buckets, not only within one.
+    """
+
+    SCAN_CAP = 64   # bound the nearest-neighbour scan per switch
+
+    def __init__(self, n_workers: int,
+                 cluster_of: Callable[[Any], Any] = lambda a: a):
+        super().__init__(n_workers, cluster_of)
+        self._last: List[Optional[tuple]] = [None] * n_workers
+
+    def get(self, worker):
+        with self.locks[worker]:
+            tab = self.tables[worker]
+            if not tab:
+                return None
+            key = self._drain[worker]
+            if key is None or key not in tab:
+                last = self._last[worker]
+                if last is None:
+                    key = next(iter(tab))
+                else:
+                    best, best_ov = None, -1
+                    for i, cand in enumerate(tab):
+                        if i >= self.SCAN_CAP:
+                            break
+                        ov = len(set(cand) & set(last)) \
+                            if isinstance(cand, tuple) else 0
+                        if ov > best_ov:
+                            best, best_ov = cand, ov
+                    key = best
+                self._drain[worker] = key
+            q = tab[key]
+            task = q.popleft()
+            if not q:
+                del tab[key]
+                self._drain[worker] = None
+            if isinstance(key, tuple):
+                self._last[worker] = key
+            self.sizes[worker] -= 1
+            return task
+
+
+class TaskScheduler:
+    """Spawn tasks, run them on N worker threads under a policy, wait."""
+
+    def __init__(self, n_workers: int, policy: SchedulingPolicy,
+                 seed: int = 0):
+        self.n = n_workers
+        self.policy = policy
+        self.stats = [WorkerStats() for _ in range(n_workers)]
+        self._outstanding = 0
+        self._cv = threading.Condition()
+        self._stop = False
+        self._rngs = [random.Random(seed + i) for i in range(n_workers)]
+        self._spawn_rr = 0
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True)
+            for i in range(n_workers)]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ spawn --
+    def spawn(self, fn, *args, attr=None, worker: Optional[int] = None):
+        """Enqueue a task. Default placement is round-robin (the paper's
+        runtime places on the spawning thread; the driver here is a single
+        host thread, so round-robin approximates even initial placement —
+        for ClusteredPolicy the bucket hash decides affinity instead)."""
+        task = Task(fn, args, attr)
+        if worker is None:
+            if isinstance(self.policy, ClusteredPolicy):
+                worker = hash(self.policy.cluster_of(attr)) % self.n
+            else:
+                worker = self._spawn_rr = (self._spawn_rr + 1) % self.n
+        with self._cv:
+            self._outstanding += 1
+        self.policy.put(worker, task)
+        with self._cv:
+            self._cv.notify_all()
+        return task
+
+    def wait_all(self):
+        with self._cv:
+            self._cv.wait_for(lambda: self._outstanding == 0)
+
+    def shutdown(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    # ----------------------------------------------------------- worker --
+    def _acquire(self, i: int) -> Optional[Task]:
+        task = self.policy.get(i)
+        if task is not None:
+            return task
+        st = self.stats[i]
+        rng = self._rngs[i]
+        for _ in range(4 * self.n):
+            victim = rng.randrange(self.n)
+            if victim == i:
+                continue
+            st.steal_attempts += 1
+            got = self.policy.steal(i, victim)
+            if got:
+                st.steals += 1
+                st.tasks_stolen += len(got)
+                for t in got[1:]:
+                    self.policy.put(i, t)
+                return got[0]
+        return None
+
+    def _worker(self, i: int):
+        st = self.stats[i]
+        while True:
+            task = self._acquire(i)
+            if task is None:
+                with self._cv:
+                    if self._stop:
+                        return
+                    if self._outstanding == 0:
+                        self._cv.wait(timeout=0.01)
+                        continue
+                time.sleep(0.0002)
+                continue
+            task.result = task.fn(*task.args)
+            st.tasks_run += 1
+            with self._cv:
+                self._outstanding -= 1
+                if self._outstanding == 0:
+                    self._cv.notify_all()
+
+    # ------------------------------------------------------------ stats --
+    def merged_stats(self) -> Dict[str, float]:
+        s = self.stats
+        total = sum(w.tasks_run for w in s)
+        steals = sum(w.steals for w in s)
+        return {
+            "tasks_run": total,
+            "steals": steals,
+            "tasks_stolen": sum(w.tasks_stolen for w in s),
+            "steal_attempts": sum(w.steal_attempts for w in s),
+            "tasks_per_steal": (sum(w.tasks_stolen for w in s)
+                                / max(steals, 1)),
+        }
+
+
+def make_policy(name: str, n_workers: int,
+                cluster_of: Callable[[Any], Any] = hash
+                ) -> SchedulingPolicy:
+    if name == "cilk":
+        return CilkPolicy(n_workers)
+    if name == "fifo":
+        return FifoPolicy(n_workers)
+    if name == "clustered":
+        return ClusteredPolicy(n_workers, cluster_of)
+    if name == "nn":
+        return NearestNeighborPolicy(n_workers, cluster_of)
+    raise ValueError(name)

@@ -1,0 +1,81 @@
+"""Transaction-ID (TID) bitmap machinery.
+
+The paper's per-task computation is a TID-list join: support(itemset) =
+|∩_{i∈itemset} tidlist(i)|. On TPU (and for GIL-released numpy in the
+shared-memory scheduler) TID lists are packed uint32 bitmaps: the join is
+AND + popcount — VPU work that the Pallas ``bitmap_join`` kernel tiles so
+the shared *prefix* bitmap stays VMEM-resident (the paper's cache reuse,
+re-expressed; DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+WORD = 32
+
+
+def n_words(n_transactions: int) -> int:
+    return (n_transactions + WORD - 1) // WORD
+
+
+def pack_database(db: Sequence[Sequence[int]], n_items: int) -> np.ndarray:
+    """db: list of transactions (item id lists) -> [n_items, W] uint32."""
+    m = len(db)
+    w = n_words(m)
+    bits = np.zeros((n_items, m), dtype=bool)
+    for t, txn in enumerate(db):
+        for i in txn:
+            bits[i, t] = True
+    return pack_bool(bits)
+
+
+def pack_bool(bits: np.ndarray) -> np.ndarray:
+    """[I, T] bool -> [I, W] uint32 (little-endian bit order per word)."""
+    i, t = bits.shape
+    w = n_words(t)
+    padded = np.zeros((i, w * WORD), dtype=bool)
+    padded[:, :t] = bits
+    packed = np.packbits(padded.reshape(i, w, WORD)[:, :, ::-1], axis=-1)
+    return packed.view(">u4").astype(np.uint32).reshape(i, w)
+
+
+def unpack_bool(packed: np.ndarray, n_transactions: int) -> np.ndarray:
+    """[I, W] uint32 -> [I, T] bool."""
+    i, w = packed.shape
+    be = packed.astype(">u4")
+    by = be.view(np.uint8).reshape(i, w, 4)
+    bits = np.unpackbits(by, axis=-1).reshape(i, w * WORD).astype(bool)
+    # restore per-word little-endian bit order
+    bits = bits.reshape(i, w, WORD)[:, :, ::-1].reshape(i, w * WORD)
+    return bits[:, :n_transactions]
+
+
+def popcount32(x: np.ndarray) -> np.ndarray:
+    """Vectorized popcount for uint32 arrays (numpy, GIL-released)."""
+    if hasattr(np, "bitwise_count"):          # numpy >= 2.0: one ufunc pass
+        return np.bitwise_count(x).astype(np.int64)
+    x = x.astype(np.uint32)
+    x = x - ((x >> 1) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
+    x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((x * np.uint32(0x01010101)) >> 24).astype(np.int64)
+
+
+def intersect(bitmaps: np.ndarray) -> np.ndarray:
+    """AND-reduce [k, W] -> [W]."""
+    out = bitmaps[0].copy()
+    for b in bitmaps[1:]:
+        out &= b
+    return out
+
+
+def support_of(bitmap_rows: np.ndarray) -> int:
+    """|∩ rows| for a [k, W] stack of bitmaps."""
+    return int(popcount32(intersect(bitmap_rows)).sum())
+
+
+def support_counts(prefix: np.ndarray, exts: np.ndarray) -> np.ndarray:
+    """counts[e] = |prefix ∩ exts[e]|. prefix: [W]; exts: [E, W]."""
+    return popcount32(exts & prefix[None, :]).sum(axis=1)

@@ -1,0 +1,1 @@
+from repro.kernels.bitmap_join.ops import bitmap_join  # noqa: F401

@@ -1,0 +1,22 @@
+"""jit'd public wrapper: Pallas on TPU, interpret-mode or jnp on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_join.kernel import bitmap_join_kernel
+from repro.kernels.bitmap_join.ref import bitmap_join_ref
+
+
+def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
+                *, use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Support counts of prefix∧ext for a cluster of extension bitmaps."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if not use_pallas:
+        return jax.jit(bitmap_join_ref)(prefix, exts)
+    return bitmap_join_kernel(prefix, exts,
+                              interpret=bool(interpret if interpret
+                                             is not None else not on_tpu))

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the bitmap_join kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_join_ref(prefix: jnp.ndarray, exts: jnp.ndarray) -> jnp.ndarray:
+    """prefix: [W] uint32; exts: [E, W] uint32 -> counts [E] int32."""
+    joined = jnp.bitwise_and(exts, prefix[None, :])
+    return jnp.sum(jax.lax.population_count(joined).astype(jnp.int32),
+                   axis=1)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Grid (batch*heads, q_blocks, kv_blocks) with the kv sweep innermost. The
+q tile, running max m, running denominator l, and the f32 accumulator
+live in VMEM scratch across the kv sweep; k/v tiles stream HBM→VMEM.
+The LM stack uses this on TPU for the 32k-prefill hot spot
+(cfg.use_pallas); the q-chunked jnp path in models/attention.py is the
+CPU/dry-run equivalent, and ref.py is the oracle both must match.
+
+Block sizes 128 (q) × 128 (kv): MXU-aligned; VMEM per step ≈
+q(128·D) + k,v(2·128·D) + acc(128·D f32) ≈ 256 KiB at D=128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLK = 128
+KV_BLK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [Qb, D]
+    k = k_ref[0]                                   # [Kb, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * Q_BLK + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (Q_BLK, KV_BLK), 0)
+        k_pos = ki * KV_BLK + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (Q_BLK, KV_BLK), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # [Qb, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                         # [Qb, Kb]
+    alpha = jnp.exp(m_prev - m_new)                # rescale old state
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "interpret"))
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [BH, S, D]; k, v: [BH, T, D] -> o: [BH, S, D].
+
+    S, T padded to block multiples; padded kv columns are masked out by
+    the causal mask (pad queries produce garbage rows that are sliced
+    off; with causal=False, pad kv is masked via an explicit length
+    check baked into the k-position iota when T % KV_BLK != 0 — callers
+    should pad-and-slice, which the ops wrapper does).
+    """
+    bh, s, d = q.shape
+    t = k.shape[1]
+    sp = (s + Q_BLK - 1) // Q_BLK * Q_BLK
+    tp = (t + KV_BLK - 1) // KV_BLK * KV_BLK
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0)))
+    if tp != t:
+        k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0)))
+    scale = 1.0 / math.sqrt(d)
+    grid = (bh, sp // Q_BLK, tp // KV_BLK)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q_BLK, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, KV_BLK, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, KV_BLK, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q_BLK, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Q_BLK, 1), jnp.float32),    # running max m
+            pltpu.VMEM((Q_BLK, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((Q_BLK, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

@@ -1,0 +1,1 @@
+from repro.kernels.masked_gram.ops import masked_gram  # noqa: F401

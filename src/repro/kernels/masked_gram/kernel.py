@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: masked Gram matrix — whole-cluster pair counting.
+
+C[i, j] = Σ_t A[i, t] · A[j, t] · m[t]
+
+A is a cluster's item-presence matrix in {0,1} bf16, m the (k-1)-prefix
+transaction mask: C[i, j] = support(prefix ∪ {i, j}) for ALL extension
+pairs at once. This is the beyond-paper TPU adaptation (DESIGN.md §3): the
+paper co-schedules a cluster's tasks for cache reuse; the MXU lets us fuse
+the entire cluster into ONE systolic matmul — the prefix mask is applied
+to a VMEM-resident tile and reused across the full j-sweep.
+
+Tiling: 128×128 output tiles, T streamed in 512-column steps; bf16
+multiplies, f32 accumulation — MXU-native shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I_TILE = 128
+T_TILE = 512
+
+
+def _kernel(a_ref, b_ref, m_ref, out_ref):
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[...]                                 # [It, Tt] bf16
+    b = b_ref[...]                                 # [Jt, Tt] bf16
+    m = m_ref[...]                                 # [1, Tt] bf16
+    am = a * m                                     # prefix mask fused once
+    out_ref[...] += jax.lax.dot_general(
+        am, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_gram_kernel(a: jnp.ndarray, mask: jnp.ndarray,
+                       *, interpret: bool = False) -> jnp.ndarray:
+    """a: [I, T] bf16 {0,1}; mask: [T] bf16 {0,1} -> C [I, I] f32."""
+    i, t = a.shape
+    ip = (i + I_TILE - 1) // I_TILE * I_TILE
+    tp = (t + T_TILE - 1) // T_TILE * T_TILE
+    if (ip, tp) != (i, t):
+        a = jnp.pad(a, ((0, ip - i), (0, tp - t)))
+        mask = jnp.pad(mask, (0, tp - t))
+    grid = (ip // I_TILE, ip // I_TILE, tp // T_TILE)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((I_TILE, T_TILE), lambda i, j, k: (i, k)),
+            pl.BlockSpec((I_TILE, T_TILE), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, T_TILE), lambda i, j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((I_TILE, I_TILE), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ip, ip), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.bfloat16), a.astype(jnp.bfloat16),
+      mask.astype(jnp.bfloat16)[None, :])
+    return out[:i, :i]

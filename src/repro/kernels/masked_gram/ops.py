@@ -1,0 +1,22 @@
+"""jit'd public wrapper for masked_gram."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_gram.kernel import masked_gram_kernel
+from repro.kernels.masked_gram.ref import masked_gram_ref
+
+
+def masked_gram(a: jnp.ndarray, mask: jnp.ndarray,
+                *, use_pallas: bool | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Pair supports for a whole cluster: C[i,j] = |prefix ∩ i ∩ j|."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_pallas is None:
+        use_pallas = on_tpu
+    if not use_pallas:
+        return jax.jit(masked_gram_ref)(a, mask)
+    return masked_gram_kernel(a, mask,
+                              interpret=bool(interpret if interpret
+                                             is not None else not on_tpu))

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the masked_gram kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_gram_ref(a: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """a: [I, T] {0,1}; mask: [T] {0,1} -> C [I, I] f32."""
+    a32 = a.astype(jnp.float32)
+    am = a32 * mask.astype(jnp.float32)[None, :]
+    return am @ a32.T

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+A FUNCTION (never a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — "
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    # more devices than the mesh needs (single-pod mesh in a 512-dev
+    # process): take the first pod's worth.
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (subprocess sets device count)."""
+    import jax
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)

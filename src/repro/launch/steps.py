@@ -1,0 +1,149 @@
+"""Step builders shared by train.py / serve.py / dryrun.py.
+
+Everything here is shape-driven: ``input_specs`` returns ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, no allocation) so the dry-run can
+lower + compile the production mesh without a single real buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, OptimizerConfig
+from repro.models.common import axes_tree, dtype_of
+from repro.models.registry import build_model
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.ctx import use_sharding_ctx
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs + shardings)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    model = build_model(cfg)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["batch"] = {"tokens": tok((b, s)), "labels": tok((b, s))}
+        if cfg.family == "audio":
+            out["batch"]["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.n_frames, cfg.d_model), dtype_of(cfg.dtype))
+    elif shape.kind == "prefill":
+        out["tokens"] = tok((b, s))
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encdec.n_frames, cfg.d_model), dtype_of(cfg.dtype))
+    elif shape.kind == "decode":
+        out["cache"] = model.cache_shapes(b, s)
+        out["tokens"] = tok((b, 1))
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        raise ValueError(shape.kind)
+    return out
+
+
+def _batch_shardings(cfg, shape, mesh, rules):
+    bspec = shd.spec_for((shape.global_batch, shape.seq_len),
+                         ("batch", "seq"), mesh, rules)
+    ns = NamedSharding(mesh, bspec)
+    out = {"tokens": ns, "labels": ns}
+    if cfg.family == "audio":
+        out["frames"] = NamedSharding(
+            mesh, shd.spec_for(
+                (shape.global_batch, cfg.encdec.n_frames, cfg.d_model),
+                ("batch", "frames", "act_embed"), mesh, rules))
+    return out
+
+
+def cache_shardings(model, b, s, mesh, rules):
+    defs = model.cache_defs(b, s)
+    from repro.models.common import shapes_tree
+    return shd.tree_shardings(shapes_tree(defs), axes_tree(defs), mesh,
+                              rules)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(model, mesh, rules):
+    return shd.tree_shardings(model.param_shapes(),
+                              axes_tree(model.param_defs()), mesh, rules)
+
+
+def build_train_step(cfg: ModelConfig, ocfg: OptimizerConfig, mesh, rules,
+                     microbatches: int = 1):
+    """Returns (train_step_fn, in_shardings, out_shardings, arg_shapes)."""
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        with use_sharding_ctx(mesh, rules):
+            return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc[0] + l, jax.tree.map(jnp.add, acc[1], g)), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(micro, zero, mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state, metrics = adamw.update(ocfg, grads, opt_state,
+                                                   params)
+        params = adamw.apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    psh = param_shardings(model, mesh, rules)
+    osh = adamw.AdamWState(step=NamedSharding(mesh, P()),
+                           mu=jax.tree.map(lambda s: s, psh),
+                           nu=jax.tree.map(lambda s: s, psh))
+    return model, train_step, psh, osh
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, rules):
+    model = build_model(cfg)
+
+    def prefill(params, tokens, frames=None):
+        with use_sharding_ctx(mesh, rules):
+            if cfg.family == "audio":
+                return model.prefill(params, tokens, frames)
+            return model.prefill(params, tokens)
+
+    return model, prefill, param_shardings(model, mesh, rules)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    model = build_model(cfg)
+    window = (model.window_for(shape.seq_len)
+              if hasattr(model, "window_for") else 0)
+
+    def serve_step(params, cache, tokens, pos):
+        with use_sharding_ctx(mesh, rules):
+            if window:
+                return model.decode_step(params, cache, tokens, pos,
+                                         window=window)
+            return model.decode_step(params, cache, tokens, pos)
+
+    return model, serve_step, param_shardings(model, mesh, rules)

@@ -1,0 +1,328 @@
+"""GQA attention: full / q-chunked (memory-efficient) / decode-with-cache.
+
+Design notes (TPU adaptation):
+- KV heads are expanded (repeated) to the query head count *after* the
+  cache: the cache stores the compact n_kv_heads layout (HBM win), while
+  the attention einsum runs over the expanded layout so that tensor
+  parallelism can shard the query-head axis even when n_kv_heads is not
+  divisible by the `model` mesh axis (KV replication under TP — the
+  standard Megatron GQA treatment).
+- Long prefills use a q-chunked lax.scan: one [Bq, S] logit block live at
+  a time, softmax over the full row (exact, no online rescaling needed).
+  On TPU the Pallas flash_attention kernel replaces this path
+  (cfg.use_pallas); both match the same oracle in tests.
+- Sliding-window masking supports the hybrid (Zamba2) long-context shared
+  attention block.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, apply_rope
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_defs(cfg, d: int) -> Dict[str, ParamDef]:
+    hd = cfg.resolved_head_dim()
+    defs = {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", "head_dim"),
+                       "normal"),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim"), "normal"),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd),
+                       ("embed", "kv_heads", "head_dim"), "normal"),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", "head_dim", "embed"),
+                       "normal",
+                       scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((cfg.n_heads, hd), ("heads", "head_dim"),
+                              "zeros")
+        defs["bk"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                              "zeros")
+        defs["bv"] = ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                              "zeros")
+    return defs
+
+
+def qkv(cfg, p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
+        rope: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,D] -> q:[B,S,Hq,Dh], k/v:[B,S,Hkv,Dh] (RoPE applied)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,T,Hkv,D] -> [B,T,Hq,D] by repeating each kv head G times."""
+    b, t, hkv, d = k.shape
+    g = n_heads // hkv
+    if g == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, hkv, g, d))
+    return k.reshape(b, t, n_heads, d)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: int, kv_len: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """[Q,K] additive bias. q_pos:[Q], k_pos:[K]."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    if kv_len is not None:
+        ok &= k_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, f32: bool = True):
+    """q:[B,Q,H,D] k,v:[B,T,H,D] bias:[Q,T] -> [B,Q,H,D]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    acc = jnp.float32 if f32 else q.dtype
+    logits = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                        preferred_element_type=acc) * scale
+    logits = logits + bias[None, None].astype(acc)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqt,bthd->bqhd", w, v)
+
+
+def _context_parallel_tp(cfg, s: int, h: int):
+    """Context-parallel attention applies when the head count cannot be
+    sharded over `model` but the query-block axis can (DESIGN/EXPERIMENTS
+    §Perf: qwen2.5 40H, whisper 6H). Returns (tp, block) or (0, 0).
+    The block adapts downward so that s == n_local * tp * block."""
+    from repro.parallel.ctx import current as _ctx
+    ctx = _ctx()
+    if ctx is None:
+        return 0, 0
+    mesh = ctx[0]
+    tp = mesh.shape.get("model", 1)
+    if tp <= 1 or h % tp == 0:
+        return 0, 0                    # head sharding handles it
+    bq = min(cfg.attn_block_q, max(s // tp, 1))
+    while bq > 1 and s % (tp * bq):
+        bq //= 2
+    return (tp, bq) if (bq >= 8 and s % (tp * bq) == 0) else (0, 0)
+
+
+def attention(cfg, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              *, causal: bool = True, window: int = 0,
+              q_offset: int = 0) -> jnp.ndarray:
+    """Self/cross attention. q:[B,S,Hq,D], k/v:[B,T,Hkv,D] -> [B,S,Hq,D].
+
+    Paths:
+      - plain SDPA for short sequences (heads sharded over `model` when
+        divisible — the expand_kv trick keeps GQA shardable);
+      - q-chunked scan above cfg.attn_blockwise_threshold (compiled
+        memory O(S·block) instead of O(S²));
+      - context-parallel blockwise when heads are NOT divisible by the
+        `model` axis: query blocks are sharded over `model` (grouped
+        GQA form, KV kept compact), so the S² logit traffic divides by
+        tp instead of replicating.
+    """
+    b, s, h, d = q.shape
+    cp, cp_bq = _context_parallel_tp(cfg, s, h)
+    if cp:
+        return _attention_context_parallel(cfg, q, k, v, causal=causal,
+                                           window=window,
+                                           q_offset=q_offset, tp=cp,
+                                           bq=cp_bq)
+    if (cfg.use_pallas and jax.default_backend() == "tpu"
+            and window == 0 and q_offset == 0 and s == k.shape[1]):
+        # TPU hot path: fused flash kernel — no S^2 HBM traffic
+        from repro.kernels.flash_attention.ops import flash_attention
+        ke = expand_kv(k, h)
+        ve = expand_kv(v, h)
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        kf = ke.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        vf = ve.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+        o = flash_attention(qf, kf, vf, causal=causal)
+        return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    k = expand_kv(k, q.shape[2])
+    v = expand_kv(v, q.shape[2])
+    t = k.shape[1]
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = jnp.arange(t)
+
+    if s <= cfg.attn_blockwise_threshold:
+        bias = _mask_bias(q_pos, k_pos, causal, window, None)
+        return _sdpa(q, k, v, bias, f32=cfg.attn_softmax_f32)
+
+    # ---- q-chunked path: scan over query blocks ----
+    bq = cfg.attn_block_q
+    assert s % bq == 0, (s, bq)
+    nblk = s // bq
+    qb = q.reshape(b, nblk, bq, h, d).transpose(1, 0, 2, 3, 4)  # [n,B,bq,H,D]
+
+    def body(carry, qi):
+        blk, qc = qi
+        qp = q_offset + blk * bq + jnp.arange(bq)
+        bias = _mask_bias(qp, k_pos, causal, window, None)
+        return carry, _sdpa(qc, k, v, bias, f32=cfg.attn_softmax_f32)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nblk), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def _attention_context_parallel(cfg, q, k, v, *, causal, window, q_offset,
+                                tp: int, bq: int):
+    """Query-block context parallelism (grouped GQA, compact KV).
+
+    q blocks laid out [n_local(scan), tp(sharded over `model`), ...];
+    each scan step computes tp blocks in parallel, one per model shard —
+    the per-device S² logit footprint divides by tp.
+    """
+    from repro.parallel.ctx import shard_activation
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    t = k.shape[1]
+    n_local = s // (tp * bq)
+    scale = 1.0 / math.sqrt(d)
+    k_pos = jnp.arange(t)
+
+    # Block-major layout: device j owns the CONTIGUOUS query chunk
+    # [j*S/tp, (j+1)*S/tp), so merging back to the seq-sharded residual
+    # layout is a no-op (no resharding collectives — §Perf C iteration 2).
+    # [n_local, tp, B, bq, Hkv, G, D]
+    qb = q.reshape(b, tp, n_local, bq, hkv, g, d)
+    qb = qb.transpose(2, 1, 0, 3, 4, 5, 6)
+    qb = shard_activation(
+        qb, (None, "act_seq", None, None, None, None, None))
+
+    def body(carry, inp):
+        i, qc = inp                       # qc: [tp, B, bq, Hkv, G, D]
+        j = jax.lax.broadcasted_iota(jnp.int32, (tp, bq), 0)
+        r = jax.lax.broadcasted_iota(jnp.int32, (tp, bq), 1)
+        qp = q_offset + (j * n_local + i) * bq + r       # [tp, bq]
+        acc = jnp.float32 if cfg.attn_softmax_f32 else q.dtype
+        logits = jnp.einsum("jbqhgd,bthd->jbhgqt", qc, k,
+                            preferred_element_type=acc) * scale
+        ok = k_pos[None, None, :] <= qp[:, :, None] if causal else \
+            jnp.ones((tp, bq, t), bool)
+        if window > 0:
+            ok &= k_pos[None, None, :] > (qp[:, :, None] - window)
+        bias = jnp.where(ok, 0.0, NEG_INF).astype(acc)   # [tp, bq, t]
+        logits = logits + bias[:, None, None, None, :, :]
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        o = jnp.einsum("jbhgqt,bthd->jbqhgd", w, v)
+        return carry, o
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_local), qb))
+    # [n_local, tp, B, bq, Hkv, G, D] -> [B, S, Hq, D] (tp-major merge)
+    out = out.transpose(2, 1, 0, 3, 4, 5, 6).reshape(b, s, hq, d)
+    return shard_activation(out, ("act_batch", "act_seq", None, None))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_defs(cfg, batch: int, max_len: int, n_layers: int,
+               window: int = 0) -> Dict[str, ParamDef]:
+    """Stacked-over-layers KV cache defs. window>0 -> ring buffer length.
+
+    kv_cache_dtype == 'int8': k/v stored int8 with per-(pos, head) f32
+    scales (symmetric quantization over head_dim) — halves decode HBM
+    traffic at <1% quantization error."""
+    hd = cfg.resolved_head_dim()
+    length = min(max_len, window) if window > 0 else max_len
+    shp = (n_layers, batch, length, cfg.n_kv_heads, hd)
+    axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    from repro.models.common import dtype_of
+    if cfg.kv_cache_dtype == "int8":
+        sshp = shp[:-1]
+        saxes = axes[:-1]
+        return {"k": ParamDef(shp, axes, "zeros", dtype=jnp.int8),
+                "v": ParamDef(shp, axes, "zeros", dtype=jnp.int8),
+                "k_scale": ParamDef(sshp, saxes, "zeros",
+                                    dtype=jnp.float32),
+                "v_scale": ParamDef(sshp, saxes, "zeros",
+                                    dtype=jnp.float32)}
+    dt = dtype_of(cfg.dtype)
+    return {"k": ParamDef(shp, axes, "zeros", dtype=dt),
+            "v": ParamDef(shp, axes, "zeros", dtype=dt)}
+
+
+def _quant_kv(x: jnp.ndarray):
+    """[B,1,H,D] -> (int8 values, [B,1,H] scales)."""
+    scale = (jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+             + 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def cache_update(cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                 k: jnp.ndarray, v: jnp.ndarray, pos: jnp.ndarray,
+                 window: int = 0, scales=None):
+    """Write one step (k,v: [B,1,Hkv,D]) at position pos. Ring-buffer write
+    when the cache is a sliding window. scales=(k_scale, v_scale) arrays
+    enable int8 mode; returns (ck, cv) or (ck, cv, ks, vs)."""
+    length = cache_k.shape[1]
+    idx = pos % length if window > 0 else pos
+    if scales is not None:
+        kq, ks1 = _quant_kv(k)
+        vq, vs1 = _quant_kv(v)
+        ck = jax.lax.dynamic_update_slice(cache_k, kq, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache_v, vq, (0, idx, 0, 0))
+        ks = jax.lax.dynamic_update_slice(scales[0], ks1, (0, idx, 0))
+        vs = jax.lax.dynamic_update_slice(scales[1], vs1, (0, idx, 0))
+        return ck, cv, ks, vs
+    ck = jax.lax.dynamic_update_slice(cache_k, k, (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v, (0, idx, 0, 0))
+    return ck, cv
+
+
+def decode_attention(cfg, q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos: jnp.ndarray,
+                     window: int = 0, scales=None) -> jnp.ndarray:
+    """One-token attention against the cache.
+
+    q: [B,1,Hq,D]; cache: [B,L,Hkv,D]; pos: current absolute position.
+    For ring-buffer (window) caches, positions are reconstructed modulo
+    the window so the causal mask stays exact. scales=(k_scale, v_scale)
+    dequantizes an int8 cache: the k-scale folds into the logits (per-t
+    multiply, no bf16 cache materialization in the einsum itself).
+    """
+    b, _, h, d = q.shape
+    length = cache_k.shape[1]
+    if scales is not None:
+        ks, vs = scales                                # [B,L,Hkv]
+        cache_k = cache_k.astype(jnp.bfloat16)
+        cache_v = (cache_v.astype(jnp.float32)
+                   * vs[..., None]).astype(q.dtype)
+    k = expand_kv(cache_k, h)
+    v = expand_kv(cache_v, h)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bthd->bhqt", q, k).astype(jnp.float32) * scale
+    if scales is not None:
+        logits = logits * expand_kv(
+            ks[..., None], h)[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    slot = jnp.arange(length)
+    if window > 0:
+        # slot i holds the largest absolute position <= pos that is
+        # congruent to i (mod length); valid iff within the window.
+        abs_pos = pos - jnp.mod(pos - slot, length)
+        valid = (abs_pos >= 0) & (abs_pos > pos - window)
+    else:
+        valid = slot <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqt,bthd->bqhd", w, v)

@@ -1,0 +1,228 @@
+"""Shared model machinery: parameter definitions, norms, RoPE, FFN, loss.
+
+Params are plain pytrees (nested dicts of jnp arrays). Structure is driven
+by ``ParamDef`` trees so that init, logical-sharding-axes, and
+ShapeDtypeStruct views are always consistent (one source of truth —
+required for the dry-run, which lowers against shape trees without ever
+allocating the full model).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names per dim
+    init: str = "normal"              # normal | zeros | ones | <special ids>
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_defs(tree: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Prepend a stacking (scan) dimension to every ParamDef in the tree."""
+    def f(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init,
+                        d.scale, d.dtype)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _init_one(d: ParamDef, key) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale
+                ).astype(d.dtype)
+    if d.init == "mamba_a_log":
+        # A in [1, 16) spread deterministically per head (A = -exp(A_log))
+        base = jnp.linspace(1.0, 16.0, num=d.shape[-1], dtype=jnp.float32)
+        out = jnp.broadcast_to(jnp.log(base), d.shape)
+        return out.astype(d.dtype)
+    if d.init == "mamba_dt_bias":
+        # dt ~ exp(U[log 1e-3, log 1e-1]); store inv-softplus
+        lo, hi = math.log(1e-3), math.log(1e-1)
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(lo + u * (hi - lo))
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: PyTree, key) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(defs: PyTree) -> PyTree:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def shapes_tree(defs: PyTree) -> PyTree:
+    """ShapeDtypeStruct tree — lets the dry-run lower without allocation."""
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+                        defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def nonparametric_ln(x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm_defs(cfg, d: int) -> Dict[str, ParamDef]:
+    if cfg.norm == "rmsnorm":
+        return {"w": ParamDef((d,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        return {"w": ParamDef((d,), ("embed",), "ones"),
+                "b": ParamDef((d,), ("embed",), "zeros")}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg, p: Dict, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return nonparametric_ln(x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    ang = ang[..., None, :]                          # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings [n, d]."""
+    log_timescale = math.log(10000.0) / max(d // 2 - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
+    t = jnp.arange(n, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(cfg, d: int, dff: int) -> Dict[str, ParamDef]:
+    if cfg.glu:
+        return {
+            "wi": ParamDef((d, dff), ("embed", "ff"), "normal",
+                           scale=0.02),
+            "wg": ParamDef((d, dff), ("embed", "ff"), "normal",
+                           scale=0.02),
+            "wo": ParamDef((dff, d), ("ff", "embed"), "normal",
+                           scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+        }
+    return {
+        "wi": ParamDef((d, dff), ("embed", "ff"), "normal", scale=0.02),
+        "wo": ParamDef((dff, d), ("ff", "embed"), "normal",
+                       scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def apply_ffn(cfg, p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = x @ p["wi"].astype(dt)
+    if cfg.glu:
+        h = act(x @ p["wg"].astype(dt)) * h
+    else:
+        h = act(h)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Vocab padding + loss
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(v: int, multiple: int = 128) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int) -> jnp.ndarray:
+    """Mean next-token CE. logits: [B,S,Vp] (padded vocab masked out)."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp != vocab_size:
+        neg = jnp.full((vp - vocab_size,), -1e9, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings [B, n_frames, d_model]. Positions are
+sinusoidal (whisper's encoder is sinusoidal; we use sinusoidal on the
+decoder too so any decode length lowers with O(1) params).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.lm import maybe_scan
+from repro.models.common import (ParamDef, apply_ffn, apply_norm,
+                                 cross_entropy, dtype_of, ffn_defs,
+                                 init_params, norm_defs, padded_vocab,
+                                 shapes_tree, sinusoidal_positions,
+                                 stack_defs)
+
+PyTree = Any
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        assert cfg.encdec is not None
+        self.cfg = cfg
+        self.vp = padded_vocab(cfg.vocab_size)
+        self._defs = self._param_defs()
+
+    # ------------------------------------------------------------- defs --
+    def _enc_block_defs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": norm_defs(cfg, d), "attn": attn.attn_defs(cfg, d),
+                "ln2": norm_defs(cfg, d), "ffn": ffn_defs(cfg, d, cfg.d_ff)}
+
+    def _dec_block_defs(self):
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": norm_defs(cfg, d), "self_attn": attn.attn_defs(cfg, d),
+                "ln2": norm_defs(cfg, d), "cross_attn": attn.attn_defs(cfg, d),
+                "ln3": norm_defs(cfg, d), "ffn": ffn_defs(cfg, d, cfg.d_ff)}
+
+    def _param_defs(self):
+        cfg = self.cfg
+        return {
+            "embed": ParamDef((self.vp, cfg.d_model), ("vocab", "embed"),
+                              "normal"),
+            "enc_blocks": stack_defs(self._enc_block_defs(),
+                                     cfg.encdec.encoder_layers),
+            "enc_norm": norm_defs(cfg, cfg.d_model),
+            "dec_blocks": stack_defs(self._dec_block_defs(), cfg.n_layers),
+            "final_norm": norm_defs(cfg, cfg.d_model),
+        }
+
+    def param_defs(self):
+        return self._defs
+
+    def init(self, key):
+        return init_params(self._defs, key)
+
+    def param_shapes(self):
+        return shapes_tree(self._defs)
+
+    # ------------------------------------------------------------ encode --
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: [B, F, D] (stub frontend output) -> [B, F, D]."""
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        b, f, d = frames.shape
+        x = frames.astype(dt) + sinusoidal_positions(f, d).astype(dt)[None]
+        positions = jnp.arange(f)[None, :]
+
+        def body(x, p):
+            h = apply_norm(cfg, p["ln1"], x)
+            q, k, v = attn.qkv(cfg, p["attn"], h, positions, rope=False)
+            o = attn.attention(cfg, q, k, v, causal=False)
+            x = x + jnp.einsum("bshe,hed->bsd", o,
+                               p["attn"]["wo"].astype(x.dtype))
+            x = x + apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["ln2"], x))
+            return x, None
+
+        x, _ = maybe_scan(cfg, body, x, params["enc_blocks"])
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    # ------------------------------------------------------------ decode --
+    def _dec_block(self, p, x, mem, positions):
+        cfg = self.cfg
+        h = apply_norm(cfg, p["ln1"], x)
+        q, k, v = attn.qkv(cfg, p["self_attn"], h, positions, rope=False)
+        o = attn.attention(cfg, q, k, v, causal=True)
+        x = x + jnp.einsum("bshe,hed->bsd", o,
+                           p["self_attn"]["wo"].astype(x.dtype))
+        h = apply_norm(cfg, p["ln2"], x)
+        qc = jnp.einsum("bsd,dhe->bshe", h, p["cross_attn"]["wq"].astype(
+            x.dtype))
+        kc = jnp.einsum("bfd,dhe->bfhe", mem, p["cross_attn"]["wk"].astype(
+            x.dtype))
+        vc = jnp.einsum("bfd,dhe->bfhe", mem, p["cross_attn"]["wv"].astype(
+            x.dtype))
+        oc = attn.attention(cfg, qc, kc, vc, causal=False)
+        x = x + jnp.einsum("bshe,hed->bsd", oc,
+                           p["cross_attn"]["wo"].astype(x.dtype))
+        x = x + apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["ln3"], x))
+        return x
+
+    def apply(self, params, tokens, frames) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        mem = self.encode(params, frames)
+        b, s = tokens.shape
+        x = params["embed"].astype(dt)[tokens]
+        x = x + sinusoidal_positions(s, cfg.d_model).astype(dt)[None]
+        positions = jnp.arange(s)[None, :]
+
+        def body(x, p):
+            return self._dec_block(p, x, mem, positions), None
+
+        x, _ = maybe_scan(cfg, body, x, params["dec_blocks"])
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["embed"].T.astype(dt)   # whisper ties head
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, _ = self.apply(params, batch["tokens"], batch["frames"])
+        return cross_entropy(logits, batch["labels"], self.cfg.vocab_size)
+
+    # ------------------------------------------------------------- cache --
+    def cache_defs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim()
+        dt = dtype_of(cfg.dtype)
+        f = cfg.encdec.n_frames
+        ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        axf = ("layers", "batch", "frames", "kv_heads", "head_dim")
+        L = cfg.n_layers
+        return {
+            "self_kv": {
+                "k": ParamDef((L, batch, max_len, cfg.n_kv_heads, hd), ax,
+                              "zeros", dtype=dt),
+                "v": ParamDef((L, batch, max_len, cfg.n_kv_heads, hd), ax,
+                              "zeros", dtype=dt)},
+            "cross_kv": {
+                "k": ParamDef((L, batch, f, cfg.n_kv_heads, hd), axf,
+                              "zeros", dtype=dt),
+                "v": ParamDef((L, batch, f, cfg.n_kv_heads, hd), axf,
+                              "zeros", dtype=dt)},
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        return init_params(self.cache_defs(batch, max_len),
+                           jax.random.PRNGKey(0))
+
+    def cache_shapes(self, batch: int, max_len: int):
+        return shapes_tree(self.cache_defs(batch, max_len))
+
+    def prefill(self, params, tokens, frames):
+        """Encode + fill cross-attn KV + run decoder over prompt tokens."""
+        cfg = self.cfg
+        mem = self.encode(params, frames)
+
+        def kv(p):
+            kc = jnp.einsum("bfd,dhe->bfhe", mem,
+                            p["cross_attn"]["wk"].astype(mem.dtype))
+            vc = jnp.einsum("bfd,dhe->bfhe", mem,
+                            p["cross_attn"]["wv"].astype(mem.dtype))
+            return kc, vc
+
+        ks, vs = jax.vmap(kv)(params["dec_blocks"])
+        logits, _ = self.apply(params, tokens, frames)
+        b, s = tokens.shape
+        cache = self.init_cache(b, s)
+        cache["cross_kv"] = {"k": ks, "v": vs}
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        x = params["embed"].astype(dt)[tokens]
+        # sinusoidal embedding evaluated at the current absolute position
+        import math as _m
+        half = cfg.d_model // 2
+        inv = jnp.exp(-(_m.log(10000.0) / max(half - 1, 1))
+                      * jnp.arange(half, dtype=jnp.float32))
+        ang = pos.astype(jnp.float32) * inv
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe.astype(dt)[None, None, :]
+        positions = jnp.full(tokens.shape, pos)
+
+        def f(x, xs):
+            p, ck, cv, xk, xv = xs
+            h = apply_norm(cfg, p["ln1"], x)
+            q, k, v = attn.qkv(cfg, p["self_attn"], h, positions, rope=False)
+            ck, cv = attn.cache_update(ck, cv, k, v, pos)
+            o = attn.decode_attention(cfg, q, ck, cv, pos)
+            x = x + jnp.einsum("bshe,hed->bsd", o,
+                               p["self_attn"]["wo"].astype(x.dtype))
+            h = apply_norm(cfg, p["ln2"], x)
+            qc = jnp.einsum("bsd,dhe->bshe", h,
+                            p["cross_attn"]["wq"].astype(x.dtype))
+            kx = attn.expand_kv(xk, cfg.n_heads)
+            vx = attn.expand_kv(xv, cfg.n_heads)
+            import math as _m
+            lg = jnp.einsum("bqhd,bthd->bhqt", qc, kx).astype(jnp.float32)
+            lg = lg / _m.sqrt(qc.shape[-1])
+            w = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+            oc = jnp.einsum("bhqt,bthd->bqhd", w, vx)
+            x = x + jnp.einsum("bshe,hed->bsd", oc,
+                               p["cross_attn"]["wo"].astype(x.dtype))
+            x = x + apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["ln3"], x))
+            return x, (ck, cv)
+
+        x, (ks, vs) = maybe_scan(
+            cfg, f, x, (params["dec_blocks"], cache["self_kv"]["k"],
+                   cache["self_kv"]["v"], cache["cross_kv"]["k"],
+                   cache["cross_kv"]["v"]))
+        new_cache = {"self_kv": {"k": ks, "v": vs},
+                     "cross_kv": cache["cross_kv"]}
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["embed"].T.astype(dt)
+        return logits, new_cache

@@ -1,0 +1,433 @@
+"""Decoder-only LM assembly for dense / moe / ssm / hybrid / vlm families.
+
+Layers are scanned (stacked params) so HLO size is O(1) in depth — required
+for 94-layer dry-runs. The hybrid (Zamba2) family scans Mamba2 groups and
+interleaves the *shared* attention block between groups (weights reused at
+every site — the block's working set stays resident, a locality argument of
+the same flavour as the paper's clustering).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ParamDef, apply_ffn, apply_norm,
+                                 cross_entropy, dtype_of, ffn_defs,
+                                 init_params, norm_defs, padded_vocab,
+                                 shapes_tree, stack_defs)
+from repro.parallel.ctx import shard_activation
+
+PyTree = Any
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "collectives":
+        # save the post-collective sublayer outputs (they are seq-sharded
+        # and small) so backward remat does NOT re-run the forward's TP
+        # all-reduces / all-gathers — EXPERIMENTS.md §Perf hillclimb B.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out", "mlp_out"))
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def maybe_scan(cfg, f, init, xs):
+    """lax.scan when cfg.scan_layers, else an unrolled python loop with the
+    same (carry, stacked_ys) contract (used by the dry-run cost lowering)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = (None if ys[0] is None
+               else jax.tree.map(lambda *ls: jnp.stack(ls), *ys))
+    return carry, stacked
+
+
+class DecoderLM:
+    """cfg.family in {dense, moe, ssm, hybrid, vlm}."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.vp = padded_vocab(cfg.vocab_size)
+        self._defs = self._param_defs()
+
+    # ------------------------------------------------------------- defs --
+    def _block_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        if cfg.family in ("dense", "vlm"):
+            return {"ln1": norm_defs(cfg, d), "attn": attn.attn_defs(cfg, d),
+                    "ln2": norm_defs(cfg, d),
+                    "ffn": ffn_defs(cfg, d, cfg.d_ff)}
+        if cfg.family == "moe":
+            return {"ln1": norm_defs(cfg, d), "attn": attn.attn_defs(cfg, d),
+                    "ln2": norm_defs(cfg, d), "moe": moe_mod.moe_defs(cfg, d)}
+        if cfg.family in ("ssm", "hybrid"):
+            return {"ln": norm_defs(cfg, d), "ssm": ssm_mod.ssm_defs(cfg)}
+        raise ValueError(cfg.family)
+
+    def _shared_block_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        return {"ln1": norm_defs(cfg, d), "attn": attn.attn_defs(cfg, d),
+                "ln2": norm_defs(cfg, d), "ffn": ffn_defs(cfg, d, cfg.d_ff)}
+
+    def _layer_split(self) -> Tuple[int, int, int]:
+        """hybrid: (n_sites, attn_every, tail)."""
+        cfg = self.cfg
+        ae = cfg.hybrid.attn_every
+        n_sites = cfg.n_layers // ae
+        tail = cfg.n_layers - n_sites * ae
+        return n_sites, ae, tail
+
+    def _param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        defs: Dict[str, Any] = {
+            "embed": ParamDef((self.vp, cfg.d_model), ("vocab", "embed"),
+                              "normal"),
+            "final_norm": norm_defs(cfg, d),
+        }
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((cfg.d_model, self.vp),
+                                       ("embed", "vocab"), "normal")
+        if cfg.family == "hybrid":
+            n_sites, ae, tail = self._layer_split()
+            defs["blocks"] = stack_defs(self._block_defs(), n_sites * ae)
+            if tail:
+                defs["tail_blocks"] = stack_defs(self._block_defs(), tail)
+            defs["shared"] = self._shared_block_defs()
+        else:
+            defs["blocks"] = stack_defs(self._block_defs(), cfg.n_layers)
+        return defs
+
+    def param_defs(self) -> Dict[str, Any]:
+        return self._defs
+
+    def init(self, key) -> PyTree:
+        return init_params(self._defs, key)
+
+    def param_shapes(self) -> PyTree:
+        return shapes_tree(self._defs)
+
+    # ------------------------------------------------------------ blocks --
+    def _apply_block(self, p, x, positions, aux):
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            h = apply_norm(cfg, p["ln1"], x)
+            # seq-sharded constraint on the post-norm activation: its
+            # COTANGENT inherits the sharding, so the qkv-projection
+            # backward emits reduce-scatter instead of full all-reduce
+            # (EXPERIMENTS.md §Perf, hillclimb B iteration 2)
+            h = shard_activation(h, ("act_batch", "act_seq", "act_embed"))
+            q, k, v = attn.qkv(cfg, p["attn"], h, positions)
+            q = shard_activation(q, ("act_batch", None, "act_heads", None))
+            o = attn.attention(cfg, q, k, v, causal=True)
+            dt = x.dtype
+            y = jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"].astype(dt))
+            y = shard_activation(y, ("act_batch", "act_seq", "act_embed"))
+            x = x + jax.ad_checkpoint.checkpoint_name(y, "attn_out")
+            h = apply_norm(cfg, p["ln2"], x)
+            h = shard_activation(h, ("act_batch", "act_seq", "act_embed"))
+            if cfg.family == "moe":
+                y, a = moe_mod.apply_moe(cfg, p["moe"], h)
+                aux = aux + a
+            else:
+                y = apply_ffn(cfg, p["ffn"], h)
+            y = shard_activation(y, ("act_batch", "act_seq", "act_embed"))
+            x = x + jax.ad_checkpoint.checkpoint_name(y, "mlp_out")
+        else:  # ssm / hybrid backbone
+            h = apply_norm(cfg, p["ln"], x)
+            y = ssm_mod.apply_ssm_block(cfg, p["ssm"], h)
+            y = shard_activation(y, ("act_batch", "act_seq", "act_embed"))
+            x = x + jax.ad_checkpoint.checkpoint_name(y, "mlp_out")
+        x = shard_activation(x, ("act_batch", "act_seq", "act_embed"))
+        return x, aux
+
+    def _apply_shared_block(self, p, x, positions, window: int = 0):
+        cfg = self.cfg
+        h = apply_norm(cfg, p["ln1"], x)
+        q, k, v = attn.qkv(cfg, p["attn"], h, positions)
+        o = attn.attention(cfg, q, k, v, causal=True, window=window)
+        dt = x.dtype
+        x = x + jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"].astype(dt))
+        x = x + apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["ln2"], x))
+        return x
+
+    def _scan_blocks(self, stacked, x, positions, aux):
+        body = _remat(self.cfg, functools.partial(
+            lambda carry, p: self._apply_block(p, carry[0], positions,
+                                               carry[1])))
+        if not self.cfg.scan_layers:
+            # unrolled python loop: used by the dry-run's cost lowering —
+            # XLA cost_analysis counts while-loop bodies ONCE, so the
+            # scanned artifact under-reports FLOPs by ~n_layers.
+            n = jax.tree.leaves(stacked)[0].shape[0]
+            for i in range(n):
+                x, aux = body((x, aux), jax.tree.map(lambda a: a[i], stacked))
+            return x, aux
+
+        def f(carry, p):
+            x, aux = body(carry, p)
+            return (x, aux), None
+
+        (x, aux), _ = jax.lax.scan(f, (x, aux), stacked)
+        return x, aux
+
+    # ------------------------------------------------------------- apply --
+    def apply(self, params, tokens) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens [B,S] -> (logits [B,S,Vp], aux_loss)."""
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        b, s = tokens.shape
+        x = params["embed"].astype(dt)[tokens]
+        x = shard_activation(x, ("act_batch", "act_seq", "act_embed"))
+        positions = jnp.arange(s)[None, :]
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "hybrid":
+            n_sites, ae, tail = self._layer_split()
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_sites, ae) + a.shape[1:]),
+                params["blocks"])
+            for i in range(n_sites):
+                grp = jax.tree.map(lambda a: a[i], grouped)
+                x, aux = self._scan_blocks(grp, x, positions, aux)
+                x = self._apply_shared_block(params["shared"], x, positions)
+            if tail:
+                x, aux = self._scan_blocks(params["tail_blocks"], x,
+                                           positions, aux)
+        else:
+            x, aux = self._scan_blocks(params["blocks"], x, positions, aux)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head.astype(dt)
+        logits = shard_activation(logits, ("act_batch", "act_seq", "vocab"))
+        return logits, aux
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.apply(params, batch["tokens"])
+        return (cross_entropy(logits, batch["labels"], self.cfg.vocab_size)
+                + 0.01 * aux)
+
+    # ------------------------------------------------------------- cache --
+    def window_for(self, max_len: int) -> int:
+        """Sliding-window size for the shared attn block (hybrid only):
+        long-context decode uses a ring-buffer window (DESIGN.md §4)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid" and max_len > 65536:
+            return cfg.hybrid.long_ctx_window
+        return 0
+
+    def cache_defs(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            return {"kv": attn.cache_defs(cfg, batch, max_len, cfg.n_layers)}
+        if cfg.family == "ssm":
+            return {"ssm": ssm_mod.ssm_cache_defs(cfg, batch, cfg.n_layers)}
+        if cfg.family == "hybrid":
+            n_sites, ae, tail = self._layer_split()
+            w = self.window_for(max_len)
+            return {
+                "ssm": ssm_mod.ssm_cache_defs(cfg, batch, cfg.n_layers),
+                "kv": attn.cache_defs(cfg, batch, max_len, n_sites, window=w),
+            }
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, max_len: int) -> PyTree:
+        return init_params(self.cache_defs(batch, max_len),
+                           jax.random.PRNGKey(0))
+
+    def cache_shapes(self, batch: int, max_len: int) -> PyTree:
+        return shapes_tree(self.cache_defs(batch, max_len))
+
+    # ----------------------------------------------------------- prefill --
+    def prefill(self, params, tokens) -> Tuple[jnp.ndarray, PyTree]:
+        """Run the full forward, returning last-position logits + KV cache.
+
+        Only attention families materialize a KV cache at prefill; SSM and
+        hybrid prefill via their own recurrence (cache = final states) —
+        for the dry-run cells, prefill of attention families is the
+        quadratic-cost artifact of interest.
+        """
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        b, s = tokens.shape
+        x = params["embed"].astype(dt)[tokens]
+        positions = jnp.arange(s)[None, :]
+        aux = jnp.zeros((), jnp.float32)
+
+        caches_k = []
+        caches_v = []
+        if cfg.family in ("dense", "vlm", "moe"):
+            def f(carry, p):
+                x, aux = carry
+                h = apply_norm(cfg, p["ln1"], x)
+                q, k, v = attn.qkv(cfg, p["attn"], h, positions)
+                o = attn.attention(cfg, q, k, v, causal=True)
+                x = x + jnp.einsum("bshe,hed->bsd", o,
+                                   p["attn"]["wo"].astype(x.dtype))
+                h2 = apply_norm(cfg, p["ln2"], x)
+                if cfg.family == "moe":
+                    y, a = moe_mod.apply_moe(cfg, p["moe"], h2)
+                    aux = aux + a
+                else:
+                    y = apply_ffn(cfg, p["ffn"], h2)
+                return (x + y, aux), (k, v)
+
+            (x, aux), (ks, vs) = maybe_scan(cfg, f, (x, aux), params["blocks"])
+            cache = {"kv": {"k": ks, "v": vs}}
+        else:
+            # ssm/hybrid prefill: run apply path and return decode states.
+            # (States are reconstructed exactly by the recurrence; for the
+            # dry-run artifact we lower the forward itself.)
+            logits, aux = self.apply(params, tokens)
+            return logits[:, -1:], self.init_cache(b, s)
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x[:, -1:] @ head.astype(dt)
+        return logits, cache
+
+    # ------------------------------------------------------------ decode --
+    def decode_step(self, params, cache, tokens, pos, *, window: int = 0
+                    ) -> Tuple[jnp.ndarray, PyTree]:
+        """One decode step. tokens [B,1]; pos: scalar int32 position.
+        ``window`` is static (pass self.window_for(max_len) for hybrids)."""
+        cfg = self.cfg
+        dt = dtype_of(cfg.dtype)
+        x = params["embed"].astype(dt)[tokens]          # [B,1,D]
+        positions = jnp.full(tokens.shape, pos)
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            int8 = cfg.kv_cache_dtype == "int8"
+
+            def f(x, xs):
+                if int8:
+                    p, ck, cv, cks, cvs = xs
+                else:
+                    p, ck, cv = xs
+                h = apply_norm(cfg, p["ln1"], x)
+                q, k, v = attn.qkv(cfg, p["attn"], h, positions)
+                if int8:
+                    ck, cv, cks, cvs = attn.cache_update(
+                        ck, cv, k, v, pos, scales=(cks, cvs))
+                    o = attn.decode_attention(cfg, q, ck, cv, pos,
+                                              scales=(cks, cvs))
+                else:
+                    ck, cv = attn.cache_update(ck, cv, k, v, pos)
+                    o = attn.decode_attention(cfg, q, ck, cv, pos)
+                x = x + jnp.einsum("bshe,hed->bsd", o,
+                                   p["attn"]["wo"].astype(x.dtype))
+                h2 = apply_norm(cfg, p["ln2"], x)
+                if cfg.family == "moe":
+                    y, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
+                else:
+                    y = apply_ffn(cfg, p["ffn"], h2)
+                return (x + y,
+                        (ck, cv, cks, cvs) if int8 else (ck, cv))
+
+            if int8:
+                x, (ks, vs, kss, vss) = maybe_scan(
+                    cfg, f, x, (params["blocks"], cache["kv"]["k"],
+                                cache["kv"]["v"], cache["kv"]["k_scale"],
+                                cache["kv"]["v_scale"]))
+                new_cache["kv"] = {"k": ks, "v": vs, "k_scale": kss,
+                                   "v_scale": vss}
+            else:
+                x, (ks, vs) = maybe_scan(
+                    cfg, f, x, (params["blocks"], cache["kv"]["k"],
+                                cache["kv"]["v"]))
+                new_cache["kv"] = {"k": ks, "v": vs}
+
+        elif cfg.family == "ssm":
+            def f(x, xs):
+                p, h, conv = xs
+                hin = apply_norm(cfg, p["ln"], x)
+                y, h, conv = ssm_mod.ssm_decode_step(cfg, p["ssm"], hin, h,
+                                                     conv)
+                return x + y, (h, conv)
+
+            x, (hs, convs) = maybe_scan(
+                cfg, f, x, (params["blocks"], cache["ssm"]["h"],
+                       cache["ssm"]["conv"]))
+            new_cache["ssm"] = {"h": hs, "conv": convs}
+
+        else:  # hybrid
+            n_sites, ae, tail = self._layer_split()
+            w = window
+
+            def mamba_f(x, xs):
+                p, h, conv = xs
+                hin = apply_norm(cfg, p["ln"], x)
+                y, h, conv = ssm_mod.ssm_decode_step(cfg, p["ssm"], hin, h,
+                                                     conv)
+                return x + y, (h, conv)
+
+            grouped = jax.tree.map(
+                lambda a: a.reshape((n_sites, ae) + a.shape[1:]),
+                params["blocks"])
+            sc = cache["ssm"]
+            g_h = sc["h"][:n_sites * ae].reshape(
+                (n_sites, ae) + sc["h"].shape[1:])
+            g_c = sc["conv"][:n_sites * ae].reshape(
+                (n_sites, ae) + sc["conv"].shape[1:])
+            hs_out, conv_out, kv_k, kv_v = [], [], [], []
+            for i in range(n_sites):
+                grp = jax.tree.map(lambda a: a[i], grouped)
+                x, (hs, convs) = maybe_scan(
+                    cfg, mamba_f, x, (grp, g_h[i], g_c[i]))
+                hs_out.append(hs)
+                conv_out.append(convs)
+                # shared attention site i
+                sp = params["shared"]
+                h_in = apply_norm(cfg, sp["ln1"], x)
+                q, k, v = attn.qkv(cfg, sp["attn"], h_in, positions)
+                ck, cv = attn.cache_update(
+                    cache["kv"]["k"][i], cache["kv"]["v"][i], k, v, pos,
+                    window=w)
+                o = attn.decode_attention(cfg, q, ck, cv, pos, window=w)
+                x = x + jnp.einsum("bshe,hed->bsd", o,
+                                   sp["attn"]["wo"].astype(x.dtype))
+                x = x + apply_ffn(cfg, sp["ffn"],
+                                  apply_norm(cfg, sp["ln2"], x))
+                kv_k.append(ck)
+                kv_v.append(cv)
+            if tail:
+                x, (hs, convs) = maybe_scan(
+                    cfg, mamba_f, x,
+                    (params["tail_blocks"], sc["h"][n_sites * ae:],
+                     sc["conv"][n_sites * ae:]))
+            new_h = jnp.concatenate(
+                [jnp.stack(hs_out).reshape((-1,) + sc["h"].shape[1:])]
+                + ([hs] if tail else []), axis=0)
+            new_conv = jnp.concatenate(
+                [jnp.stack(conv_out).reshape((-1,) + sc["conv"].shape[1:])]
+                + ([convs] if tail else []), axis=0)
+            new_cache = {"ssm": {"h": new_h, "conv": new_conv},
+                         "kv": {"k": jnp.stack(kv_k), "v": jnp.stack(kv_v)}}
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x @ head.astype(dt)
+        return logits, new_cache

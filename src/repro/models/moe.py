@@ -1,0 +1,295 @@
+"""Mixture-of-Experts layer with two dispatch policies.
+
+This is where the paper's contribution lands in the LM stack (DESIGN.md §3):
+
+- ``clustered`` (default): tokens are *sorted by expert id* within each
+  token group — the analogue of the paper's prefix-hash bucketing. All
+  tokens bound for one expert form a contiguous bucket, move across the
+  mesh ONCE (one all-to-all on the dispatched [G, E, C, D] buckets when
+  experts are sharded over `model`), and the expert's weights are applied
+  to the whole bucket as a single batched matmul (weight reuse == the
+  paper's TID-prefix reuse).
+- ``onehot``: the GShard-style dense one-hot dispatch einsum — the
+  "unclustered" baseline. Same routing semantics, but every token slot
+  participates in every expert's dispatch product; its HLO FLOP count
+  shows the waste the clustered policy removes (EXPERIMENTS.md §Perf).
+
+SPMD layout: token groups G map to the DP axes, so per-group argsort /
+scatter / one-hot work is device-local (never replicated); experts map to
+`model`. Capacity C = ceil(cf · Tg · k / E) per group; overflow tokens are
+dropped from expert compute (GShard semantics; the clustered policy drops
+later-*token* entries, onehot drops later-*k* entries — both valid, noted
+for the equivalence tests which use ample capacity).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamDef
+from repro.parallel.ctx import current as sharding_ctx, shard_activation
+
+
+def moe_defs(cfg, d: int) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    e, f = m.n_experts, cfg.d_ff
+    scale_o = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "router": ParamDef((d, e), ("embed", "experts"), "normal"),
+        "wi": ParamDef((e, d, f), ("experts", "embed", "ff"), "normal"),
+        "wg": ParamDef((e, d, f), ("experts", "embed", "ff"), "normal"),
+        "wo": ParamDef((e, f, d), ("experts", "ff", "embed"), "normal",
+                       scale=scale_o),
+    }
+
+
+def _capacity(cfg, tg: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.capacity_factor * tg * m.top_k / m.n_experts))
+    return max(4, min(c, tg))
+
+
+def _n_groups(cfg, t: int) -> int:
+    m = cfg.moe
+    if m.n_groups:
+        return m.n_groups if t % m.n_groups == 0 else 1
+    if m.dispatch == "onehot":
+        g = max(1, t // m.onehot_group)
+        while t % g:
+            g -= 1
+        return g
+    ctx = sharding_ctx()
+    if ctx is None:
+        return 1
+    from repro.parallel.sharding import dp_size
+    dp = dp_size(ctx[0])
+    return dp if (t % dp == 0 and t >= 64 * dp) else 1
+
+
+def _router(cfg, p, x):
+    """x:[G,Tg,D] -> (top_e, top_p, aux). Router always in fp32."""
+    m = cfg.moe
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # [G,Tg,E]
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)             # [G,Tg,k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], m.n_experts,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = m.n_experts * jnp.sum(me * ce)
+    return top_e, top_p, aux
+
+
+def _expert_ffn(cfg, p, xe: jnp.ndarray) -> jnp.ndarray:
+    """xe: [G, E, C, D] -> [G, E, C, D]; batched per-expert SwiGLU."""
+    dt = xe.dtype
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# clustered (sort-based, bucket) dispatch
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_group(cfg, x, top_e, top_p, c: int):
+    """One group. x:[Tg,D]; top_e/p:[Tg,k] -> (xe [E*C,D], combine info)."""
+    m = cfg.moe
+    tg, d = x.shape
+    k, e = m.top_k, m.n_experts
+    flat_e = top_e.reshape(-1)                     # [Tg*k]
+    flat_t = jnp.repeat(jnp.arange(tg), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)       # bucket by expert
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    starts = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos = jnp.arange(tg * k) - starts[se]
+    keep = pos < c
+    slot = jnp.where(keep, se * c + pos, e * c)    # overflow -> sentinel
+    xs = x[st] * keep[:, None].astype(x.dtype)
+    xe = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(xs)
+    return xe[:-1], (st, sp, slot, keep)
+
+
+def _combine_group(ye, info, tg: int):
+    """ye: [E*C, D]; scatter-add weighted expert outputs back to tokens."""
+    st, sp, slot, keep = info
+    yk = jnp.where(keep[:, None], ye[jnp.where(keep, slot, 0)], 0.0)
+    contrib = yk * sp[:, None].astype(yk.dtype)
+    return jnp.zeros((tg, ye.shape[1]), ye.dtype).at[st].add(contrib)
+
+
+def moe_clustered(cfg, p, x: jnp.ndarray, g: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [T, D] -> ([T, D], aux). Pure-pjit path (no mesh context):
+    group-parallel sort-based dispatch via vmap."""
+    m = cfg.moe
+    t, d = x.shape
+    tg = t // g
+    c = _capacity(cfg, tg)
+    xg = x.reshape(g, tg, d)
+    top_e, top_p, aux = _router(cfg, p, xg)
+
+    xe, info = jax.vmap(
+        lambda xi, ei, pi: _dispatch_group(cfg, xi, ei, pi, c))(
+            xg, top_e, top_p)
+    xe = xe.reshape(g, m.n_experts, c, d)
+    ye = _expert_ffn(cfg, p, xe)
+    ye = ye.reshape(g, m.n_experts * c, d)
+    y = jax.vmap(lambda yi, ii: _combine_group(yi, ii, tg))(ye, info)
+    return y.reshape(t, d), aux
+
+
+def moe_clustered_shmap(cfg, p, x: jnp.ndarray, mesh, rules
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Explicit shard_map clustered dispatch — the paper's owner-computes
+    bucket placement with hand-written collectives (DESIGN.md §3).
+
+    Layout: tokens sharded over the DP axes ("one group per data shard"),
+    experts owned by `model` columns. Per device: local router + stable
+    sort into expert buckets (device-local, never replicated), slice out
+    the buckets of MY experts, all_gather them over DP (every expert
+    owner receives its whole bucket — one bulk transfer per layer, the
+    bucket-granularity move), local batched FFN, slice back, weighted
+    scatter-add, psum over `model` to sum expert contributions.
+
+    Backward of all_gather is reduce-scatter; backward of psum is free —
+    so the gradient path is collective-optimal too.
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.parallel.sharding import dp_axes
+    import functools as _ft
+
+    mcfg = cfg.moe
+    t, d = x.shape
+    dp = dp_axes(mesh)
+    model_ax = "model" if "model" in mesh.shape else None
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    msize = mesh.shape[model_ax] if model_ax else 1
+    e = mcfg.n_experts
+    if (t % dp_size) or (e % msize) or model_ax is None or dp_size == 1:
+        return moe_clustered(cfg, p, x, _n_groups(cfg, t))
+    t_loc = t // dp_size
+    c = _capacity(cfg, t_loc)
+    e_loc = e // msize
+
+    def gather_dp(v, axis):
+        for ax in reversed(dp):
+            v = jax.lax.all_gather(v, ax, axis=axis, tiled=True)
+        return v
+
+    def local_fn(x_loc, router, wi, wg, wo):
+        # x_loc: [T_loc, D] — identical across the model axis. Each
+        # device applies ITS model-column's experts to ITS tokens'
+        # buckets: no token movement at all; partial token outputs are
+        # psum'd over `model` (the only activation collective).
+        x2 = x_loc[None]                            # [1, T_loc, D]
+        top_e, top_p, aux = _router(cfg, {"router": router}, x2)
+        top_e, top_p = top_e[0], top_p[0]
+        mi = jax.lax.axis_index(model_ax)
+        e0 = mi * e_loc
+
+        # slot-indexed dispatch: per local expert-slot, which token and
+        # gate feeds it (integer scatters only — no [T*k, D] tensors)
+        k = mcfg.top_k
+        flat_e = top_e.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t_loc), k)
+        flat_p = top_p.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)    # bucket by expert
+        se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+        starts = jnp.searchsorted(se, jnp.arange(e), side="left")
+        pos = jnp.arange(t_loc * k) - starts[se]
+        keep = pos < c
+        local = keep & (se >= e0) & (se < e0 + e_loc)
+        slot = jnp.where(local, (se - e0) * c + pos, e_loc * c)
+        tok = jnp.zeros((e_loc * c + 1,), jnp.int32).at[slot].set(st)
+        gate = jnp.zeros((e_loc * c + 1,), jnp.float32).at[slot].set(
+            jnp.where(local, sp, 0.0))
+        tok, gate = tok[:-1], gate[:-1]
+
+        xe = x_loc[tok] * (gate > 0)[:, None].astype(x_loc.dtype)
+        xe = xe.reshape(1, e_loc, c, d)
+        # FSDP weights: explicit per-layer gather of the sharded dim
+        ye = _expert_ffn(cfg, {"wi": gather_dp(wi, 1),
+                               "wg": gather_dp(wg, 1),
+                               "wo": gather_dp(wo, 2)},
+                         xe)[0].reshape(e_loc * c, d)
+        y_part = jnp.zeros((t_loc, d), ye.dtype).at[tok].add(
+            ye * gate[:, None].astype(ye.dtype))
+        y = jax.lax.psum(y_part, model_ax)
+        aux = jax.lax.pmean(aux, dp + (model_ax,))
+        return y, aux
+
+    P = jax.sharding.PartitionSpec
+    dspec = dp if len(dp) > 1 else dp[0]
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dspec, None), P(None, None),
+                  P(model_ax, dspec, None), P(model_ax, dspec, None),
+                  P(model_ax, None, dspec)),
+        out_specs=(P(dspec, None), P()),
+        check_rep=False)
+    return fn(x, p["router"], p["wi"], p["wg"], p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# onehot (GShard einsum) dispatch — the unclustered baseline
+# ---------------------------------------------------------------------------
+
+
+def moe_onehot(cfg, p, x: jnp.ndarray, g: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m = cfg.moe
+    t, d = x.shape
+    tg = t // g
+    k, e = m.top_k, m.n_experts
+    c = _capacity(cfg, tg)
+    xg = x.reshape(g, tg, d)
+    xg = shard_activation(xg, ("batch", None, None))
+    top_e, top_p, aux = _router(cfg, p, xg)
+
+    oh = jax.nn.one_hot(top_e.transpose(2, 0, 1), e,
+                        dtype=jnp.int32)                    # [k,G,Tg,E]
+    # position-in-expert, GShard priority order: all k=0 picks outrank
+    # k=1 picks, then token order within a k level.
+    csum = jnp.cumsum(oh, axis=2)                            # within k level
+    totals = jnp.sum(oh, axis=2, keepdims=True)              # [k,G,1,E]
+    prior = jnp.cumsum(totals, axis=0) - totals              # earlier levels
+    pos = csum - oh + prior                                  # [k,G,Tg,E]
+    within = jnp.sum(pos * oh, axis=-1)                      # [k,G,Tg]
+    keep = (within < c) & (jnp.sum(oh, -1) > 0)
+    poh = jax.nn.one_hot(within, c, dtype=x.dtype) * keep[..., None]
+    ohf = oh.astype(x.dtype)
+    disp = jnp.einsum("kgte,kgtc->gtec", ohf, poh)           # [G,Tg,E,C]
+    xe = jnp.einsum("gtd,gtec->gecd", xg, disp)
+    xe = shard_activation(xe, ("batch", "experts", None, None))
+    ye = _expert_ffn(cfg, p, xe)
+    ye = shard_activation(ye, ("batch", "experts", None, None))
+    gates = top_p.transpose(2, 0, 1).astype(x.dtype)         # [k,G,Tg]
+    comb = jnp.einsum("kgte,kgtc,kgt->gtec", ohf, poh, gates)
+    y = jnp.einsum("gecd,gtec->gtd", ye, comb)
+    y = shard_activation(y, ("batch", None, None))
+    return y.reshape(t, d), aux
+
+
+def apply_moe(cfg, p, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    if cfg.moe.dispatch == "clustered":
+        ctx = sharding_ctx()
+        if ctx is not None:
+            y, aux = moe_clustered_shmap(cfg, p, x.reshape(t, d),
+                                         ctx[0], ctx[1])
+            return y.reshape(b, s, d), aux
+        y, aux = moe_clustered(cfg, p, x.reshape(t, d), _n_groups(cfg, t))
+        return y.reshape(b, s, d), aux
+    y, aux = moe_onehot(cfg, p, x.reshape(t, d), _n_groups(cfg, t))
+    return y.reshape(b, s, d), aux

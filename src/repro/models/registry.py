@@ -1,0 +1,19 @@
+"""build_model(cfg) -> model object with a uniform API:
+
+  init(key) / param_defs() / param_shapes()
+  apply(params, tokens[, frames]) -> (logits, aux)
+  loss(params, batch) -> scalar
+  prefill(params, ...) -> (last_logits, cache)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  init_cache / cache_shapes
+"""
+from __future__ import annotations
+
+from repro.models.encdec import EncDecLM
+from repro.models.lm import DecoderLM
+
+
+def build_model(cfg):
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

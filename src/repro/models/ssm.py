@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality) block, TPU-native chunked form.
+
+The SSD algorithm (arXiv:2405.21060) is implemented in its matmul
+("quadratic-within-chunk, recurrent-across-chunks") form: within a chunk the
+output is an attention-like masked gram product (MXU work); across chunks a
+small [H, P, N] state is carried by a lax.scan. This is the right mapping for
+the TPU memory hierarchy — the chunk working set lives in VMEM and the
+cross-chunk state is tiny — as opposed to the GPU implementation's
+warp-parallel selective scan, which has no TPU analogue (DESIGN.md §3).
+
+Decode is the O(1) recurrence: h' = exp(dt*A) h + dt * B ⊗ x.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, rmsnorm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.headdim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nheads, conv_dim
+
+
+def ssm_defs(cfg) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    # in_proj emits [z (d_in), x (d_in), B (G*N), C (G*N), dt (H)]
+    out_dim = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "in_proj": ParamDef((d, out_dim), ("embed", "ssm_inner"), "normal"),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "ssm_inner"),
+                           "normal", scale=0.2),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), "zeros"),
+        "a_log": ParamDef((nheads,), ("ssm_heads",), "mamba_a_log"),
+        "dt_bias": ParamDef((nheads,), ("ssm_heads",), "mamba_dt_bias"),
+        "d_skip": ParamDef((nheads,), ("ssm_heads",), "ones"),
+        "norm_w": ParamDef((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDef((d_in, d), ("ssm_inner", "embed"), "normal",
+                             scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, nheads, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(conv_w, conv_b, xbc, state=None):
+    """Depthwise causal conv. xbc: [B,S,C]; conv_w: [K,C].
+
+    state (decode): [B, K-1, C] previous inputs; returns (out, new_state).
+    """
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+        full = jnp.concatenate([pad, xbc], axis=1)
+        out = sum(full[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+                  for i in range(k))
+        return jax.nn.silu(out + conv_b.astype(xbc.dtype)), None
+    # decode: xbc is [B,1,C]
+    full = jnp.concatenate([state, xbc], axis=1)          # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", full, conv_w.astype(xbc.dtype))[:, None]
+    new_state = full[:, 1:]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """SSD scan. x:[B,S,H,P] dt:[B,S,H] b,c:[B,S,G,N] -> [B,S,H,P].
+
+    Chunked matmul form. The lax.scan over chunks carries the [B,H,P,N]
+    state AND computes the within-chunk quadratic term, so only one
+    chunk's [B,Q,Q,H] gram/decay tensors are ever live (VMEM-sized).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad to a chunk multiple; padded steps have dt=0 => exp(0) decay
+        # and zero dt-weighted input, so they do not perturb the state.
+        pad = chunk - s % chunk
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        out = ssd_chunked(zp(x), zp(dt), a_log, zp(b), zp(c), chunk)
+        return out[:, :s]
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # [H], negative
+    dta = (dt * a[None, None, :]).astype(jnp.float32)     # [B,S,H]
+    xdt = (x.astype(jnp.float32) * dt[..., None])         # dt-weighted input
+
+    def r(t):  # reshape into chunks: [nc, B, chunk, ...]
+        return t.reshape((bsz, nc) + (chunk,) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtac = r(xdt), r(dta)
+    bh = r(b.astype(jnp.float32))                          # [nc,B,Q,G,N]
+    ch = r(c.astype(jnp.float32))
+    if g != h:
+        bh = jnp.repeat(bh, rep, axis=3)                   # [nc,B,Q,H,N]
+        ch = jnp.repeat(ch, rep, axis=3)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_body(h_prev, inp):
+        xi, dti, bi, ci = inp                              # per-chunk slices
+        seg = jnp.cumsum(dti, axis=1)                      # [B,Q,H]
+        total = seg[:, -1]                                 # [B,H]
+        # within-chunk: masked decay gram (MXU-friendly matmul form)
+        diff = seg[:, :, None, :] - seg[:, None, :, :]     # [B,Q,Q,H]
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bqhn,bkhn->bqkh", ci, bi)         # [B,Q,Q,H]
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", cb * decay, xi)
+        # inter-chunk: read the carried state
+        decay_from_start = jnp.exp(seg)                    # [B,Q,H]
+        y_off = jnp.einsum("bqhn,bqh,bhpn->bqhp",
+                           ci, decay_from_start, h_prev)
+        # update state with this chunk's contribution
+        decay_to_end = jnp.exp(total[:, None, :] - seg)    # [B,Q,H]
+        states = jnp.einsum("bqhn,bqh,bqhp->bhpn", bi, decay_to_end, xi)
+        h_new = h_prev * jnp.exp(total)[..., None, None] + states
+        return h_new, (y_diag + y_off)
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, y = jax.lax.scan(scan_body, h0, (xc, dtac, bh, ch))
+    return y.swapaxes(0, 1).reshape(bsz, s, h, p).astype(x.dtype)
+
+
+def apply_ssm_block(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    """Full mamba2 mixer. x: [B,S,D] -> [B,S,D] (train/prefill path)."""
+    s = cfg.ssm
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    xbc, _ = _causal_conv(p["conv_w"], p["conv_b"], xbc)
+    xin, b, c = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    bsz, slen, _ = x.shape
+    xh = xin.reshape(bsz, slen, nheads, s.headdim)
+    bg = b.reshape(bsz, slen, s.n_groups, s.d_state)
+    cg = c.reshape(bsz, slen, s.n_groups, s.d_state)
+    dth = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    y = ssd_chunked(xh, dth, p["a_log"], bg, cg, s.chunk)
+    y = y + p["d_skip"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(bsz, slen, d_in)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_)
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state recurrence)
+# ---------------------------------------------------------------------------
+
+
+def ssm_cache_defs(cfg, batch: int, n_layers: int) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "h": ParamDef((n_layers, batch, nheads, s.headdim, s.d_state),
+                      ("layers", "batch", "ssm_heads", None, None), "zeros",
+                      dtype=jnp.float32),
+        "conv": ParamDef((n_layers, batch, s.d_conv - 1, conv_dim),
+                         ("layers", "batch", None, "ssm_inner"), "zeros",
+                         dtype=jnp.bfloat16),
+    }
+
+
+def ssm_decode_step(cfg, p, x, h, conv_state):
+    """x: [B,1,D]; h: [B,H,P,N]; conv_state: [B,K-1,C]."""
+    s = cfg.ssm
+    d_in, nheads, _ = ssm_dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xin, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    xbc, conv_state = _causal_conv(p["conv_w"], p["conv_b"], xbc,
+                                   conv_state.astype(dt_))
+    xin, b, c = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    bsz = x.shape[0]
+    xh = xin.reshape(bsz, nheads, s.headdim).astype(jnp.float32)
+    bg = b.reshape(bsz, s.n_groups, s.d_state).astype(jnp.float32)
+    cg = c.reshape(bsz, s.n_groups, s.d_state).astype(jnp.float32)
+    rep = nheads // s.n_groups
+    bh = jnp.repeat(bg, rep, axis=1)                      # [B,H,N]
+    chd = jnp.repeat(cg, rep, axis=1)
+    dth = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dth * a[None])                           # [B,H]
+    h = h * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dth, xh, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, chd)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, d_in).astype(dt_)
+    y = rmsnorm(y, p["norm_w"]) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), h, conv_state

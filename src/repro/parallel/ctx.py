@@ -1,0 +1,42 @@
+"""Sharding context: lets model code annotate activations with *logical*
+axis names without ever referencing physical mesh axes.
+
+``use_sharding_ctx(mesh, rules)`` installs a context; ``shard_activation``
+then applies ``jax.lax.with_sharding_constraint`` with the resolved
+PartitionSpec. Outside any context (CPU smoke tests, kernels), it is a
+no-op — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+_state = threading.local()
+
+
+def current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding_ctx(mesh, rules):
+    prev = current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def shard_activation(x, logical_axes: Sequence[Optional[str]]):
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.parallel.sharding import spec_for
+    spec = spec_for(x.shape, tuple(logical_axes), mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

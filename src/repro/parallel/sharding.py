@@ -1,0 +1,155 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+A *ruleset* maps each logical axis name to an ordered list of candidate
+physical axis groups. Resolution is shape-aware: a candidate is taken only
+if the dimension is divisible by the group's total mesh size and none of
+its axes are already used in the spec — so the same ruleset serves every
+architecture (40-head models silently fall back to replicated attention
+rather than failing to partition; see DESIGN.md §5).
+
+DP axes are ("pod", "data") — "pod" exists only on the multi-pod mesh and
+is skipped automatically on single-pod meshes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]
+
+# candidates: logical name -> list of physical axis groups (tried in order)
+RULESETS: Dict[str, Dict[str, List[Axes]]] = {
+    # FSDP default: weights sharded over DP axes on their 'embed' dim and
+    # over 'model' on their width dims; activations sharded over batch.
+    "default": {
+        "batch":     [("pod", "data"), ("data",)],
+        "act_batch": [("pod", "data"), ("data",)],
+        # Megatron-style sequence parallelism: residual-stream activations
+        # (and remat-saved layer inputs) shard their seq dim over `model`
+        "act_seq":   [("model",)],
+        "act_embed": [],
+        "act_heads": [("model",)],
+        "embed":     [("pod", "data"), ("data",)],   # FSDP / ZeRO-3
+        "vocab":     [("model",)],
+        "heads":     [("model",)],
+        "kv_heads":  [("model",)],
+        "head_dim":  [],
+        "ff":        [("model",)],
+        "experts":   [("model",)],
+        "ssm_inner": [("model",)],
+        "ssm_heads": [("model",)],
+        "cache_seq": [],
+        "layers":    [],
+        "seq":       [],
+        "frames":    [],
+    },
+    # pure DP + TP (no FSDP): weights replicated over data axes
+    "no_fsdp": {
+        "batch":     [("pod", "data"), ("data",)],
+        "act_batch": [("pod", "data"), ("data",)],
+        "act_seq":   [],
+        "act_embed": [],
+        "act_heads": [("model",)],
+        "embed":     [],
+        "vocab":     [("model",)],
+        "heads":     [("model",)],
+        "kv_heads":  [("model",)],
+        "head_dim":  [],
+        "ff":        [("model",)],
+        "experts":   [("model",)],
+        "ssm_inner": [("model",)],
+        "ssm_heads": [("model",)],
+        "cache_seq": [],
+        "layers":    [],
+        "seq":       [],
+        "frames":    [],
+    },
+    # decode ruleset: KV-cache sequence axis takes `model` when the head
+    # axes cannot (sequence-parallel decode attention).
+    "decode": {
+        "batch":     [("pod", "data"), ("data",)],
+        "act_batch": [("pod", "data"), ("data",)],
+        "act_seq":   [],   # decode: seq dim is 1
+        "act_embed": [],
+        "act_heads": [("model",)],
+        "embed":     [("pod", "data"), ("data",)],
+        "vocab":     [("model",)],
+        "heads":     [("model",)],
+        "kv_heads":  [("model",)],
+        "head_dim":  [],
+        "ff":        [("model",)],
+        "experts":   [("model",)],
+        "ssm_inner": [("model",)],
+        "ssm_heads": [("model",)],
+        "cache_seq": [("model",)],
+        "layers":    [],
+        "seq":       [],
+        "frames":    [],
+    },
+}
+
+
+def _mesh_size(mesh: Mesh, group: Axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in group]))
+
+
+# low-priority logical axes only claim mesh axes AFTER everything else
+# had a chance (e.g. decode cache_seq takes `model` only when the head
+# axes can't use it)
+_LOW_PRIORITY = {"cache_seq": 1, "act_seq": 1}
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict[str, List[Axes]]) -> P:
+    """Resolve logical axes for a concrete shape into a PartitionSpec."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    parts: List[Optional[Axes]] = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: _LOW_PRIORITY.get(logical[i] or "", 0))
+    for i in order:
+        dim, name = shape[i], logical[i]
+        chosen: Optional[Axes] = None
+        if name is not None:
+            for group in rules.get(name, []):
+                group = tuple(a for a in group if a in mesh.shape)
+                if not group or any(a in used for a in group):
+                    continue
+                if dim % _mesh_size(mesh, group) == 0:
+                    chosen = group
+                    break
+        if chosen:
+            used.update(chosen)
+            parts[i] = chosen if len(chosen) > 1 else chosen[0]
+    return P(*parts)
+
+
+def tree_specs(shapes, axes, mesh: Mesh, rules) -> "jax.tree":
+    """Map matching (ShapeDtypeStruct tree, logical-axes tree) -> spec tree."""
+    # shapes' treedef drives flattening: the axes tree's tuple leaves are
+    # matched via flatten_up_to, so they are NOT traversed as containers.
+    return jax.tree.map(
+        lambda s, a: spec_for(s.shape, a, mesh, rules), shapes, axes)
+
+
+def tree_shardings(shapes, axes, mesh: Mesh, rules):
+    specs = tree_specs(shapes, axes, mesh, rules)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> Axes:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = dp_axes(mesh)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def dp_size(mesh: Mesh) -> int:
+    return _mesh_size(mesh, dp_axes(mesh))

@@ -1,0 +1,35 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+Checkpoints store *global* arrays (repro.checkpoint.ckpt), so elasticity
+reduces to re-resolving the sharding rules against the new mesh and
+device_put-ing each leaf — logical axes are mesh-independent by design
+(repro.parallel.sharding). Divisibility fallbacks in `spec_for` mean a
+16-wide model axis checkpoint restores cleanly onto 8- or 4-wide meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.models.common import axes_tree
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+def reshard_params(params_host: PyTree, model, mesh, rules) -> PyTree:
+    """Place host (numpy) param arrays onto a new mesh."""
+    shardings = shd.tree_shardings(model.param_shapes(),
+                                   axes_tree(model.param_defs()),
+                                   mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s),
+                        params_host, shardings)
+
+
+def scale_batch_for_mesh(global_batch: int, mesh) -> int:
+    """Keep per-shard batch constant when the DP width changes
+    (elastic scale-down halves the global batch, scale-up doubles it)."""
+    dp = shd.dp_size(mesh)
+    per_shard = max(1, global_batch // max(dp, 1))
+    return per_shard * dp

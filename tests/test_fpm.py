@@ -1,0 +1,69 @@
+"""Apriori FPM engine vs brute force, both policies + locality metrics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import mine, mine_serial
+from repro.core.itemsets import brute_force_frequent
+from repro.core.tidlist import pack_database
+from repro.data.transactions import load
+
+
+@pytest.fixture(scope="module")
+def small_db():
+    db, p = load("mushroom", seed=0)
+    return [t for t in db[:300]], p
+
+
+def test_serial_matches_brute_force(small_db):
+    db, p = small_db
+    bm = pack_database(db, p.n_dense_items)
+    ms = int(0.3 * len(db))
+    ref = brute_force_frequent(db, ms, max_k=4)
+    got = mine_serial(bm, ms, max_k=4)
+    assert got == ref
+
+
+@pytest.mark.parametrize("policy", ["cilk", "fifo", "clustered"])
+def test_parallel_matches_serial(small_db, policy):
+    db, p = small_db
+    bm = pack_database(db, p.n_dense_items)
+    ms = int(0.3 * len(db))
+    ref = mine_serial(bm, ms, max_k=4)
+    got, metrics = mine(bm, ms, policy=policy, n_workers=4, max_k=4)
+    assert got == ref
+    assert metrics.scheduler["tasks_run"] == metrics.candidates
+
+
+def test_clustered_has_better_locality_than_cilk(small_db):
+    """The paper's central claim, in this reproduction's metrics."""
+    db, p = small_db
+    bm = pack_database(db, p.n_dense_items)
+    ms = int(0.25 * len(db))
+    _, m_clu = mine(bm, ms, policy="clustered", n_workers=4, max_k=5)
+    _, m_cilk = mine(bm, ms, policy="cilk", n_workers=4, max_k=5)
+    assert m_clu.cache_hit_rate > m_cilk.cache_hit_rate
+    assert (m_clu.scheduler["tasks_per_steal"]
+            >= m_cilk.scheduler["tasks_per_steal"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_mine_equals_brute_force_random_db(seed):
+    rng = np.random.default_rng(seed)
+    n_items, n_tx = 12, 60
+    db = [sorted(rng.choice(n_items, size=rng.integers(1, 7),
+                            replace=False).tolist())
+          for _ in range(n_tx)]
+    ms = int(rng.integers(2, 12))
+    ref = brute_force_frequent(db, ms, max_k=4)
+    bm = pack_database(db, n_items)
+    got, _ = mine(bm, ms, policy="clustered", n_workers=3, max_k=4)
+    assert got == ref
+
+
+def test_min_support_one_includes_every_item_present():
+    db = [[0], [1], [2, 3]]
+    bm = pack_database(db, 4)
+    got = mine_serial(bm, 1, max_k=3)
+    assert (0,) in got and (3,) in got and (2, 3) in got

@@ -1,0 +1,178 @@
+"""Per-arch smoke tests (reduced configs): fwd/train step, shapes, no NaNs,
+decode==apply consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models.common import padded_vocab
+from repro.models.registry import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encdec.n_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    if cfg.family == "audio":
+        logits, aux = m.apply(params, batch["tokens"], batch["frames"])
+    else:
+        logits, aux = m.apply(params, batch["tokens"])
+    assert logits.shape == (2, 32, padded_vocab(cfg.vocab_size))
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # one train step
+    loss, grads = jax.value_and_grad(m.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_apply(arch):
+    cfg = get_smoke_config(arch).with_(dtype="float32")
+    if cfg.moe:
+        # ample capacity -> no token drops -> decode == teacher forcing
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                capacity_factor=16.0))
+    m = build_model(cfg)
+    params = m.init(KEY)
+    b, s = 2, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        frames = jax.random.normal(KEY, (b, cfg.encdec.n_frames,
+                                         cfg.d_model), jnp.float32)
+        full, _ = m.apply(params, toks, frames)
+        cache = m.init_cache(b, s)
+        _, c2 = m.prefill(params, toks[:, :1], frames)
+        cache["cross_kv"] = c2["cross_kv"]
+    else:
+        full, _ = m.apply(params, toks)
+        cache = m.init_cache(b, s)
+    outs = []
+    for i in range(s):
+        lg, cache = m.decode_step(params, cache, toks[:, i:i + 1],
+                                  jnp.int32(i))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_loss_decreases_on_tiny_train():
+    """~200-step driver check is examples/quickstart; 30 steps here."""
+    from repro.configs.base import OptimizerConfig
+    from repro.optim import adamw
+    cfg = get_smoke_config("olmo-1b")
+    m = build_model(cfg)
+    params = m.init(KEY)
+    ocfg = OptimizerConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    opt = adamw.init(params)
+    batch = _batch(cfg, b=4, s=64)   # fixed batch: loss must fall fast
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(m.loss)(params, batch)
+        upd, opt, _ = adamw.update(ocfg, g, opt, params)
+        return adamw.apply_updates(params, upd), opt, loss
+
+    losses = []
+    for _ in range(60):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_sliding_window_attention_masks_far_tokens():
+    from repro.configs.registry import get_smoke_config
+    from repro.models import attention as mattn
+    cfg = get_smoke_config("olmo-1b").with_(dtype="float32")
+    b, s, h, d = 1, 32, 2, 8
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(KEY, (b, s, h, d))
+    v = jax.random.normal(KEY, (b, s, h, d))
+    full = mattn.attention(cfg, q, k, v, causal=True)
+    win = mattn.attention(cfg, q, k, v, causal=True, window=4)
+    # early positions (inside window) match; late positions differ
+    np.testing.assert_allclose(np.asarray(full[:, :4]),
+                               np.asarray(win[:, :4]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(full[:, -1] - win[:, -1]))) > 1e-4
+
+
+def test_ring_buffer_decode_matches_full_cache_inside_window():
+    """Hybrid long-ctx: ring-buffer window cache == full cache + window
+    mask, for positions beyond the window."""
+    from repro.models import attention as mattn
+    cfg = get_smoke_config("zamba2-1.2b").with_(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(KEY)
+    b, s = 1, 24
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    w = cfg.hybrid.long_ctx_window  # smoke: 64 > s — use manual window
+    # run with window=8 ring buffer vs window=8 mask on full-length cache
+    cache_defs = m.cache_defs(b, s)
+    full_cache = m.init_cache(b, s)
+    outs_full = []
+    for i in range(s):
+        lg, full_cache = m.decode_step(params, full_cache,
+                                       toks[:, i:i + 1], jnp.int32(i),
+                                       window=8)
+        outs_full.append(lg[:, 0])
+    # ring buffer: cache length = window
+    import repro.models.ssm as ssm_mod
+    from repro.models import attention as attn_mod
+    n_sites, ae, tail = m._layer_split()
+    ring_cache = {
+        "ssm": jax.tree.map(lambda a: a,
+                            full_cache["ssm"]),
+    }
+    ring_cache = m.init_cache(b, s)
+    ring_cache["kv"] = {
+        kk: jnp.zeros((n_sites, b, 8) + vv.shape[3:], vv.dtype)
+        for kk, vv in ring_cache["kv"].items()}
+    outs_ring = []
+    for i in range(s):
+        lg, ring_cache = m.decode_step(params, ring_cache,
+                                       toks[:, i:i + 1], jnp.int32(i),
+                                       window=8)
+        outs_ring.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs_full, 1)),
+                               np.asarray(jnp.stack(outs_ring, 1)),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    """int8 KV cache: <1% logit error, identical greedy tokens."""
+    cfg = get_smoke_config("stablelm-3b").with_(dtype="float32")
+    m = build_model(cfg)
+    params = m.init(KEY)
+    b, s = 2, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    full, _ = m.apply(params, toks)
+    m8 = build_model(cfg.with_(kv_cache_dtype="int8"))
+    cache = m8.init_cache(b, s)
+    assert cache["kv"]["k"].dtype == jnp.int8
+    outs = []
+    for i in range(s):
+        lg, cache = m8.decode_step(params, cache, toks[:, i:i + 1],
+                                   jnp.int32(i))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    assert float(jnp.max(jnp.abs(dec - full))) < 0.05
+    assert bool(jnp.all(jnp.argmax(dec, -1) == jnp.argmax(full, -1)))

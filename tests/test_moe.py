@@ -1,0 +1,95 @@
+"""MoE dispatch-policy tests: clustered == onehot routing semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_smoke_config
+from repro.models import moe as moe_mod
+from repro.models.registry import build_model
+
+KEY = jax.random.PRNGKey(7)
+
+
+def make(cf=8.0, e=8, k=2):
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").with_(
+        dtype="float32",
+        moe=MoEConfig(n_experts=e, top_k=k, capacity_factor=cf))
+    m = build_model(cfg)
+    p = jax.tree.map(lambda a: a[0], m.init(KEY)["blocks"]["moe"])
+    return cfg, p
+
+
+@pytest.mark.parametrize("g", [1, 2, 4])
+def test_clustered_equals_onehot_no_drop(g):
+    cfg, p = make(cf=16.0)
+    x = jax.random.normal(KEY, (64, cfg.d_model), jnp.float32)
+    yc, auxc = moe_mod.moe_clustered(cfg, p, x, g)
+    yo, auxo = moe_mod.moe_onehot(cfg, p, x, g)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(yo), atol=1e-5)
+    assert abs(float(auxc - auxo)) < 1e-6
+
+
+def test_every_token_gets_topk_outputs_no_drop():
+    cfg, p = make(cf=16.0, e=4, k=2)
+    x = jax.random.normal(KEY, (32, cfg.d_model), jnp.float32)
+    y, _ = moe_mod.moe_clustered(cfg, p, x, 1)
+    # no row should be exactly zero (all tokens routed)
+    norms = jnp.linalg.norm(y, axis=-1)
+    assert float(jnp.min(norms)) > 0
+
+
+def test_capacity_drops_reduce_output_norm():
+    cfg_hi, p = make(cf=16.0, e=8, k=2)
+    cfg_lo = cfg_hi.with_(moe=MoEConfig(n_experts=8, top_k=2,
+                                        capacity_factor=0.25))
+    x = jax.random.normal(KEY, (128, cfg_hi.d_model), jnp.float32)
+    y_hi, _ = moe_mod.moe_clustered(cfg_hi, p, x, 1)
+    y_lo, _ = moe_mod.moe_clustered(cfg_lo, p, x, 1)
+    # low capacity drops tokens -> some rows zeroed
+    n_zero_lo = int(jnp.sum(jnp.linalg.norm(y_lo, axis=-1) < 1e-9))
+    n_zero_hi = int(jnp.sum(jnp.linalg.norm(y_hi, axis=-1) < 1e-9))
+    assert n_zero_lo > n_zero_hi
+
+
+def _moe_dense_oracle(cfg, p, x):
+    """Per-token dense oracle: run EVERY expert on EVERY token, weight by
+    renormalized top-k gates (no capacity — ground truth for cf=∞)."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # all experts on all tokens: [E, T, D]
+    h = jnp.einsum("td,edf->etf", x, p["wi"])
+    g = jnp.einsum("td,edf->etf", x, p["wg"])
+    ye = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * h, p["wo"])
+    t = x.shape[0]
+    out = jnp.zeros_like(x)
+    for kk in range(m.top_k):
+        out = out + top_p[:, kk:kk + 1] * ye[top_e[:, kk],
+                                             jnp.arange(t)]
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_clustered_matches_dense_oracle(seed):
+    cfg, p = make(cf=16.0, e=4, k=2)
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (16, cfg.d_model), jnp.float32)
+    y, _ = moe_mod.moe_clustered(cfg, p, x, 1)
+    want = _moe_dense_oracle(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_onehot_group_size_controls_groups():
+    cfg, p = make()
+    cfg2 = cfg.with_(moe=MoEConfig(n_experts=8, top_k=2, dispatch="onehot",
+                                   onehot_group=16))
+    assert moe_mod._n_groups(cfg2, 64) == 4
+    cfg3 = cfg.with_(moe=MoEConfig(n_experts=8, top_k=2, n_groups=8))
+    assert moe_mod._n_groups(cfg3, 64) == 8

@@ -1,0 +1,85 @@
+"""AdamW + schedule + clipping + compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.optim import adamw
+from repro.parallel import compression
+
+
+def test_schedule_warmup_and_decay():
+    o = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.schedule(o, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-9          # peak at end of warmup
+    assert lrs[100] < lrs[50] < lrs[10]        # monotone decay after
+    assert lrs[100] >= 1e-4 - 1e-9             # floor at 10%
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((3,), 4.0)}
+    clipped, gn = adamw.clip_by_global_norm(tree, 1.0)
+    got = adamw.global_norm(clipped)
+    assert abs(float(got) - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_adamw_reduces_quadratic_loss():
+    o = OptimizerConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                        weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    state = adamw.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state, _ = adamw.update(o, g, state, params)
+        params = adamw.apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_state_shapes_match_params():
+    params = {"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))}
+    st_ = adamw.init(params)
+    shapes = adamw.state_shapes(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params))
+    assert jax.tree.structure(st_.mu) == jax.tree.structure(params)
+    assert shapes.mu["w"].shape == (3, 4)
+
+
+# ----------------------------------------------------------- compression
+def test_quantize_dequantize_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = compression.quantize_int8(x)
+    back = compression.dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_error_feedback_preserves_sum(seed):
+    """Over many steps, error feedback makes the quantized stream's sum
+    converge to the true gradient sum (bias-free accumulation)."""
+    rng = np.random.default_rng(seed)
+    g_true = jnp.asarray(rng.standard_normal(64), jnp.float32) * 0.1
+    residual = {"g": jnp.zeros(64)}
+    acc = jnp.zeros(64)
+    for _ in range(50):
+        qs, scales, new_res = compression.compress_grads(
+            {"g": g_true}, residual)
+        residual = {"g": new_res["g"]}
+        acc = acc + compression.dequantize_int8(qs["g"], scales["g"])
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true),
+                               atol=float(scales["g"]) + 1e-5)
+
+
+def test_compressed_bytes_are_4x_smaller():
+    x = jnp.zeros((1024,), jnp.float32)
+    q, s = compression.quantize_int8(x)
+    assert q.dtype == jnp.int8 and q.nbytes * 4 == x.nbytes

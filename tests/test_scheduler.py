@@ -1,0 +1,144 @@
+"""Scheduler-policy behaviour tests (paper §3-4)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.scheduler import (CilkPolicy, ClusteredPolicy, FifoPolicy,
+                                  TaskScheduler, make_policy)
+
+
+def run_tasks(policy, n_workers=4, n_tasks=200, attr_of=lambda i: i):
+    sched = TaskScheduler(n_workers, policy)
+    results = []
+    lock = threading.Lock()
+
+    def work(i):
+        with lock:
+            results.append(i)
+        return i * 2
+
+    tasks = [sched.spawn(work, i, attr=attr_of(i)) for i in range(n_tasks)]
+    sched.wait_all()
+    sched.shutdown()
+    return sched, tasks, results
+
+
+def test_all_tasks_run_cilk():
+    sched, tasks, results = run_tasks(CilkPolicy(4))
+    assert sorted(results) == list(range(200))
+    assert all(t.result == i * 2 for i, t in enumerate(tasks))
+
+
+def test_all_tasks_run_fifo():
+    _, tasks, results = run_tasks(FifoPolicy(4))
+    assert sorted(results) == list(range(200))
+
+
+def test_all_tasks_run_clustered():
+    pol = ClusteredPolicy(4, cluster_of=lambda a: a % 10)
+    _, tasks, results = run_tasks(pol, attr_of=lambda i: i)
+    assert sorted(results) == list(range(200))
+
+
+def test_clustered_steal_takes_whole_bucket():
+    pol = ClusteredPolicy(2, cluster_of=lambda a: a)
+    from repro.core.scheduler import Task
+    for i in range(6):
+        pol.put(0, Task(lambda: None, (), attr=7))   # one bucket, 6 tasks
+    got = pol.steal(1, 0)
+    assert len(got) == 6                              # the WHOLE bucket
+    assert pol.approx_len(0) == 0
+
+
+def test_cilk_steal_takes_one():
+    pol = CilkPolicy(2)
+    from repro.core.scheduler import Task
+    for i in range(6):
+        pol.put(0, Task(lambda: None, ()))
+    got = pol.steal(1, 0)
+    assert len(got) == 1
+    assert pol.approx_len(0) == 5
+
+
+def test_clustered_get_drains_bucket_before_switching():
+    pol = ClusteredPolicy(1, cluster_of=lambda a: a)
+    from repro.core.scheduler import Task
+    for attr in [1, 2, 1, 2, 1]:
+        pol.put(0, Task(lambda: None, (), attr=attr))
+    seen = [pol.get(0).attr for _ in range(5)]
+    # one full bucket first, then the other
+    assert seen in ([1, 1, 1, 2, 2], [2, 2, 1, 1, 1])
+
+
+def test_stats_tracked():
+    sched, _, _ = run_tasks(CilkPolicy(4), n_tasks=500)
+    s = sched.merged_stats()
+    assert s["tasks_run"] == 500
+    assert s["tasks_per_steal"] >= 0
+
+
+def test_make_policy_names():
+    for name, cls in [("cilk", CilkPolicy), ("fifo", FifoPolicy),
+                      ("clustered", ClusteredPolicy)]:
+        assert isinstance(make_policy(name, 2), cls)
+    with pytest.raises(ValueError):
+        make_policy("nope", 2)
+
+
+def test_parallel_speedup_gil_released():
+    """numpy task bodies release the GIL: 4 workers must beat 1 worker."""
+    import os
+    import numpy as np
+    if (os.cpu_count() or 1) < 4:
+        pytest.skip("needs >=4 cores for a thread-speedup assertion")
+    if os.getloadavg()[0] > os.cpu_count() * 0.5:
+        pytest.skip("machine too loaded for a timing assertion")
+    big = np.random.default_rng(0).integers(
+        0, 2 ** 32, size=(4, 1 << 19), dtype=np.uint32)
+
+    def work(_):
+        x = big[0]
+        for r in big[1:]:
+            x = x & r
+        return int(x.sum())
+
+    def timed(n):
+        sched = TaskScheduler(n, CilkPolicy(n))
+        t0 = time.time()
+        for i in range(64):
+            sched.spawn(work, i, attr=i)
+        sched.wait_all()
+        sched.shutdown()
+        return time.time() - t0
+
+    t1, t4 = timed(1), timed(4)
+    assert t4 < t1 * 0.85, (t1, t4)
+
+
+def test_nearest_neighbor_policy_correct_and_local():
+    """Paper §6 future work: NN bucket selection — correctness + the
+    bucket chosen after a drain shares items with the last prefix."""
+    from repro.core.scheduler import NearestNeighborPolicy, Task
+    pol = NearestNeighborPolicy(1, cluster_of=lambda a: a)
+    for pref in [(1, 2), (7, 8), (1, 3), (9, 10)]:
+        pol.put(0, Task(lambda: None, (), attr=pref))
+    first = pol.get(0).attr
+    second = pol.get(0).attr
+    # after draining the first bucket, the nearest (overlapping) bucket
+    # is picked next when one exists
+    if 1 in first:
+        assert 1 in second, (first, second)
+
+
+def test_nn_policy_mines_correctly():
+    import numpy as np
+    from repro.core.fpm import mine, mine_serial
+    from repro.core.tidlist import pack_database
+    rng = np.random.default_rng(0)
+    db = [sorted(rng.choice(12, size=rng.integers(2, 7),
+                            replace=False).tolist()) for _ in range(80)]
+    bm = pack_database(db, 12)
+    ref = mine_serial(bm, 8, max_k=4)
+    got, met = mine(bm, 8, policy="nn", n_workers=3, max_k=4)
+    assert got == ref

@@ -1,0 +1,121 @@
+"""Sharding-rule resolution tests (mesh-independent logic, no devices)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Only .shape is consulted by spec_for."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def rules():
+    return shd.RULESETS["default"]
+
+
+def test_divisible_dims_get_axes():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for((152064, 4096), ("vocab", "embed"), mesh, rules())
+    assert spec == P("model", "data")
+
+
+def test_non_divisible_dim_falls_back_to_replicated():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 40 heads % 16 != 0 -> replicated head axis (qwen2.5 case)
+    spec = shd.spec_for((5120, 40, 128), ("embed", "heads", "head_dim"),
+                        mesh, rules())
+    assert spec == P("data", None, None)
+
+
+def test_axis_used_once_per_spec():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # both dims want 'model': only the first gets it
+    spec = shd.spec_for((128, 1536), ("experts", "ff"), mesh, rules())
+    assert spec == P("model", None)
+
+
+def test_multipod_batch_uses_both_dp_axes():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = shd.spec_for((256, 4096), ("batch", "seq"), mesh, rules())
+    assert spec == P(("pod", "data"), None)
+
+
+def test_singlepod_batch_skips_missing_pod_axis():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for((256, 4096), ("batch", "seq"), mesh, rules())
+    assert spec == P("data", None)
+
+
+def test_seq_parallel_activation_rule():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = shd.spec_for((256, 4096, 4096),
+                        ("act_batch", "act_seq", "act_embed"), mesh,
+                        rules())
+    assert spec == P("data", "model", None)
+
+
+def test_decode_ruleset_shards_cache_seq_when_heads_cannot():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    r = shd.RULESETS["decode"]
+    # glm4: kv_heads=2 not divisible -> cache_seq takes model
+    spec = shd.spec_for((40, 128, 32768, 2, 128),
+                        ("layers", "batch", "cache_seq", "kv_heads",
+                         "head_dim"), mesh, r)
+    assert spec == P(None, "data", "model", None, None)
+    # olmo: kv=16 divisible -> heads take model, seq replicated
+    spec = shd.spec_for((16, 128, 32768, 16, 128),
+                        ("layers", "batch", "cache_seq", "kv_heads",
+                         "head_dim"), mesh, r)
+    assert spec == P(None, "data", None, "model", None)
+
+
+def test_tree_specs_roundtrip():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.common import axes_tree
+    from repro.models.registry import build_model
+    mesh = FakeMesh({"data": 2, "model": 2})
+    m = build_model(get_smoke_config("glm4-9b"))
+    specs = shd.tree_specs(m.param_shapes(), axes_tree(m.param_defs()),
+                           mesh, rules())
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+    assert len(flat) == len(jax.tree.leaves(m.param_shapes()))
+
+
+def test_dryrun_collective_parser():
+    """The HLO collective parser sums result-buffer bytes per op kind."""
+    import importlib
+    import os
+    import subprocess
+    import sys
+    # import the parser without triggering the 512-device XLA_FLAGS in
+    # this process: run in a subprocess
+    code = """
+import sys; sys.path.insert(0, 'src')
+from repro.launch.dryrun import parse_collectives, collective_link_bytes
+hlo = '''
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={}
+  %ar = bf16[1024]{0} all-reduce(%y), to_apply=%add
+  %aa = s8[2,2]{1,0} all-to-all(%z)
+  %cp = f32[4]{0} collective-permute-start(%w)
+  %no = f32[8]{0} add(%a, %b)
+'''
+out = parse_collectives(hlo)
+assert out['bytes']['all-gather'] == 16*128*4, out
+assert out['bytes']['all-reduce'] == 1024*2
+assert out['bytes']['all-to-all'] == 4
+assert out['bytes']['collective-permute'] == 16
+assert out['counts']['all-gather'] == 1
+lb = collective_link_bytes(out)
+assert lb == 2*1024*2 + 16*128*4 + 4 + 16
+print('ok')
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "ok" in r.stdout

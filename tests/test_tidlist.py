@@ -1,0 +1,64 @@
+"""Unit + property tests for TID bitmap machinery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tidlist
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    bits = rng.random((13, 70)) < 0.4
+    packed = tidlist.pack_bool(bits)
+    assert packed.dtype == np.uint32
+    back = tidlist.unpack_bool(packed, 70)
+    np.testing.assert_array_equal(back, bits)
+
+
+def test_popcount_matches_python():
+    rng = np.random.default_rng(1)
+    xs = rng.integers(0, 2 ** 32, size=1000, dtype=np.uint32)
+    got = tidlist.popcount32(xs)
+    want = np.array([bin(int(x)).count("1") for x in xs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_database_supports():
+    db = [[0, 1], [1, 2], [0, 1, 2], [1]]
+    bm = tidlist.pack_database(db, 3)
+    sup = tidlist.popcount32(bm).sum(axis=1)
+    np.testing.assert_array_equal(sup, [2, 4, 2])
+
+
+def test_support_counts_prefix():
+    db = [[0, 1, 2], [0, 1], [1, 2], [0, 2]]
+    bm = tidlist.pack_database(db, 3)
+    # prefix = item 0; extensions 1, 2
+    counts = tidlist.support_counts(bm[0], bm[[1, 2]])
+    assert counts.tolist() == [2, 2]   # {0,1}: t0,t1 ; {0,2}: t0,t3
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 19), max_size=10), min_size=1,
+                max_size=40))
+def test_property_support_equals_set_intersection(db):
+    db = [sorted(set(t)) for t in db]
+    bm = tidlist.pack_database(db, 20)
+    tids = {i: {t for t, txn in enumerate(db) if i in txn}
+            for i in range(20)}
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        items = rng.choice(20, size=rng.integers(1, 4), replace=False)
+        want = set.intersection(*(tids[i] for i in items)) \
+            if len(items) else set()
+        got = tidlist.support_of(bm[list(items)])
+        assert got == len(want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 100))
+def test_property_pack_shape(n_items, n_tx):
+    bits = np.zeros((n_items, n_tx), bool)
+    packed = tidlist.pack_bool(bits)
+    assert packed.shape == (n_items, tidlist.n_words(n_tx))
+    assert tidlist.popcount32(packed).sum() == 0
