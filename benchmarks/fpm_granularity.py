@@ -1,0 +1,110 @@
+"""A/B: task granularity — one task per candidate vs one task per
+prefix-bucket (the vectorized bucket sweep through the join-backend
+layer). Same policies, same supports; the contrast is wall-clock and
+measured locality traffic (rows-touched / bytes-swept).
+
+This is the shared-memory engine's version of the clustered-vs-round-
+robin placement contrast in benchmarks/fpm_distributed.py: the bucket
+engine turns the clustered policy's incidental cache locality into
+structure, so the speedup here is the paper's locality win expressed as
+work reduction (one prefix intersection + one vectorized sweep per
+bucket instead of a scalar join per candidate).
+
+Emits ``BENCH_granularity.json`` so the perf trajectory is recorded.
+Run ``--smoke`` for the CI-sized variant (~2 min).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+from repro.core.fpm import mine
+from repro.core.tidlist import pack_database
+from repro.data.transactions import load
+
+#                 scale  support
+SETUP = {
+    "mushroom": (8, 0.15),
+    "chess":    (64, 0.68),
+}
+SMOKE_SETUP = {
+    "mushroom": (2, 0.15),
+    "chess":    (4, 0.72),
+}
+
+
+def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
+        policies=("clustered", "cilk"), backend: str = "auto",
+        smoke: bool = False, repeats: int = 1) -> List[Dict]:
+    setup = SMOKE_SETUP if smoke else SETUP
+    rows = []
+    for name in datasets:
+        scale, frac = setup[name]
+        db, prof = load(name, seed=0, scale=scale)
+        n_items = (prof.n_dense_items if prof.kind == "dense"
+                   else prof.n_items)
+        bm = pack_database(db, n_items)
+        ms = max(1, int(frac * len(db)))
+        for policy in policies:
+            rec: Dict = {"dataset": f"synth:{name}", "policy": policy,
+                         "support": frac, "n_workers": n_workers,
+                         "max_k": max_k, "backend": backend}
+            counts = {}
+            for gran in ("candidate", "bucket"):
+                best = float("inf")
+                for _ in range(repeats):
+                    res, met = mine(bm, ms, policy=policy,
+                                    n_workers=n_workers, max_k=max_k,
+                                    granularity=gran, backend=backend)
+                    best = min(best, met.wall_s)
+                counts[gran] = res
+                rec[f"{gran}_s"] = best
+                rec[f"{gran}_rows_touched"] = met.rows_touched
+                rec[f"{gran}_bytes_swept"] = met.bytes_swept
+                rec[f"{gran}_tasks"] = int(met.scheduler["tasks_run"])
+                rec["frequent"] = met.frequent
+            assert counts["candidate"] == counts["bucket"], \
+                f"granularity mismatch on {name}/{policy}"
+            rec["speedup"] = rec["candidate_s"] / max(rec["bucket_s"],
+                                                      1e-9)
+            rows.append(rec)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized datasets (~2 min)")
+    ap.add_argument("--datasets", nargs="*", default=["mushroom", "chess"])
+    ap.add_argument("--policies", nargs="*", default=["clustered", "cilk"])
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--max-k", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_granularity.json")
+    args = ap.parse_args(argv)
+
+    rows = run(args.datasets, n_workers=args.n_workers, max_k=args.max_k,
+               policies=tuple(args.policies), backend=args.backend,
+               smoke=args.smoke)
+    payload = {
+        "bench": "fpm_granularity",
+        "smoke": args.smoke,
+        "backend": args.backend,
+        "results": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print("bench,us_per_call,derived")
+    for r in rows:
+        print(f"granularity_{r['dataset']}_{r['policy']},"
+              f"{r['bucket_s'] * 1e6:.0f},"
+              f"speedup={r['speedup']:.2f}x;"
+              f"rows={r['bucket_rows_touched']}vs"
+              f"{r['candidate_rows_touched']}")
+    print(f"# wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

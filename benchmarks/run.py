@@ -2,6 +2,7 @@
 benches. Prints ``name,us_per_call,derived`` CSV rows.
 
   fpm_policies     Fig. 1  (normalized runtimes, Cilk vs Clustered)
+  fpm_granularity  bucket-sweep vs per-candidate tasks (smoke sizes)
   fpm_locality     Table 1 (locality metrics)
   fpm_scaling      worker scaling
   fpm_distributed  clustered vs round-robin placement on an 8-dev mesh
@@ -14,12 +15,13 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fpm_distributed, fpm_locality, fpm_policies,
-                        fpm_scaling, kernels_bench, moe_dispatch, roofline,
-                        serve_bench)
+from benchmarks import (fpm_distributed, fpm_granularity, fpm_locality,
+                        fpm_policies, fpm_scaling, kernels_bench,
+                        moe_dispatch, roofline, serve_bench)
 
 ALL = [
     ("fpm_policies", fpm_policies.main),
+    ("fpm_granularity", lambda: fpm_granularity.main(["--smoke"])),
     ("fpm_locality", fpm_locality.main),
     ("fpm_scaling", fpm_scaling.main),
     ("fpm_distributed", fpm_distributed.main),

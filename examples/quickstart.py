@@ -1,9 +1,13 @@
 """Quickstart: the paper's system in 60 seconds.
 
 1. Generate a transaction database (FIMI-profile synthetic).
-2. Mine it with the Cilk-style policy, then the clustered policy.
-3. Show the locality metrics that explain the difference (the paper's
-   Fig. 1 + Table 1 story).
+2. Mine it with the Cilk-style policy, then the clustered policy, at
+   candidate granularity (one scalar join per task — the paper's §2
+   setting) and show the locality metrics that explain the difference
+   (the Fig. 1 + Table 1 story).
+3. Re-mine at bucket granularity: one task per (k-1)-prefix, the prefix
+   intersection computed once, all extensions swept in one vectorized
+   call through the join backend — the same locality, made structural.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -27,7 +31,7 @@ def main():
 
     for policy in ("cilk", "clustered"):
         res, met = mine(bitmaps, min_support, policy=policy,
-                        n_workers=4, max_k=4)
+                        n_workers=4, max_k=4, granularity="candidate")
         assert res == ref
         s = met.scheduler
         print(f"[{policy:9s}] wall={met.wall_s:6.2f}s  "
@@ -38,7 +42,23 @@ def main():
     print("\nThe clustered policy runs tasks that share a (k-1)-prefix "
           "back-to-back\non one worker, so the prefix intersection is "
           "computed once and reused —\nthe paper's dTLB/IPC win, "
-          "observable here as the cache-hit-rate gap.")
+          "observable here as the cache-hit-rate gap.\n")
+
+    for gran in ("candidate", "bucket"):
+        res, met = mine(bitmaps, min_support, policy="clustered",
+                        n_workers=4, max_k=4, granularity=gran)
+        assert res == ref
+        print(f"[granularity={gran:9s}] wall={met.wall_s:6.2f}s  "
+              f"tasks={int(met.scheduler['tasks_run']):6d}  "
+              f"rows touched={met.rows_touched:8d}  "
+              f"bytes swept={met.bytes_swept:10d}")
+
+    print("\nBucket granularity makes the bucket the unit of task "
+          "execution: the\nprefix intersection happens once per bucket "
+          "and the extensions are swept\nwith one vectorized "
+          "join-backend call (numpy ufuncs here; the Pallas\n"
+          "bitmap_join kernel on TPU) — fewer rows touched, fewer "
+          "tasks, same\nsupports.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""Prefix-bucket planning, shared by the shared-memory and distributed
+engines.
+
+The paper's clustered policy groups level-k candidate tasks by their
+(k-1)-prefix (§4). Both mining engines need exactly that grouping —
+``repro.core.fpm`` to make the *bucket* the unit of task execution
+(prefix intersection computed once, extensions swept vectorized) and
+``repro.core.distributed_fpm`` to place whole buckets on devices. This
+module is the single definition of that structure plus the locality
+accounting (rows-touched / bytes-swept) both engines report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.itemsets import Itemset, prefix_hash
+
+BYTES_PER_WORD = 4                    # uint32 TID-bitmap words
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """All level-k candidates sharing one (k-1)-prefix.
+
+    ``key`` is the paper's XOR'd prefix hash (the clustered policy's
+    bucket key); ``exts`` are the candidates' last items, sorted, so the
+    bucket's candidate set is ``{prefix + (e,) for e in exts}``.
+    """
+    key: int
+    prefix: Itemset
+    exts: Tuple[int, ...]
+
+    def __len__(self) -> int:
+        return len(self.exts)
+
+    def candidates(self) -> List[Itemset]:
+        return [self.prefix + (e,) for e in self.exts]
+
+
+def group_by_prefix(cands: Sequence[Itemset]) -> List[Bucket]:
+    """Group candidates by (k-1)-prefix, preserving first-seen prefix
+    order (Apriori's gen_candidates emits prefixes contiguously, so this
+    is also prefix-sorted order for sorted inputs)."""
+    groups: Dict[Tuple[int, Itemset], List[int]] = {}
+    for c in cands:
+        groups.setdefault((prefix_hash(c), c[:-1]), []).append(c[-1])
+    return [Bucket(h, pref, tuple(sorted(ext)))
+            for (h, pref), ext in groups.items()]
+
+
+def bucket_rows_touched(prefix_len: int, n_exts: int) -> int:
+    """Bitmap rows a bucket sweep reads: the (k-1) prefix rows once,
+    plus one row per extension (the clustered/bucket cost model; the
+    per-candidate model is ``k`` rows per candidate, no reuse)."""
+    return prefix_len + n_exts
+
+
+def candidate_rows_touched(k: int, n_cands: int) -> int:
+    """Rows read when every candidate performs its full k-way join."""
+    return k * n_cands
+
+
+def rows_to_bytes(rows: int, n_words: int) -> int:
+    """Bitmap rows -> bytes of TID-bitmap traffic."""
+    return rows * n_words * BYTES_PER_WORD

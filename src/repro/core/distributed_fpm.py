@@ -33,8 +33,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.itemsets import Itemset, gen_candidates, prefix_hash
 from repro.core import tidlist
+from repro.core.buckets import (bucket_rows_touched, candidate_rows_touched,
+                                group_by_prefix, rows_to_bytes)
+from repro.core.itemsets import Itemset, gen_candidates
 
 
 # ---------------------------------------------------------------------------
@@ -59,20 +61,20 @@ class RoundRobinPlan:
 
 def plan_clustered(cands: Sequence[Itemset], n_dev: int,
                    items_per_dev: int = 0) -> ClusteredPlan:
-    buckets: Dict[Tuple[int, Itemset], List[int]] = {}
-    for c in cands:
-        buckets.setdefault((prefix_hash(c), c[:-1]), []).append(c[-1])
+    """Place whole prefix-buckets on devices (bucket grouping shared
+    with the shared-memory engine via repro.core.buckets)."""
+    buckets = group_by_prefix(cands)
     loads = np.zeros(n_dev, np.int64)
-    per_dev: List[List[Tuple[Itemset, List[int]]]] = [[] for _ in
-                                                      range(n_dev)]
-    for (h, pref), ext in sorted(buckets.items(),
-                                 key=lambda kv: (-len(kv[1]), kv[0][0])):
+    per_dev: List[List[Tuple[Itemset, Tuple[int, ...]]]] = [
+        [] for _ in range(n_dev)]
+    for b in sorted(buckets, key=lambda b: (-len(b), b.key)):
+        pref, ext = b.prefix, b.exts
         owner = (min(pref[0] // items_per_dev, n_dev - 1)
                  if items_per_dev else pref[0] % n_dev)
         tgt = int(np.argmin(loads))
         if loads[owner] > 2 * loads[tgt] + len(ext):
             owner = tgt                       # steal the whole bucket
-        per_dev[owner].append((pref, sorted(ext)))
+        per_dev[owner].append((pref, ext))
         loads[owner] += len(ext)
     k = len(cands[0])
     max_b = max(1, max(len(v) for v in per_dev))
@@ -86,7 +88,7 @@ def plan_clustered(cands: Sequence[Itemset], n_dev: int,
             prefixes[d, b] = pref
             exts[d, b, :len(ext)] = ext
             order[d].extend(pref + (e,) for e in ext)
-            rows += (k - 1) + len(ext)
+            rows += bucket_rows_touched(k - 1, len(ext))
     return ClusteredPlan(prefixes, exts, order, rows)
 
 
@@ -100,7 +102,7 @@ def plan_round_robin(cands: Sequence[Itemset], n_dev: int) -> RoundRobinPlan:
     for d, lst in enumerate(per_dev):
         for j, c in enumerate(lst):
             arr[d, j] = c
-    rows = sum(k * len(lst) for lst in per_dev)
+    rows = sum(candidate_rows_touched(k, len(lst)) for lst in per_dev)
     return RoundRobinPlan(arr, per_dev, rows)
 
 
@@ -173,7 +175,8 @@ def mine_distributed(bitmaps: np.ndarray, min_support: int, mesh: Mesh,
         (i,): int(supports[i]) for i in range(n_items)
         if supports[i] >= min_support}
     frequent = sorted(result)
-    stats = {"levels": 0, "candidates": 0, "rows_touched": 0}
+    stats = {"levels": 0, "candidates": 0, "rows_touched": 0,
+             "bytes_swept": 0}
 
     k = 2
     while frequent and k <= max_k:
@@ -217,6 +220,8 @@ def mine_distributed(bitmaps: np.ndarray, min_support: int, mesh: Mesh,
         else:
             raise ValueError(policy)
         stats["rows_touched"] += plan.rows_touched
+        stats["bytes_swept"] += rows_to_bytes(plan.rows_touched,
+                                              bitmaps.shape[1])
 
         frequent = []
         for d in range(n_dev):

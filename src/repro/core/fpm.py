@@ -1,11 +1,25 @@
 """Apriori-based FPM on the task scheduler — the paper's application.
 
-One task per candidate k-itemset (paper §2). The per-task join reuses a
-per-worker-thread LRU cache of *prefix intersections*: tasks that share a
-(k-1)-prefix hit the cache iff they run back-to-back on the same worker —
-exactly the locality the clustered policy creates and the Cilk-style
-policy destroys. The cache hit-rate is this reproduction's analogue of
-the paper's dTLB/IPC counters (measured, reported in benchmarks).
+Two task granularities (the paper's key knob, cf. "Redesigning pattern
+mining algorithms for supercomputers"):
+
+  granularity="candidate"  one task per candidate k-itemset (paper §2).
+      The per-task join reuses a per-worker-thread LRU cache of *prefix
+      intersections*: tasks that share a (k-1)-prefix hit the cache iff
+      they run back-to-back on the same worker — exactly the locality
+      the clustered policy creates and the Cilk-style policy destroys.
+  granularity="bucket"     one task per (k-1)-prefix bucket (default).
+      The task computes the prefix intersection ONCE and sweeps all of
+      the bucket's extensions with one vectorized call through a
+      pluggable join backend (numpy ufuncs or the Pallas bitmap_join
+      kernel — repro.core.join_backend). This turns the clustered
+      policy's incidental cache locality into structure: the prefix
+      bitmap stays register/VMEM-resident across the whole sweep.
+
+Both granularities return identical supports under every policy. The
+cache hit-rate (candidate) and rows-touched/bytes-swept counters (both,
+shared with repro.core.distributed_fpm) are this reproduction's
+analogue of the paper's dTLB/IPC counters.
 """
 from __future__ import annotations
 
@@ -13,13 +27,17 @@ import collections
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core import tidlist
+from repro.core.buckets import Bucket, group_by_prefix, rows_to_bytes
 from repro.core.itemsets import (Itemset, gen_candidates, prefix_hash)
+from repro.core.join_backend import make_selector
 from repro.core.scheduler import TaskScheduler, make_policy
+
+GRANULARITIES = ("bucket", "candidate")
 
 
 @dataclass
@@ -27,10 +45,13 @@ class MiningMetrics:
     wall_s: float = 0.0
     levels: int = 0
     candidates: int = 0
+    buckets: int = 0
     frequent: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
     cache_partial_hits: int = 0
+    rows_touched: int = 0        # bitmap rows actually read (measured)
+    bytes_swept: int = 0         # rows_touched * W * 4
     scheduler: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -45,7 +66,10 @@ class _PrefixCache:
     *Hierarchical*: a miss on ABC first checks AB — if present, only one
     extra AND is needed. With the nearest-neighbour policy (the paper's
     §6 future work) neighbouring buckets share sub-prefixes, so partial
-    reuse crosses bucket boundaries."""
+    reuse crosses bucket boundaries.
+
+    ``get`` also returns the number of bitmap rows it read to build the
+    intersection (0 on a full hit) — the measured locality traffic."""
 
     def __init__(self, maxsize: int = 32):
         self.maxsize = maxsize
@@ -61,12 +85,12 @@ class _PrefixCache:
             self.d.popitem(last=False)
 
     def get(self, prefix: Itemset, bitmaps: np.ndarray
-            ) -> np.ndarray:
+            ) -> Tuple[np.ndarray, int]:
         d = self.d
         if prefix in d:
             d.move_to_end(prefix)
             self.hits += 1
-            return d[prefix]
+            return d[prefix], 0
         self.misses += 1
         # hierarchical fallback: longest cached ancestor prefix
         for cut in range(len(prefix) - 1, 1, -1):
@@ -78,18 +102,40 @@ class _PrefixCache:
                 for item in prefix[cut:]:
                     bm = bm & bitmaps[item]
                 self._put(prefix, bm)
-                return bm
+                return bm, len(prefix) - cut
         bm = tidlist.intersect(bitmaps[list(prefix)])
         self._put(prefix, bm)
-        return bm
+        return bm, len(prefix)
+
+
+def _raise_task_errors(tasks) -> None:
+    """Surface the first task-body exception on the driver thread (the
+    scheduler records it instead of letting the worker die, which would
+    deadlock wait_all)."""
+    for t in tasks:
+        if t.error is not None:
+            raise t.error
 
 
 def mine(bitmaps: np.ndarray, min_support: int, *,
          policy: str = "clustered", n_workers: int = 8,
          max_k: int = 8, cache_size: int = 32,
+         granularity: str = "bucket", backend: str = "auto",
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
-    """bitmaps: [n_items, W] uint32 packed TID bitmaps."""
-    n_items = bitmaps.shape[0]
+    """bitmaps: [n_items, W] uint32 packed TID bitmaps.
+
+    ``granularity`` selects the unit of scheduler task: "bucket" (one
+    task per (k-1)-prefix, vectorized extension sweep) or "candidate"
+    (one scalar join per candidate — kept for A/B benchmarking).
+    ``backend`` names the bucket-sweep executor ("auto", "numpy",
+    "pallas-interpret", "pallas-jit"; see repro.core.join_backend).
+    """
+    if granularity not in GRANULARITIES:
+        raise ValueError(
+            f"granularity must be one of {GRANULARITIES}, "
+            f"got {granularity!r}")
+    n_items, n_w = bitmaps.shape
+    select = make_selector(backend)
     metrics = MiningMetrics()
     t0 = time.time()
 
@@ -112,21 +158,42 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
                 c = caches.setdefault(tid, _PrefixCache(cache_size))
         return c
 
+    def _prefix_bitmap(cache: _PrefixCache, prefix: Itemset
+                       ) -> Tuple[np.ndarray, int]:
+        if len(prefix) == 1:
+            return bitmaps[prefix[0]], 1        # no reuse term at k=2
+        return cache.get(prefix, bitmaps)
+
+    def _account(rows: int) -> None:
+        st = sched.worker_stats()
+        st.rows_touched += rows
+        st.bytes_swept += rows_to_bytes(rows, n_w)
+
     def count_task(cand: Itemset) -> int:
         cache = _thread_cache()
-        prefix = cand[:-1]
-        if len(prefix) == 1:
-            pbm = bitmaps[prefix[0]]            # 2-itemsets: no reuse term
-        else:
-            pbm = cache.get(prefix, bitmaps)
+        pbm, prows = _prefix_bitmap(cache, cand[:-1])
+        _account(prows + 1)
         return int(tidlist.popcount32(pbm & bitmaps[cand[-1]]).sum())
 
-    # task attr = (bucket_key, itemset): the key is the paper's XOR'd
-    # prefix hash, precomputed once so queue ops stay O(1). The
-    # nearest-neighbour policy keys buckets by the prefix tuple itself
-    # (it needs item overlap between bucket keys).
-    cluster_of = ((lambda a: a[1][:-1]) if policy == "nn"
-                  else (lambda a: a[0]))
+    def sweep_task(bucket: Bucket) -> np.ndarray:
+        """Bucket-granularity body: prefix intersection once, then one
+        vectorized sweep over all extensions. Returns [E] counts."""
+        cache = _thread_cache()
+        pbm, prows = _prefix_bitmap(cache, bucket.prefix)
+        _account(prows + len(bucket.exts))
+        exts = bitmaps[list(bucket.exts)]
+        return select(len(bucket.exts)).sweep(pbm, exts)
+
+    # task attr = (bucket_key, itemset-or-prefix): the key is the
+    # paper's XOR'd prefix hash, precomputed once so queue ops stay
+    # O(1). The nearest-neighbour policy keys buckets by the prefix
+    # tuple itself (it needs item overlap between bucket keys).
+    if granularity == "bucket":
+        cluster_of = ((lambda a: a[1]) if policy == "nn"
+                      else (lambda a: a[0]))
+    else:
+        cluster_of = ((lambda a: a[1][:-1]) if policy == "nn"
+                      else (lambda a: a[0]))
     sched = TaskScheduler(n_workers,
                           make_policy(policy, n_workers, cluster_of))
     try:
@@ -137,14 +204,32 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
                 break
             metrics.levels += 1
             metrics.candidates += len(cands)
-            tasks = [sched.spawn(count_task, c, attr=(prefix_hash(c), c))
-                     for c in cands]
-            sched.wait_all()
             frequent = []
-            for c, t in zip(cands, tasks):
-                if t.result >= min_support:
-                    result[c] = t.result
-                    frequent.append(c)
+            if granularity == "bucket":
+                plan = group_by_prefix(cands)
+                metrics.buckets += len(plan)
+                tasks = [sched.spawn(sweep_task, b,
+                                     attr=(b.key, b.prefix))
+                         for b in plan]
+                sched.wait_all()
+                _raise_task_errors(tasks)
+                for b, t in zip(plan, tasks):
+                    counts = t.result
+                    for e, s in zip(b.exts, counts):
+                        if s >= min_support:
+                            c = b.prefix + (e,)
+                            result[c] = int(s)
+                            frequent.append(c)
+            else:
+                tasks = [sched.spawn(count_task, c,
+                                     attr=(prefix_hash(c), c))
+                         for c in cands]
+                sched.wait_all()
+                _raise_task_errors(tasks)
+                for c, t in zip(cands, tasks):
+                    if t.result >= min_support:
+                        result[c] = t.result
+                        frequent.append(c)
             frequent.sort()
             metrics.frequent += len(frequent)
             k += 1
@@ -153,6 +238,8 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
 
     metrics.wall_s = time.time() - t0
     metrics.scheduler = sched.merged_stats()
+    metrics.rows_touched = int(metrics.scheduler["rows_touched"])
+    metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
     metrics.cache_hits = sum(c.hits for c in caches.values())
     metrics.cache_misses = sum(c.misses for c in caches.values())
     metrics.cache_partial_hits = sum(c.partial_hits

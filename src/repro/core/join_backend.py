@@ -1,0 +1,147 @@
+"""Pluggable join backends for the bucket-sweep mining engine.
+
+A *bucket sweep* is the paper's per-task TID join restructured at bucket
+granularity: given one (k-1)-prefix bitmap and the bucket's E extension
+bitmaps, produce the E support counts in one vectorized call. Three
+interchangeable executors:
+
+  numpy             ``tidlist.support_counts`` — one fused AND+popcount
+                    ufunc pass, GIL-released, the right choice for the
+                    threaded shared-memory scheduler on CPU.
+  pallas-interpret  the Pallas ``bitmap_join`` kernel under the Pallas
+                    interpreter — bit-exact with the TPU kernel,
+                    runnable anywhere (parity tests, debugging).
+  pallas-jit        the compiled Pallas kernel — TPU only; keeps the
+                    prefix tile VMEM-resident across the extension
+                    sweep (the clustered policy's reuse, structural).
+
+``make_selector`` returns the per-bucket choice function the engine
+uses: backends are picked by extension count, so tiny buckets skip
+kernel-launch overhead while large buckets get the tiled sweep.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import tidlist
+
+# Buckets at least this wide amortize a Pallas kernel launch (one E-tile
+# of the kernel's grid); narrower buckets stay on the numpy path.
+PALLAS_MIN_EXTS = 256
+
+_jax_lock = threading.Lock()
+
+
+class JoinBackend:
+    """sweep(prefix, exts) -> counts. prefix: [W] uint32; exts: [E, W]
+    uint32; counts: [E] int64."""
+
+    name: str = "base"
+
+    def sweep(self, prefix: np.ndarray, exts: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<JoinBackend {self.name}>"
+
+
+class NumpyBackend(JoinBackend):
+    name = "numpy"
+
+    def sweep(self, prefix, exts):
+        return tidlist.support_counts(prefix, exts)
+
+
+class _PallasBackend(JoinBackend):
+    """Shared plumbing: numpy in, numpy out, jax under a lock (jax
+    dispatch is not re-entrant across scheduler worker threads)."""
+
+    mode = "pallas-interpret"
+
+    def sweep(self, prefix, exts):
+        import jax.numpy as jnp
+
+        from repro.kernels.bitmap_join.ops import bitmap_join
+        with _jax_lock:
+            out = bitmap_join(jnp.asarray(prefix), jnp.asarray(exts),
+                              mode=self.mode)
+            return np.asarray(out).astype(np.int64)
+
+
+class PallasInterpretBackend(_PallasBackend):
+    name = "pallas-interpret"
+    mode = "pallas-interpret"
+
+
+class PallasJitBackend(_PallasBackend):
+    name = "pallas-jit"
+    mode = "pallas-jit"
+
+
+_REGISTRY: Dict[str, Callable[[], JoinBackend]] = {
+    "numpy": NumpyBackend,
+    "pallas-interpret": PallasInterpretBackend,
+    "pallas-jit": PallasJitBackend,
+}
+_instances: Dict[str, JoinBackend] = {}
+
+
+def get_backend(name: str) -> JoinBackend:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown join backend {name!r}; known: {sorted(_REGISTRY)}")
+    b = _instances.get(name)
+    if b is None:
+        b = _instances[name] = _REGISTRY[name]()
+    return b
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - jax always present here
+        return False
+
+
+def available_backends() -> List[str]:
+    """Backends that can execute on this host. The compiled Pallas
+    kernel only lowers on TPU; the interpreter runs anywhere."""
+    names = ["numpy", "pallas-interpret"]
+    if _on_tpu():
+        names.append("pallas-jit")
+    return names
+
+
+Selector = Callable[[int], JoinBackend]
+
+
+def make_selector(spec: str = "auto",
+                  min_pallas_exts: int = PALLAS_MIN_EXTS) -> Selector:
+    """Per-bucket backend choice, keyed by extension count.
+
+    ``spec`` is either a backend name (constant choice) or "auto":
+    numpy for narrow buckets, the Pallas kernel (compiled on TPU) for
+    buckets wide enough to fill a kernel E-tile. On CPU "auto" is
+    always numpy — the interpreter is a correctness tool, not a fast
+    path.
+    """
+    if spec != "auto":
+        avail = available_backends()
+        if spec not in avail:
+            # fail fast: an unavailable backend must error here, not
+            # inside a scheduler worker thread mid-mine
+            get_backend(spec)                 # unknown name -> ValueError
+            raise ValueError(
+                f"join backend {spec!r} is not available on this host "
+                f"(available: {avail})")
+        backend = get_backend(spec)
+        return lambda n_exts: backend
+    small = get_backend("numpy")
+    if not _on_tpu():
+        return lambda n_exts: small
+    big = get_backend("pallas-jit")
+    return lambda n_exts: big if n_exts >= min_pallas_exts else small

@@ -36,6 +36,7 @@ class Task:
     args: Tuple
     attr: Any = None          # task attribute (paper: the itemset ref)
     result: Any = None
+    error: Optional[BaseException] = None   # set if the body raised
 
 
 @dataclass
@@ -45,6 +46,11 @@ class WorkerStats:
     tasks_stolen: int = 0     # tasks acquired via steals
     steal_attempts: int = 0   # victim probes (incl. empty)
     bucket_switches: int = 0  # clustered: times the drain bucket changed
+    # locality traffic counters, shared with the distributed engine's
+    # plan accounting (repro.core.buckets): task bodies add the bitmap
+    # rows/bytes they swept via TaskScheduler.worker_stats()
+    rows_touched: int = 0
+    bytes_swept: int = 0
 
 
 class SchedulingPolicy:
@@ -219,6 +225,9 @@ class TaskScheduler:
         self.n = n_workers
         self.policy = policy
         self.stats = [WorkerStats() for _ in range(n_workers)]
+        self._tls = threading.local()
+        self._external_stats = WorkerStats()   # non-worker threads
+        self._spawned = 0
         self._outstanding = 0
         self._cv = threading.Condition()
         self._stop = False
@@ -243,6 +252,7 @@ class TaskScheduler:
             else:
                 worker = self._spawn_rr = (self._spawn_rr + 1) % self.n
         with self._cv:
+            self._spawned += 1
             self._outstanding += 1
         self.policy.put(worker, task)
         with self._cv:
@@ -252,6 +262,13 @@ class TaskScheduler:
     def wait_all(self):
         with self._cv:
             self._cv.wait_for(lambda: self._outstanding == 0)
+
+    def worker_stats(self) -> WorkerStats:
+        """The calling thread's WorkerStats. Task bodies use this to
+        account locality traffic (rows_touched / bytes_swept); calls
+        from non-worker threads land in a shared fallback bucket that
+        merged_stats() still includes."""
+        return getattr(self._tls, "stats", self._external_stats)
 
     def shutdown(self):
         with self._cv:
@@ -283,6 +300,7 @@ class TaskScheduler:
 
     def _worker(self, i: int):
         st = self.stats[i]
+        self._tls.stats = st
         while True:
             task = self._acquire(i)
             if task is None:
@@ -294,7 +312,11 @@ class TaskScheduler:
                         continue
                 time.sleep(0.0002)
                 continue
-            task.result = task.fn(*task.args)
+            try:
+                task.result = task.fn(*task.args)
+            except BaseException as e:  # noqa: BLE001 - must not leak:
+                task.error = e          # a dead worker would deadlock
+                                        # wait_all (outstanding never 0)
             st.tasks_run += 1
             with self._cv:
                 self._outstanding -= 1
@@ -303,16 +325,19 @@ class TaskScheduler:
 
     # ------------------------------------------------------------ stats --
     def merged_stats(self) -> Dict[str, float]:
-        s = self.stats
+        s = list(self.stats) + [self._external_stats]
         total = sum(w.tasks_run for w in s)
         steals = sum(w.steals for w in s)
         return {
             "tasks_run": total,
+            "spawned": self._spawned,
             "steals": steals,
             "tasks_stolen": sum(w.tasks_stolen for w in s),
             "steal_attempts": sum(w.steal_attempts for w in s),
             "tasks_per_steal": (sum(w.tasks_stolen for w in s)
                                 / max(steals, 1)),
+            "rows_touched": sum(w.rows_touched for w in s),
+            "bytes_swept": sum(w.bytes_swept for w in s),
         }
 
 

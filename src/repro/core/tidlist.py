@@ -76,6 +76,20 @@ def support_of(bitmap_rows: np.ndarray) -> int:
     return int(popcount32(intersect(bitmap_rows)).sum())
 
 
-def support_counts(prefix: np.ndarray, exts: np.ndarray) -> np.ndarray:
-    """counts[e] = |prefix ∩ exts[e]|. prefix: [W]; exts: [E, W]."""
-    return popcount32(exts & prefix[None, :]).sum(axis=1)
+def support_counts(prefix: np.ndarray, exts: np.ndarray,
+                   chunk: int = 4096) -> np.ndarray:
+    """counts[e] = |prefix ∩ exts[e]|. prefix: [W]; exts: [E, W].
+
+    This is the numpy bucket-sweep: one fused AND+popcount pass with the
+    prefix row broadcast (cache-resident) across all extensions — the
+    vectorized analogue of the Pallas bitmap_join kernel. ``chunk``
+    bounds the [chunk, W] temporary so very wide buckets don't blow the
+    cache/working set."""
+    e = exts.shape[0]
+    if e <= chunk:
+        return popcount32(exts & prefix[None, :]).sum(axis=1)
+    out = np.empty(e, dtype=np.int64)
+    for lo in range(0, e, chunk):
+        hi = min(lo + chunk, e)
+        out[lo:hi] = popcount32(exts[lo:hi] & prefix[None, :]).sum(axis=1)
+    return out

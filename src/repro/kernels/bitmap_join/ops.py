@@ -7,11 +7,31 @@ import jax.numpy as jnp
 from repro.kernels.bitmap_join.kernel import bitmap_join_kernel
 from repro.kernels.bitmap_join.ref import bitmap_join_ref
 
+MODES = ("auto", "ref", "pallas-interpret", "pallas-jit")
+
 
 def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
                 *, use_pallas: bool | None = None,
-                interpret: bool | None = None) -> jnp.ndarray:
-    """Support counts of prefix∧ext for a cluster of extension bitmaps."""
+                interpret: bool | None = None,
+                mode: str = "auto") -> jnp.ndarray:
+    """Support counts of prefix∧ext for a cluster of extension bitmaps.
+
+    ``mode`` names an execution strategy explicitly (used by
+    ``repro.core.join_backend``): "ref" runs the jnp oracle, "pallas-jit"
+    compiles the Pallas kernel for the current backend, and
+    "pallas-interpret" runs the same kernel under the Pallas interpreter
+    (bit-exact with "pallas-jit", available on CPU). "auto" keeps the
+    legacy behaviour: Pallas on TPU, jnp ref elsewhere, unless the
+    ``use_pallas``/``interpret`` flags override it.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "ref":
+        return jax.jit(bitmap_join_ref)(prefix, exts)
+    if mode == "pallas-interpret":
+        return bitmap_join_kernel(prefix, exts, interpret=True)
+    if mode == "pallas-jit":
+        return bitmap_join_kernel(prefix, exts, interpret=False)
     on_tpu = jax.default_backend() == "tpu"
     if use_pallas is None:
         use_pallas = on_tpu

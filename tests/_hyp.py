@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim: property tests must never break collection.
+
+Test modules import ``given``, ``settings`` and ``st`` from here instead
+of from ``hypothesis`` directly. On a bare interpreter (no hypothesis —
+the seed suite hard-failed at collection on this) every ``@given`` test
+becomes a cleanly-skipped zero-arg test; everything else in the module
+still collects and runs. With hypothesis installed this module is a
+pass-through re-export.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Accepts any strategy-building call chain and returns itself,
+        so module-level strategy expressions evaluate harmlessly."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _Strategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # a fresh zero-arg function: pytest must not mistake the
+            # strategy parameters for fixtures
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

@@ -1,0 +1,147 @@
+"""Bucket-sweep engine: planning, equivalence across policies ×
+granularities × datasets, locality accounting, property tests."""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import tidlist
+from repro.core.buckets import (bucket_rows_touched,
+                                candidate_rows_touched, group_by_prefix,
+                                rows_to_bytes)
+from repro.core.fpm import mine, mine_serial
+from repro.core.itemsets import (brute_force_frequent, gen_candidates,
+                                 prefix_hash)
+from repro.core.tidlist import pack_database
+from repro.data.transactions import load
+
+POLICIES = ["cilk", "fifo", "clustered", "nn"]
+
+
+# ------------------------------------------------------------- planning
+def test_group_by_prefix_partitions_candidates():
+    cands = [(0, 1, 2), (0, 1, 5), (0, 1, 3), (2, 3, 4), (2, 3, 9)]
+    buckets = group_by_prefix(cands)
+    assert len(buckets) == 2
+    regen = [c for b in buckets for c in b.candidates()]
+    assert sorted(regen) == sorted(cands)
+    for b in buckets:
+        assert b.exts == tuple(sorted(b.exts))
+        assert b.key == prefix_hash(b.prefix + (b.exts[0],))
+
+
+def test_group_by_prefix_on_real_candidates():
+    db, p = load("mushroom", seed=0)
+    bm = pack_database(db[:200], p.n_dense_items)
+    freq = sorted(mine_serial(bm, 60, max_k=2))
+    cands = gen_candidates([f for f in freq if len(f) == 2])
+    buckets = group_by_prefix(cands)
+    assert sum(len(b) for b in buckets) == len(cands)
+    assert len({b.prefix for b in buckets}) == len(buckets)
+
+
+def test_traffic_model_bucket_beats_candidate():
+    # 1 bucket of E extensions at level k: (k-1)+E rows vs k*E rows
+    k, e = 4, 32
+    assert bucket_rows_touched(k - 1, e) < candidate_rows_touched(k, e)
+    assert rows_to_bytes(10, 8) == 10 * 8 * 4
+
+
+# ---------------------------------------------------------- equivalence
+@pytest.fixture(scope="module")
+def datasets():
+    out = {}
+    for name, n_txn, frac in [("mushroom", 250, 0.3), ("chess", 150, 0.8)]:
+        db, p = load(name, seed=0)
+        db = db[:n_txn]
+        bm = pack_database(db, p.n_dense_items)
+        ms = int(frac * len(db))
+        out[name] = (db, bm, ms)
+    return out
+
+
+@pytest.mark.parametrize("name", ["mushroom", "chess"])
+def test_serial_matches_brute_force(datasets, name):
+    db, bm, ms = datasets[name]
+    assert mine_serial(bm, ms, max_k=4) == brute_force_frequent(
+        db, ms, max_k=4)
+
+
+@pytest.mark.parametrize("granularity", ["bucket", "candidate"])
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("name", ["mushroom", "chess"])
+def test_engine_equivalence(datasets, name, policy, granularity):
+    """The acceptance matrix: every policy × both granularities returns
+    supports identical to the serial reference, on two datasets."""
+    db, bm, ms = datasets[name]
+    ref = mine_serial(bm, ms, max_k=4)
+    got, met = mine(bm, ms, policy=policy, n_workers=3, max_k=4,
+                    granularity=granularity)
+    assert got == ref, (name, policy, granularity)
+    assert met.scheduler["tasks_run"] == met.scheduler["spawned"]
+
+
+def test_bucket_rows_touched_below_candidate(datasets):
+    """Locality, measured: the bucket sweep reads each prefix once."""
+    _, bm, ms = datasets["mushroom"]
+    _, m_b = mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                  granularity="bucket")
+    _, m_c = mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                  granularity="candidate")
+    assert 0 < m_b.rows_touched < m_c.rows_touched
+    assert 0 < m_b.bytes_swept < m_c.bytes_swept
+
+
+def test_explicit_backends_agree(datasets):
+    _, bm, ms = datasets["mushroom"]
+    ref = mine_serial(bm, ms, max_k=3)
+    for backend in ("numpy", "pallas-interpret"):
+        got, _ = mine(bm, ms, policy="clustered", n_workers=2, max_k=3,
+                      backend=backend)
+        assert got == ref, backend
+
+
+def test_bad_granularity_raises(datasets):
+    _, bm, ms = datasets["mushroom"]
+    with pytest.raises(ValueError, match="granularity"):
+        mine(bm, ms, granularity="itemset")
+
+
+# ------------------------------------------------------ property tests
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 15), max_size=8), min_size=1,
+                max_size=30))
+def test_property_pack_unpack_roundtrip(db):
+    db = [sorted(set(t)) for t in db]
+    bits = np.zeros((16, len(db)), dtype=bool)
+    for t, txn in enumerate(db):
+        for i in txn:
+            bits[i, t] = True
+    packed = tidlist.pack_bool(bits)
+    back = tidlist.unpack_bool(packed, len(db))
+    np.testing.assert_array_equal(back, bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 30), st.integers(0, 2 ** 31))
+def test_property_support_counts_vs_naive_loop(e, w, seed):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, 2 ** 32, size=w, dtype=np.uint32)
+    exts = rng.integers(0, 2 ** 32, size=(e, w), dtype=np.uint32)
+    got = tidlist.support_counts(prefix, exts)
+    want = [sum(bin(int(prefix[j]) & int(exts[i, j])).count("1")
+                for j in range(w)) for i in range(e)]
+    np.testing.assert_array_equal(got, np.array(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_bucket_engine_equals_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    db = [sorted(rng.choice(10, size=rng.integers(1, 6),
+                            replace=False).tolist()) for _ in range(40)]
+    ms = int(rng.integers(2, 10))
+    ref = brute_force_frequent(db, ms, max_k=4)
+    bm = pack_database(db, 10)
+    got, _ = mine(bm, ms, policy="clustered", n_workers=2, max_k=4,
+                  granularity="bucket")
+    assert got == ref

@@ -8,6 +8,11 @@ import textwrap
 
 import pytest
 
+# every test here spawns a multi-device XLA subprocess — minutes each;
+# tier-1 (`pytest -q`, addopts -m 'not slow') deselects the module
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(600)]
+
+
 def run_py(code: str, n_dev: int = 8, timeout: int = 560) -> str:
     env = {"XLA_FLAGS":
            f"--xla_force_host_platform_device_count={n_dev}",

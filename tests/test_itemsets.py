@@ -1,6 +1,6 @@
 """Candidate generation + prefix hash tests (paper §2, §4)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.itemsets import (brute_force_frequent, gen_candidates,
                                  prefix_hash)

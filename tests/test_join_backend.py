@@ -1,0 +1,103 @@
+"""Join-backend layer: numpy vs Pallas parity, per-bucket selection."""
+import numpy as np
+import pytest
+
+from repro.core import join_backend as jb
+from repro.core import tidlist
+
+RNG = np.random.default_rng(7)
+
+
+def rand_bitmaps(e, w):
+    prefix = RNG.integers(0, 2 ** 32, size=w, dtype=np.uint32)
+    exts = RNG.integers(0, 2 ** 32, size=(e, w), dtype=np.uint32)
+    return prefix, exts
+
+
+def naive_counts(prefix, exts):
+    return np.array([sum(bin(int(prefix[w]) & int(exts[i, w])).count("1")
+                         for w in range(len(prefix)))
+                     for i in range(exts.shape[0])], dtype=np.int64)
+
+
+@pytest.mark.parametrize("e,w", [(1, 1), (5, 9), (33, 64)])
+def test_numpy_backend_matches_naive(e, w):
+    prefix, exts = rand_bitmaps(e, w)
+    got = jb.get_backend("numpy").sweep(prefix, exts)
+    np.testing.assert_array_equal(got, naive_counts(prefix, exts))
+
+
+@pytest.mark.parametrize("e,w", [(3, 8), (17, 40)])
+def test_numpy_vs_pallas_interpret_parity(e, w):
+    """The kernel path must be bit-exact with the numpy ufunc path."""
+    prefix, exts = rand_bitmaps(e, w)
+    a = jb.get_backend("numpy").sweep(prefix, exts)
+    b = jb.get_backend("pallas-interpret").sweep(prefix, exts)
+    np.testing.assert_array_equal(a, b)
+    assert b.dtype == np.int64
+
+
+def test_support_counts_chunked_matches_unchunked():
+    prefix, exts = rand_bitmaps(50, 16)
+    full = tidlist.support_counts(prefix, exts)
+    chunked = tidlist.support_counts(prefix, exts, chunk=7)
+    np.testing.assert_array_equal(full, chunked)
+
+
+def test_get_backend_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown join backend"):
+        jb.get_backend("cuda")
+
+
+def test_selector_constant_for_named_backend():
+    sel = jb.make_selector("pallas-interpret")
+    assert sel(1).name == "pallas-interpret"
+    assert sel(10_000).name == "pallas-interpret"
+
+
+def test_selector_auto_is_numpy_on_cpu():
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("auto selection differs on TPU")
+    sel = jb.make_selector("auto")
+    assert sel(1).name == "numpy"
+    assert sel(jb.PALLAS_MIN_EXTS * 4).name == "numpy"
+
+
+def test_available_backends_always_has_cpu_paths():
+    names = jb.available_backends()
+    assert "numpy" in names and "pallas-interpret" in names
+
+
+def test_ops_mode_dispatch_parity():
+    import jax.numpy as jnp
+
+    from repro.kernels.bitmap_join.ops import bitmap_join
+    prefix, exts = rand_bitmaps(9, 12)
+    ref = bitmap_join(jnp.asarray(prefix), jnp.asarray(exts), mode="ref")
+    itp = bitmap_join(jnp.asarray(prefix), jnp.asarray(exts),
+                      mode="pallas-interpret")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(itp))
+    with pytest.raises(ValueError, match="mode"):
+        bitmap_join(jnp.asarray(prefix), jnp.asarray(exts), mode="gpu")
+
+
+def test_unavailable_backend_fails_fast():
+    """pallas-jit off-TPU must raise at selector creation — not inside
+    a scheduler worker thread mid-mine (regression: this deadlocked
+    wait_all before the scheduler recorded task errors)."""
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("pallas-jit is available on TPU")
+    with pytest.raises(ValueError, match="not available"):
+        jb.make_selector("pallas-jit")
+
+
+def test_mine_with_unavailable_backend_raises_not_hangs():
+    import jax
+    if jax.default_backend() == "tpu":
+        pytest.skip("pallas-jit is available on TPU")
+    from repro.core.fpm import mine
+    bm = RNG.integers(0, 2 ** 32, size=(6, 2), dtype=np.uint32)
+    with pytest.raises(ValueError, match="not available"):
+        mine(bm, 1, n_workers=2, max_k=3, backend="pallas-jit")

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.bitmap_join.kernel import bitmap_join_kernel
 from repro.kernels.bitmap_join.ops import bitmap_join

@@ -14,6 +14,12 @@ from repro.models.registry import build_model
 
 KEY = jax.random.PRNGKey(0)
 
+# the heaviest smoke configs (~20 s compile+run each) ride in the slow
+# tier (`pytest -m slow`); tier-1 keeps one arch per family fast
+HEAVY_ARCHS = {"dbrx-132b", "zamba2-1.2b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+               if a in HEAVY_ARCHS else a for a in ARCH_IDS]
+
 
 def _batch(cfg, b=2, s=32):
     toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
@@ -24,7 +30,7 @@ def _batch(cfg, b=2, s=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
     m = build_model(cfg)
@@ -44,7 +50,7 @@ def test_smoke_forward_and_train_step(arch):
     assert np.isfinite(gnorm) and gnorm > 0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_decode_matches_apply(arch):
     cfg = get_smoke_config(arch).with_(dtype="float32")
     if cfg.moe:
@@ -115,9 +121,11 @@ def test_sliding_window_attention_masks_far_tokens():
     assert float(jnp.max(jnp.abs(full[:, -1] - win[:, -1]))) > 1e-4
 
 
+@pytest.mark.slow
 def test_ring_buffer_decode_matches_full_cache_inside_window():
     """Hybrid long-ctx: ring-buffer window cache == full cache + window
-    mask, for positions beyond the window."""
+    mask, for positions beyond the window. (zamba2 smoke config — the
+    heaviest compile in the suite, so it rides in the slow tier.)"""
     from repro.models import attention as mattn
     cfg = get_smoke_config("zamba2-1.2b").with_(dtype="float32")
     m = build_model(cfg)

@@ -142,3 +142,114 @@ def test_nn_policy_mines_correctly():
     ref = mine_serial(bm, 8, max_k=4)
     got, met = mine(bm, 8, policy="nn", n_workers=3, max_k=4)
     assert got == ref
+
+
+# ----------------------------------------------- bucket-task regressions
+def test_bucket_tasks_returning_arrays():
+    """Bucket-granularity tasks return numpy arrays; results must come
+    back per-task, un-mangled, under the clustered policy's bucket
+    steals."""
+    import numpy as np
+    pol = ClusteredPolicy(3, cluster_of=lambda a: a[0])
+    sched = TaskScheduler(3, pol)
+
+    def sweep(base, n):
+        return np.arange(base, base + n)
+
+    tasks = [sched.spawn(sweep, i * 10, 4, attr=(i % 5, i))
+             for i in range(40)]
+    sched.wait_all()
+    sched.shutdown()
+    for i, t in enumerate(tasks):
+        np.testing.assert_array_equal(t.result,
+                                      np.arange(i * 10, i * 10 + 4))
+
+
+def test_nested_spawn_during_drain():
+    """A task spawning sub-tasks mid-drain must not let wait_all return
+    early, deadlock, or lose tasks (steal/shutdown regression)."""
+    pol = ClusteredPolicy(3, cluster_of=lambda a: a)
+    sched = TaskScheduler(3, pol)
+    ran = []
+    lock = threading.Lock()
+
+    def child(i):
+        with lock:
+            ran.append(("child", i))
+
+    def parent(i):
+        sched.spawn(child, i, attr=i + 100)
+        with lock:
+            ran.append(("parent", i))
+
+    for i in range(20):
+        sched.spawn(parent, i, attr=i)
+    sched.wait_all()
+    assert sched._outstanding == 0
+    assert len(ran) == 40
+    s = sched.merged_stats()
+    assert s["tasks_run"] == s["spawned"] == 40
+    sched.shutdown()
+
+
+def test_wait_all_zero_outstanding_and_stats_invariant():
+    """After wait_all: zero outstanding, tasks_run == spawned, and the
+    scheduler is reusable for another wave (level-synchronous mining)."""
+    sched = TaskScheduler(4, make_policy("clustered", 4, lambda a: a))
+    for wave in range(3):
+        for i in range(50):
+            sched.spawn(lambda x: x, i, attr=i % 7)
+        sched.wait_all()
+        assert sched._outstanding == 0
+        s = sched.merged_stats()
+        assert s["tasks_run"] == s["spawned"] == 50 * (wave + 1)
+    sched.shutdown()
+    # shutdown is idempotent and leaves stats intact
+    sched.shutdown()
+    assert sched.merged_stats()["tasks_run"] == 150
+
+
+def test_worker_stats_traffic_counters():
+    """Task bodies account rows/bytes via worker_stats(); merged_stats
+    must include them (shared locality metric with distributed_fpm)."""
+    sched = TaskScheduler(2, make_policy("cilk", 2))
+
+    def body(rows):
+        st = sched.worker_stats()
+        st.rows_touched += rows
+        st.bytes_swept += rows * 8
+        return rows
+
+    for i in range(10):
+        sched.spawn(body, 3, attr=i)
+    sched.wait_all()
+    sched.shutdown()
+    s = sched.merged_stats()
+    assert s["rows_touched"] == 30
+    assert s["bytes_swept"] == 240
+    # calls from a non-worker thread land in the external bucket
+    sched.worker_stats().rows_touched += 5
+    assert sched.merged_stats()["rows_touched"] == 35
+
+
+def test_task_exception_does_not_deadlock_wait_all():
+    """A raising task body must not kill the worker (which would leave
+    _outstanding stuck and deadlock wait_all); the error is recorded on
+    the task instead."""
+    sched = TaskScheduler(2, CilkPolicy(2))
+
+    def boom(i):
+        if i == 3:
+            raise RuntimeError("kaboom")
+        return i
+
+    tasks = [sched.spawn(boom, i, attr=i) for i in range(6)]
+    sched.wait_all()                     # must return, not hang
+    sched.shutdown()
+    assert sched._outstanding == 0
+    errs = [t for t in tasks if t.error is not None]
+    assert len(errs) == 1
+    assert isinstance(errs[0].error, RuntimeError)
+    assert all(t.result == i for i, t in enumerate(tasks) if i != 3)
+    s = sched.merged_stats()
+    assert s["tasks_run"] == s["spawned"] == 6

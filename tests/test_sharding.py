@@ -86,6 +86,8 @@ def test_tree_specs_roundtrip():
     assert len(flat) == len(jax.tree.leaves(m.param_shapes()))
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(300)
 def test_dryrun_collective_parser():
     """The HLO collective parser sums result-buffer bytes per op kind."""
     import importlib

@@ -1,7 +1,7 @@
 """Unit + property tests for TID bitmap machinery."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import tidlist
 
