@@ -8,6 +8,10 @@
 3. Re-mine at bucket granularity: one task per (k-1)-prefix, the prefix
    intersection computed once, all extensions swept in one vectorized
    call through the join backend — the same locality, made structural.
+4. Re-mine depth-first: barrier-free equivalence-class recursion where
+   each task spawns its child classes and hands each child its already-
+   intersected prefix bitmap — no barriers, no prefix recomputation,
+   the LRU cache vestigial (zero misses).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -44,21 +48,29 @@ def main():
           "computed once and reused —\nthe paper's dTLB/IPC win, "
           "observable here as the cache-hit-rate gap.\n")
 
-    for gran in ("candidate", "bucket"):
+    for gran in ("candidate", "bucket", "depth-first"):
         res, met = mine(bitmaps, min_support, policy="clustered",
                         n_workers=4, max_k=4, granularity=gran)
         assert res == ref
-        print(f"[granularity={gran:9s}] wall={met.wall_s:6.2f}s  "
+        print(f"[granularity={gran:11s}] wall={met.wall_s:6.2f}s  "
               f"tasks={int(met.scheduler['tasks_run']):6d}  "
               f"rows touched={met.rows_touched:8d}  "
-              f"bytes swept={met.bytes_swept:10d}")
+              f"cache misses={met.cache_misses:6d}  "
+              f"peak retained bitmaps={met.peak_retained_bitmaps}")
 
     print("\nBucket granularity makes the bucket the unit of task "
           "execution: the\nprefix intersection happens once per bucket "
           "and the extensions are swept\nwith one vectorized "
           "join-backend call (numpy ufuncs here; the Pallas\n"
           "bitmap_join kernel on TPU) — fewer rows touched, fewer "
-          "tasks, same\nsupports.")
+          "tasks, same\nsupports.\n\n"
+          "Depth-first granularity goes barrier-free: each class task "
+          "spawns its\nchild equivalence classes onto its own worker "
+          "and hands each child the\nalready-intersected prefix∧ext "
+          "bitmap, so no prefix is ever recomputed\n(cache misses: "
+          "zero) and only one terminal wait remains. The price is\n"
+          "the retained-bitmap peak printed above — bounded by "
+          "depth-first drain\norder, and measured.")
 
 
 if __name__ == "__main__":

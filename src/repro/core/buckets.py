@@ -61,6 +61,19 @@ def candidate_rows_touched(k: int, n_cands: int) -> int:
     return k * n_cands
 
 
+def class_rows_touched(n_exts: int, n_children: int) -> int:
+    """Rows a depth-first equivalence-class task reads: its parent-handed
+    prefix bitmap (1 row — never recomputed, where the bucket model pays
+    ``k-1`` prefix rows per bucket), one row per extension in the sweep,
+    and one row per *frequent* child whose bitmap it materializes for
+    the handoff. Per-class the comparison vs the bucket model's
+    ``(k-1) + E`` can go either way (the handoff saves ``k-2`` prefix
+    rows but pays ``C`` materializations, and Eclat sweeps candidates
+    Apriori's cross-class prune would drop), so total traffic is an
+    empirical question the granularity benchmark measures."""
+    return 1 + n_exts + n_children
+
+
 def rows_to_bytes(rows: int, n_words: int) -> int:
     """Bitmap rows -> bytes of TID-bitmap traffic."""
     return rows * n_words * BYTES_PER_WORD

@@ -1,25 +1,36 @@
-"""Apriori-based FPM on the task scheduler — the paper's application.
+"""Apriori/Eclat FPM on the task scheduler — the paper's application.
 
-Two task granularities (the paper's key knob, cf. "Redesigning pattern
+Three task granularities (the paper's key knob, cf. "Redesigning pattern
 mining algorithms for supercomputers"):
 
-  granularity="candidate"  one task per candidate k-itemset (paper §2).
+  granularity="candidate"    one task per candidate k-itemset (paper §2).
       The per-task join reuses a per-worker-thread LRU cache of *prefix
       intersections*: tasks that share a (k-1)-prefix hit the cache iff
       they run back-to-back on the same worker — exactly the locality
       the clustered policy creates and the Cilk-style policy destroys.
-  granularity="bucket"     one task per (k-1)-prefix bucket (default).
+  granularity="bucket"       one task per (k-1)-prefix bucket (default).
       The task computes the prefix intersection ONCE and sweeps all of
       the bucket's extensions with one vectorized call through a
       pluggable join backend (numpy ufuncs or the Pallas bitmap_join
-      kernel — repro.core.join_backend). This turns the clustered
-      policy's incidental cache locality into structure: the prefix
-      bitmap stays register/VMEM-resident across the whole sweep.
+      kernel — repro.core.join_backend). Level-synchronous: a driver
+      barrier separates level k from level k+1.
+  granularity="depth-first"  barrier-free equivalence-class recursion.
+      Each task owns one class (prefix P, sibling extensions E): it
+      sweeps E through the join backend, records the frequent
+      extensions, forms the child classes P+(e,) × {siblings > e}
+      Eclat-style (no global candidate generation), materializes each
+      child's ``prefix ∧ ext`` bitmap exactly once and *hands it to the
+      child task* — so no child ever recomputes or cache-probes a
+      prefix intersection. Children spawn onto the spawning worker's
+      queue (steals move whole subtrees); the deepest class drains
+      first, bounding retained handoff bitmaps; one terminal
+      ``wait_all`` replaces every inter-level barrier.
 
-Both granularities return identical supports under every policy. The
-cache hit-rate (candidate) and rows-touched/bytes-swept counters (both,
-shared with repro.core.distributed_fpm) are this reproduction's
-analogue of the paper's dTLB/IPC counters.
+All granularities return identical supports under every policy. The
+cache hit-rate (candidate), rows-touched/bytes-swept counters (all,
+shared with repro.core.distributed_fpm) and peak-retained-bitmap gauge
+(depth-first) are this reproduction's analogue of the paper's dTLB/IPC
+counters.
 """
 from __future__ import annotations
 
@@ -32,12 +43,14 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core import tidlist
-from repro.core.buckets import Bucket, group_by_prefix, rows_to_bytes
-from repro.core.itemsets import (Itemset, gen_candidates, prefix_hash)
+from repro.core.buckets import (Bucket, class_rows_touched, group_by_prefix,
+                                rows_to_bytes)
+from repro.core.itemsets import (Itemset, gen_candidates, itemset_hash,
+                                 prefix_hash)
 from repro.core.join_backend import make_selector
 from repro.core.scheduler import TaskScheduler, make_policy
 
-GRANULARITIES = ("bucket", "candidate")
+GRANULARITIES = ("bucket", "candidate", "depth-first")
 
 
 @dataclass
@@ -52,6 +65,10 @@ class MiningMetrics:
     cache_partial_hits: int = 0
     rows_touched: int = 0        # bitmap rows actually read (measured)
     bytes_swept: int = 0         # rows_touched * W * 4
+    # depth-first handoff gauges: how many materialized child bitmaps
+    # (and their bytes) were alive at once — the engine's memory bound
+    peak_retained_bitmaps: int = 0
+    peak_bytes_retained: int = 0
     scheduler: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -69,7 +86,11 @@ class _PrefixCache:
     reuse crosses bucket boundaries.
 
     ``get`` also returns the number of bitmap rows it read to build the
-    intersection (0 on a full hit) — the measured locality traffic."""
+    intersection (0 on a full hit) — the measured locality traffic.
+
+    The depth-first engine never touches this cache: the parent→child
+    bitmap handoff makes it vestigial on that path (cache_misses == 0
+    structurally)."""
 
     def __init__(self, maxsize: int = 32):
         self.maxsize = maxsize
@@ -117,6 +138,29 @@ def _raise_task_errors(tasks) -> None:
             raise t.error
 
 
+def _level1(bitmaps: np.ndarray, min_support: int
+            ) -> Tuple[Dict[Itemset, int], List[Itemset]]:
+    """Level 1, shared by every engine: dense popcount, no tasks."""
+    supports = tidlist.popcount32(bitmaps).sum(axis=1)
+    result: Dict[Itemset, int] = {
+        (i,): int(supports[i]) for i in range(bitmaps.shape[0])
+        if supports[i] >= min_support}
+    return result, sorted(result)
+
+
+def _cluster_fn(granularity: str, policy: str):
+    """Task attr -> queue-bucket key. attr = (prefix_hash, itemset-or-
+    prefix): the hash is the paper's XOR'd prefix hash, precomputed once
+    so queue ops stay O(1). The nearest-neighbour policy keys buckets by
+    the prefix tuple itself (it needs item overlap between bucket keys).
+    """
+    if granularity == "candidate":
+        return ((lambda a: a[1][:-1]) if policy == "nn"
+                else (lambda a: a[0]))
+    return ((lambda a: a[1]) if policy == "nn"
+            else (lambda a: a[0]))
+
+
 def mine(bitmaps: np.ndarray, min_support: int, *,
          policy: str = "clustered", n_workers: int = 8,
          max_k: int = 8, cache_size: int = 32,
@@ -125,8 +169,10 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
     ``granularity`` selects the unit of scheduler task: "bucket" (one
-    task per (k-1)-prefix, vectorized extension sweep) or "candidate"
-    (one scalar join per candidate — kept for A/B benchmarking).
+    task per (k-1)-prefix, vectorized extension sweep), "candidate"
+    (one scalar join per candidate — kept for A/B benchmarking), or
+    "depth-first" (barrier-free equivalence-class recursion with
+    parent→child bitmap handoff).
     ``backend`` names the bucket-sweep executor ("auto", "numpy",
     "pallas-interpret", "pallas-jit"; see repro.core.join_backend).
     """
@@ -134,20 +180,44 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
         raise ValueError(
             f"granularity must be one of {GRANULARITIES}, "
             f"got {granularity!r}")
-    n_items, n_w = bitmaps.shape
     select = make_selector(backend)
     metrics = MiningMetrics()
     t0 = time.time()
 
-    # level 1: dense count (no tasks — same in both policies)
-    supports = tidlist.popcount32(bitmaps).sum(axis=1)
-    result: Dict[Itemset, int] = {
-        (i,): int(supports[i]) for i in range(n_items)
-        if supports[i] >= min_support}
-    frequent: List[Itemset] = sorted(result)
+    result, frequent = _level1(bitmaps, min_support)
     metrics.frequent += len(frequent)
 
+    sched = TaskScheduler(n_workers,
+                          make_policy(policy, n_workers,
+                                      _cluster_fn(granularity, policy)))
     caches: Dict[int, _PrefixCache] = {}        # thread ident -> cache
+    try:
+        if granularity == "depth-first":
+            _mine_depth_first(bitmaps, min_support, max_k, select, sched,
+                              metrics, result, frequent)
+        else:
+            _mine_levelwise(bitmaps, min_support, max_k, select, sched,
+                            metrics, result, frequent, granularity,
+                            cache_size, caches)
+    finally:
+        sched.shutdown()
+
+    metrics.wall_s = time.time() - t0
+    metrics.scheduler = sched.merged_stats()
+    metrics.rows_touched = int(metrics.scheduler["rows_touched"])
+    metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
+    metrics.cache_hits = sum(c.hits for c in caches.values())
+    metrics.cache_misses = sum(c.misses for c in caches.values())
+    metrics.cache_partial_hits = sum(c.partial_hits
+                                     for c in caches.values())
+    return result, metrics
+
+
+def _mine_levelwise(bitmaps, min_support, max_k, select, sched, metrics,
+                    result, frequent, granularity, cache_size, caches):
+    """Level-synchronous engines: plan level k, spawn, barrier, plan
+    level k+1 (the paper's §2 shape, at candidate or bucket grain)."""
+    n_w = bitmaps.shape[1]
     lock = threading.Lock()
 
     def _thread_cache() -> _PrefixCache:
@@ -184,78 +254,150 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
         exts = bitmaps[list(bucket.exts)]
         return select(len(bucket.exts)).sweep(pbm, exts)
 
-    # task attr = (bucket_key, itemset-or-prefix): the key is the
-    # paper's XOR'd prefix hash, precomputed once so queue ops stay
-    # O(1). The nearest-neighbour policy keys buckets by the prefix
-    # tuple itself (it needs item overlap between bucket keys).
-    if granularity == "bucket":
-        cluster_of = ((lambda a: a[1]) if policy == "nn"
-                      else (lambda a: a[0]))
-    else:
-        cluster_of = ((lambda a: a[1][:-1]) if policy == "nn"
-                      else (lambda a: a[0]))
-    sched = TaskScheduler(n_workers,
-                          make_policy(policy, n_workers, cluster_of))
-    try:
-        k = 2
-        while frequent and k <= max_k:
-            cands = gen_candidates(frequent)
-            if not cands:
-                break
-            metrics.levels += 1
-            metrics.candidates += len(cands)
-            frequent = []
-            if granularity == "bucket":
-                plan = group_by_prefix(cands)
-                metrics.buckets += len(plan)
-                tasks = [sched.spawn(sweep_task, b,
-                                     attr=(b.key, b.prefix))
-                         for b in plan]
-                sched.wait_all()
-                _raise_task_errors(tasks)
-                for b, t in zip(plan, tasks):
-                    counts = t.result
-                    for e, s in zip(b.exts, counts):
-                        if s >= min_support:
-                            c = b.prefix + (e,)
-                            result[c] = int(s)
-                            frequent.append(c)
-            else:
-                tasks = [sched.spawn(count_task, c,
-                                     attr=(prefix_hash(c), c))
-                         for c in cands]
-                sched.wait_all()
-                _raise_task_errors(tasks)
-                for c, t in zip(cands, tasks):
-                    if t.result >= min_support:
-                        result[c] = t.result
+    k = 2
+    while frequent and k <= max_k:
+        cands = gen_candidates(frequent)
+        if not cands:
+            break
+        metrics.levels += 1
+        metrics.candidates += len(cands)
+        frequent = []
+        if granularity == "bucket":
+            plan = group_by_prefix(cands)
+            metrics.buckets += len(plan)
+            tasks = [sched.spawn(sweep_task, b,
+                                 attr=(b.key, b.prefix))
+                     for b in plan]
+            sched.wait_all()
+            _raise_task_errors(tasks)
+            for b, t in zip(plan, tasks):
+                counts = t.result
+                for e, s in zip(b.exts, counts):
+                    if s >= min_support:
+                        c = b.prefix + (e,)
+                        result[c] = int(s)
                         frequent.append(c)
-            frequent.sort()
-            metrics.frequent += len(frequent)
-            k += 1
-    finally:
-        sched.shutdown()
+        else:
+            tasks = [sched.spawn(count_task, c,
+                                 attr=(prefix_hash(c), c))
+                     for c in cands]
+            sched.wait_all()
+            _raise_task_errors(tasks)
+            for c, t in zip(cands, tasks):
+                if t.result >= min_support:
+                    result[c] = t.result
+                    frequent.append(c)
+        frequent.sort()
+        metrics.frequent += len(frequent)
+        k += 1
 
-    metrics.wall_s = time.time() - t0
-    metrics.scheduler = sched.merged_stats()
-    metrics.rows_touched = int(metrics.scheduler["rows_touched"])
-    metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
-    metrics.cache_hits = sum(c.hits for c in caches.values())
-    metrics.cache_misses = sum(c.misses for c in caches.values())
-    metrics.cache_partial_hits = sum(c.partial_hits
-                                     for c in caches.values())
-    return result, metrics
+
+def _mine_depth_first(bitmaps, min_support, max_k, select, sched,
+                      metrics, result, frequent):
+    """Barrier-free engine: tasks spawn child equivalence classes.
+
+    A task = one equivalence class (P, E): sweep the |E| extensions
+    against the parent-handed prefix bitmap, record frequent
+    extensions, then for each frequent sibling e (except the last)
+    materialize ``pbm ∧ bitmaps[e]`` ONCE and spawn the child class
+    (P+(e,), {frequent siblings > e}) with that bitmap. The child
+    never recomputes a prefix intersection — the handoff replaces the
+    LRU cache entirely. Eclat shape: no global candidate generation,
+    no Apriori cross-class prune (supports are identical; a few extra
+    infrequent candidates get swept).
+
+    Memory bound: a handed bitmap is retained from spawn until its
+    task finishes. With depth-first drain order (scheduler) and
+    spawn-onto-own-worker placement, each worker holds O(depth ×
+    branching) live bitmaps instead of a whole level's worth; the
+    peak is measured in ``metrics.peak_retained_bitmaps`` /
+    ``peak_bytes_retained``.
+    """
+    n_w = bitmaps.shape[1]
+    lock = threading.Lock()
+    all_tasks: List = []
+    retained_n = retained_bytes = 0
+
+    def _retain(nbytes: int) -> None:
+        nonlocal retained_n, retained_bytes
+        retained_n += 1
+        retained_bytes += nbytes
+        metrics.peak_retained_bitmaps = max(metrics.peak_retained_bitmaps,
+                                            retained_n)
+        metrics.peak_bytes_retained = max(metrics.peak_bytes_retained,
+                                          retained_bytes)
+
+    def _release(nbytes: int) -> None:
+        nonlocal retained_n, retained_bytes
+        retained_n -= 1
+        retained_bytes -= nbytes
+
+    def class_task(prefix: Itemset, pbm: np.ndarray,
+                   exts: Tuple[int, ...], owned: bool) -> None:
+        try:
+            k = len(prefix) + 1                 # size of swept itemsets
+            backend = select(len(exts))
+            counts = backend.sweep(pbm, bitmaps[list(exts)])
+            freq = [(e, int(s)) for e, s in zip(exts, counts)
+                    if s >= min_support]
+            sibs = [e for e, _ in freq]         # ascending (exts sorted)
+            children: List[Tuple[Itemset, np.ndarray, Tuple[int, ...]]] \
+                = []
+            if k < max_k and len(freq) > 1:
+                children = [(prefix + (e,),
+                             backend.materialize(pbm, bitmaps[e]),
+                             tuple(sibs[i + 1:]))
+                            for i, e in enumerate(sibs[:-1])]
+            rows = class_rows_touched(len(exts), len(children))
+            st = sched.worker_stats()
+            st.rows_touched += rows
+            st.bytes_swept += rows_to_bytes(rows, n_w)
+            # ONE lock round-trip per class for metrics + retains (the
+            # retain must precede the spawn: a fast child could finish
+            # and _release before a late _retain, skewing the gauge)
+            with lock:
+                metrics.buckets += 1
+                metrics.candidates += len(exts)
+                metrics.levels = max(metrics.levels, k - 1)
+                metrics.frequent += len(freq)
+                for e, s in freq:
+                    result[prefix + (e,)] = s
+                for _, cbm, _ in children:
+                    _retain(cbm.nbytes)
+            if not children:
+                return
+            spawned = [sched.spawn(class_task, cprefix, cbm, csibs, True,
+                                   attr=(itemset_hash(cprefix), cprefix),
+                                   depth=len(cprefix))
+                       for cprefix, cbm, csibs in children]
+            with lock:
+                all_tasks.extend(spawned)
+        finally:
+            if owned:
+                with lock:
+                    _release(pbm.nbytes)
+
+    if max_k >= 2 and len(frequent) > 1:
+        items = [p[0] for p in frequent]        # sorted singleton items
+        for i, it in enumerate(items[:-1]):
+            # root classes hand the base bitmap row itself (a view —
+            # nothing materialized, nothing retained)
+            t = sched.spawn(class_task, (it,), bitmaps[it],
+                            tuple(items[i + 1:]), False,
+                            attr=(itemset_hash((it,)), (it,)),
+                            depth=1)
+            with lock:    # already-running roots append concurrently
+                all_tasks.append(t)
+    sched.wait_all()                            # the ONLY wait
+    with lock:
+        tasks = list(all_tasks)
+    _raise_task_errors(tasks)
 
 
 def mine_serial(bitmaps: np.ndarray, min_support: int, max_k: int = 8
                 ) -> Dict[Itemset, int]:
     """Single-threaded reference (no scheduler)."""
-    n_items = bitmaps.shape[0]
-    supports = tidlist.popcount32(bitmaps).sum(axis=1)
-    result: Dict[Itemset, int] = {
-        (i,): int(supports[i]) for i in range(n_items)
-        if supports[i] >= min_support}
-    frequent = sorted(result)
+    result, frequent = _level1(bitmaps, min_support)
     k = 2
     while frequent and k <= max_k:
         cands = gen_candidates(frequent)

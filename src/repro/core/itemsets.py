@@ -21,13 +21,20 @@ def _mix(x: int) -> int:
     return x ^ (x >> 31)
 
 
+def itemset_hash(items: Iterable[int]) -> int:
+    """XOR of per-item mixing hashes — the paper's §4 combiner. Used
+    directly by the depth-first engine to key an equivalence class by
+    its full prefix."""
+    h = 0
+    for item in items:
+        h ^= _mix(item)
+    return h
+
+
 def prefix_hash(itemset: Itemset) -> int:
     """Paper §4: XOR of per-item hashes over the first (k-1) items —
     itemsets sharing a (k-1)-prefix land in the same bucket."""
-    h = 0
-    for item in itemset[:-1]:
-        h ^= _mix(item)
-    return h
+    return itemset_hash(itemset[:-1])
 
 
 def prefix_of(itemset: Itemset) -> Itemset:

@@ -44,6 +44,16 @@ class JoinBackend:
     def sweep(self, prefix: np.ndarray, exts: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
+    def materialize(self, prefix: np.ndarray, ext: np.ndarray
+                    ) -> np.ndarray:
+        """prefix ∧ ext as a fresh owned array — the parent→child bitmap
+        handoff of the depth-first engine. Computed exactly once per
+        frequent child; the child never recomputes or cache-probes its
+        prefix intersection. One ufunc pass on every backend (the
+        Pallas backends sweep counts on device but materialize child
+        bitmaps host-side, where the scheduler hands them off)."""
+        return prefix & ext
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<JoinBackend {self.name}>"
 

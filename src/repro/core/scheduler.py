@@ -25,7 +25,6 @@ from __future__ import annotations
 import collections
 import random
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -35,6 +34,7 @@ class Task:
     fn: Callable[..., Any]
     args: Tuple
     attr: Any = None          # task attribute (paper: the itemset ref)
+    depth: int = 0            # prefix depth: deeper tasks drain first
     result: Any = None
     error: Optional[BaseException] = None   # set if the body raised
 
@@ -111,7 +111,17 @@ class ClusteredPolicy(SchedulingPolicy):
 
     ``cluster_of(attr)`` maps a task attribute to its bucket key (for FPM:
     XOR of item hashes over the (k-1)-prefix).
+
+    Drain-bucket selection is *depth-first*: when the current drain
+    bucket empties, the deepest waiting bucket (by ``Task.depth``) is
+    picked next, scanning at most ``DRAIN_SCAN_CAP`` buckets. For the
+    level-synchronous engine every task has depth 0 and this degenerates
+    to the paper's first-non-empty rule; for the barrier-free engine it
+    drains each subtree before starting the next, bounding the number of
+    retained parent-handed bitmaps.
     """
+
+    DRAIN_SCAN_CAP = 64   # bound the deepest-bucket scan per switch
 
     def __init__(self, n_workers: int,
                  cluster_of: Callable[[Any], int] = hash):
@@ -121,6 +131,7 @@ class ClusteredPolicy(SchedulingPolicy):
             dict() for _ in range(n_workers)]
         self._drain: List[Optional[int]] = [None] * n_workers
         self.sizes = [0] * n_workers
+        self._deep = [0] * n_workers   # queued tasks with depth > 0
 
     def put(self, worker, task):
         key = self.cluster_of(task.attr)
@@ -128,6 +139,28 @@ class ClusteredPolicy(SchedulingPolicy):
             self.tables[worker].setdefault(key, collections.deque()
                                            ).append(task)
             self.sizes[worker] += 1
+            if task.depth > 0:
+                self._deep[worker] += 1
+
+    def _pick_drain(self, worker: int,
+                    tab: Dict[Any, collections.deque]) -> Any:
+        """Deepest-head bucket among the NEWEST DRAIN_SCAN_CAP (dict
+        order is insertion order, so the just-spawned deep children sit
+        at the tail — scanning oldest-first would leave them beyond the
+        cap whenever >CAP classes queue up, inverting the drain order
+        and unbounding the retained-bitmap peak). With no deep task
+        queued (the level-synchronous engines: every depth is 0) this
+        is the paper's O(1) first-non-empty rule."""
+        if not self._deep[worker]:
+            return next(iter(tab))
+        best, best_depth = None, -1
+        for i, key in enumerate(reversed(tab)):
+            if i >= self.DRAIN_SCAN_CAP:
+                break
+            d = tab[key][0].depth
+            if d > best_depth:
+                best, best_depth = key, d
+        return best
 
     def get(self, worker):
         with self.locks[worker]:
@@ -136,9 +169,7 @@ class ClusteredPolicy(SchedulingPolicy):
                 return None
             key = self._drain[worker]
             if key is None or key not in tab:
-                # move to the first non-empty bucket (paper: iterate
-                # buckets from the first non-empty one)
-                key = next(iter(tab))
+                key = self._pick_drain(worker, tab)
                 self._drain[worker] = key
             q = tab[key]
             task = q.popleft()
@@ -146,6 +177,8 @@ class ClusteredPolicy(SchedulingPolicy):
                 del tab[key]
                 self._drain[worker] = None
             self.sizes[worker] -= 1
+            if task.depth > 0:
+                self._deep[worker] -= 1
             return task
 
     def steal(self, thief, victim):
@@ -155,15 +188,19 @@ class ClusteredPolicy(SchedulingPolicy):
                 if key == self._drain[victim]:
                     continue                    # don't yank the hot bucket
                 q = tab.pop(key)
-                self.sizes[victim] -= len(q)
+                self._unaccount(victim, q)
                 return list(q)                  # the WHOLE bucket
             # only the drain bucket remains: take it anyway
             for key in list(tab):
                 q = tab.pop(key)
-                self.sizes[victim] -= len(q)
+                self._unaccount(victim, q)
                 self._drain[victim] = None
                 return list(q)
             return []
+
+    def _unaccount(self, victim: int, q: collections.deque) -> None:
+        self.sizes[victim] -= len(q)
+        self._deep[victim] -= sum(1 for t in q if t.depth > 0)
 
     def approx_len(self, worker):
         return self.sizes[worker]
@@ -194,16 +231,19 @@ class NearestNeighborPolicy(ClusteredPolicy):
             if key is None or key not in tab:
                 last = self._last[worker]
                 if last is None:
-                    key = next(iter(tab))
+                    key = self._pick_drain(worker, tab)
                 else:
-                    best, best_ov = None, -1
-                    for i, cand in enumerate(tab):
+                    # newest-first, like _pick_drain: fresh deep
+                    # children live at the dict tail
+                    best, best_ov, best_d = None, -1, -1
+                    for i, cand in enumerate(reversed(tab)):
                         if i >= self.SCAN_CAP:
                             break
                         ov = len(set(cand) & set(last)) \
                             if isinstance(cand, tuple) else 0
-                        if ov > best_ov:
-                            best, best_ov = cand, ov
+                        d = tab[cand][0].depth   # depth-first tiebreak
+                        if ov > best_ov or (ov == best_ov and d > best_d):
+                            best, best_ov, best_d = cand, ov, d
                     key = best
                 self._drain[worker] = key
             q = tab[key]
@@ -214,6 +254,8 @@ class NearestNeighborPolicy(ClusteredPolicy):
             if isinstance(key, tuple):
                 self._last[worker] = key
             self.sizes[worker] -= 1
+            if task.depth > 0:
+                self._deep[worker] -= 1
             return task
 
 
@@ -229,6 +271,9 @@ class TaskScheduler:
         self._external_stats = WorkerStats()   # non-worker threads
         self._spawned = 0
         self._outstanding = 0
+        self._work_seq = 0        # bumped on every put; parked workers
+                                  # wait for it to move (wake-on-put)
+        self._parked = 0          # workers currently parked on _cv
         self._cv = threading.Condition()
         self._stop = False
         self._rngs = [random.Random(seed + i) for i in range(n_workers)]
@@ -240,26 +285,52 @@ class TaskScheduler:
             t.start()
 
     # ------------------------------------------------------------ spawn --
-    def spawn(self, fn, *args, attr=None, worker: Optional[int] = None):
-        """Enqueue a task. Default placement is round-robin (the paper's
-        runtime places on the spawning thread; the driver here is a single
-        host thread, so round-robin approximates even initial placement —
-        for ClusteredPolicy the bucket hash decides affinity instead)."""
-        task = Task(fn, args, attr)
+    def spawn(self, fn, *args, attr=None, depth: int = 0,
+              worker: Optional[int] = None):
+        """Enqueue a task. When called from inside a task body, the child
+        defaults onto the *spawning worker's* queue — the paper's runtime
+        semantics: locality by construction, and a stolen bucket carries
+        its whole subtree because descendants spawn on the thief. From
+        the driver thread, placement is the bucket hash (ClusteredPolicy)
+        or round-robin (approximates even initial placement)."""
+        task = Task(fn, args, attr, depth)
+        if worker is None:
+            worker = getattr(self._tls, "worker_id", None)
         if worker is None:
             if isinstance(self.policy, ClusteredPolicy):
                 worker = hash(self.policy.cluster_of(attr)) % self.n
             else:
                 worker = self._spawn_rr = (self._spawn_rr + 1) % self.n
         with self._cv:
+            # one critical section: the outstanding bump must precede
+            # the put (a fast child finishing before the bump could let
+            # a blocked wait_all miss its wake), and the put must
+            # precede the wake so a woken worker finds the task.
+            # policy.put only takes per-worker policy locks, never _cv,
+            # so the nesting cannot invert.
             self._spawned += 1
             self._outstanding += 1
-        self.policy.put(worker, task)
-        with self._cv:
-            self._cv.notify_all()
+            self.policy.put(worker, task)
+            self._work_seq += 1
+            if self._parked:
+                self._cv.notify_all()
         return task
 
+    def _signal_work(self):
+        """Wake parked workers after new tasks became runnable. The
+        notify is skipped when nobody is parked — the common case on a
+        busy scheduler, where tasks spawn thousands of children."""
+        with self._cv:
+            self._work_seq += 1
+            if self._parked:
+                self._cv.notify_all()
+
     def wait_all(self):
+        """Block until no task is outstanding. Dynamic: a task that
+        spawns children mid-body keeps the count above zero (the child
+        increments before the parent's own decrement), so one terminal
+        wait covers a task graph that grows from inside tasks — no
+        inter-level barriers needed."""
         with self._cv:
             self._cv.wait_for(lambda: self._outstanding == 0)
 
@@ -293,30 +364,58 @@ class TaskScheduler:
             if got:
                 st.steals += 1
                 st.tasks_stolen += len(got)
-                for t in got[1:]:
-                    self.policy.put(i, t)
+                if len(got) > 1:
+                    for t in got[1:]:
+                        self.policy.put(i, t)
+                    self._signal_work()
                 return got[0]
         return None
 
     def _worker(self, i: int):
         st = self.stats[i]
         self._tls.stats = st
+        self._tls.worker_id = i
         while True:
+            # Snapshot the put sequence BEFORE probing the queues: a
+            # spawn that lands between a failed probe and the park bumps
+            # _work_seq past the snapshot, so the park predicate is
+            # already true and the worker does not sleep on a runnable
+            # task. (Put and bump share spawn's critical section, so a
+            # snapshot that saw the bump also guarantees _acquire can
+            # see the task.)
+            with self._cv:
+                if self._stop:
+                    return
+                seen = self._work_seq
             task = self._acquire(i)
             if task is None:
+                # Park on the condition variable until a put bumps
+                # _work_seq past the snapshot (or shutdown). No
+                # busy-spin: an idle worker burns no CPU while one deep
+                # branch stays live. The timeout is a residual safety
+                # net (e.g. a steal victim's queue refilling between
+                # our probe and the park without a new put).
                 with self._cv:
                     if self._stop:
                         return
-                    if self._outstanding == 0:
-                        self._cv.wait(timeout=0.01)
-                        continue
-                time.sleep(0.0002)
+                    self._parked += 1
+                    try:
+                        self._cv.wait_for(
+                            lambda: (self._stop
+                                     or self._work_seq != seen),
+                            timeout=0.05)
+                    finally:
+                        self._parked -= 1
                 continue
             try:
                 task.result = task.fn(*task.args)
             except BaseException as e:  # noqa: BLE001 - must not leak:
                 task.error = e          # a dead worker would deadlock
                                         # wait_all (outstanding never 0)
+            finally:
+                task.args = ()      # drop arg refs even on error:
+                                    # parent-handed bitmaps must free
+                                    # once consumed
             st.tasks_run += 1
             with self._cv:
                 self._outstanding -= 1

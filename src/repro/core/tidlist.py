@@ -23,7 +23,6 @@ def n_words(n_transactions: int) -> int:
 def pack_database(db: Sequence[Sequence[int]], n_items: int) -> np.ndarray:
     """db: list of transactions (item id lists) -> [n_items, W] uint32."""
     m = len(db)
-    w = n_words(m)
     bits = np.zeros((n_items, m), dtype=bool)
     for t, txn in enumerate(db):
         for i in txn:
@@ -76,16 +75,28 @@ def support_of(bitmap_rows: np.ndarray) -> int:
     return int(popcount32(intersect(bitmap_rows)).sum())
 
 
+# Target working-set size for one [chunk, W] AND+popcount temporary:
+# roughly half an L2 slice, so the chunk stays cache-resident even on
+# scaled datasets where W grows with the transaction count.
+CHUNK_TARGET_BYTES = 4 << 20
+
+
 def support_counts(prefix: np.ndarray, exts: np.ndarray,
-                   chunk: int = 4096) -> np.ndarray:
+                   chunk: int | None = None) -> np.ndarray:
     """counts[e] = |prefix ∩ exts[e]|. prefix: [W]; exts: [E, W].
 
     This is the numpy bucket-sweep: one fused AND+popcount pass with the
     prefix row broadcast (cache-resident) across all extensions — the
     vectorized analogue of the Pallas bitmap_join kernel. ``chunk``
-    bounds the [chunk, W] temporary so very wide buckets don't blow the
-    cache/working set."""
-    e = exts.shape[0]
+    bounds the [chunk, W] temporary; by default it adapts to W so the
+    temporary stays ~CHUNK_TARGET_BYTES regardless of dataset scale."""
+    e, w = exts.shape
+    if e == 1:
+        # single-extension fast path (deep, narrow equivalence classes):
+        # skip the [E, W] broadcast temporary entirely
+        return popcount32(exts[0] & prefix).sum(keepdims=True)
+    if chunk is None:
+        chunk = max(64, CHUNK_TARGET_BYTES // max(w * (WORD // 8), 1))
     if e <= chunk:
         return popcount32(exts & prefix[None, :]).sum(axis=1)
     out = np.empty(e, dtype=np.int64)

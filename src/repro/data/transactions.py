@@ -28,6 +28,7 @@ class Profile:
     n_patterns: int = 100   # quest: number of maximal patterns (L)
     density: float = 0.35   # dense: per-item probability
     n_dense_items: int = 40
+    zipf: float = 0.75      # quest: item-popularity skew exponent
 
 
 PROFILES: Dict[str, Profile] = {
@@ -35,6 +36,15 @@ PROFILES: Dict[str, Profile] = {
     "t10i4":   Profile("t10i4", 0.005, "quest", 20000, 500, 10, 4, 200),
     "t40i10":  Profile("t40i10", 0.02, "quest", 8000, 500, 40, 10, 200),
     "kosarak": Profile("kosarak", 0.006, "quest", 20000, 800, 8, 4, 400),
+    # retail-like sparse long tail: many items, steep Zipf skew, long
+    # correlated patterns at low support — frequent itemsets form deep,
+    # NARROW equivalence classes (few siblings per prefix). This is the
+    # stress regime for the depth-first engine's memory bound and
+    # barrier-freedom (a level-synchronous driver barriers on a handful
+    # of live branches), and also where Eclat's unpruned class-local
+    # sweeps cost the most vs Apriori — the benchmark records both.
+    "retail":  Profile("retail", 0.012, "quest", 12000, 1200, 12, 5, 500,
+                       zipf=1.05),
     # dense UCI-style datasets (high support thresholds, like the paper)
     "chess":      Profile("chess", 0.60, "dense", 3196, 75,
                           density=0.49, n_dense_items=75),
@@ -53,8 +63,9 @@ def gen_quest(p: Profile, seed: int = 0) -> List[List[int]]:
     """IBM Quest: build L maximal patterns (item subsets with geometric
     sizes), then compose each transaction from overlapping patterns."""
     rng = np.random.default_rng(seed)
-    # pattern item pools are Zipf-weighted so some items are very frequent
-    weights = 1.0 / np.arange(1, p.n_items + 1) ** 0.75
+    # pattern item pools are Zipf-weighted so some items are very
+    # frequent; ``p.zipf`` sets the skew (retail-like long tails ~1.05)
+    weights = 1.0 / np.arange(1, p.n_items + 1) ** p.zipf
     weights /= weights.sum()
     patterns = []
     for _ in range(p.n_patterns):

@@ -9,7 +9,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core.fpm import mine, mine_serial
+from repro.core.fpm import GRANULARITIES, mine, mine_serial
 from repro.core.tidlist import pack_database
 from repro.data.transactions import PROFILES, load, min_support_count
 
@@ -20,6 +20,14 @@ def main():
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--policies", nargs="+",
                     default=["cilk", "clustered"])
+    ap.add_argument("--granularity", default="bucket",
+                    choices=list(GRANULARITIES),
+                    help="task grain: bucket (level-sync sweep), "
+                         "candidate (scalar joins), or depth-first "
+                         "(barrier-free class recursion)")
+    ap.add_argument("--backend", default="auto",
+                    help="join backend: auto|numpy|pallas-interpret|"
+                         "pallas-jit")
     ap.add_argument("--support", type=float, default=None,
                     help="override the profile's min-support fraction")
     ap.add_argument("--max-k", type=int, default=6)
@@ -42,14 +50,20 @@ def main():
 
     for policy in args.policies:
         res, met = mine(bitmaps, ms, policy=policy,
-                        n_workers=args.workers, max_k=args.max_k)
+                        n_workers=args.workers, max_k=args.max_k,
+                        granularity=args.granularity,
+                        backend=args.backend)
         assert res == ref, f"{policy} result mismatch!"
         s = met.scheduler
-        print(f"{policy:10s} wall={met.wall_s:6.2f}s "
-              f"speedup={t_serial / met.wall_s:5.2f}x "
-              f"cache_hit={met.cache_hit_rate:5.1%} "
-              f"steals={int(s['steals']):6d} "
-              f"tasks/steal={s['tasks_per_steal']:5.2f}")
+        line = (f"{policy:10s} wall={met.wall_s:6.2f}s "
+                f"speedup={t_serial / met.wall_s:5.2f}x "
+                f"cache_hit={met.cache_hit_rate:5.1%} "
+                f"steals={int(s['steals']):6d} "
+                f"tasks/steal={s['tasks_per_steal']:5.2f}")
+        if args.granularity == "depth-first":
+            line += (f" peak_retained={met.peak_retained_bitmaps}"
+                     f" ({met.peak_bytes_retained} B)")
+        print(line)
 
 
 if __name__ == "__main__":

@@ -50,10 +50,12 @@ def test_traffic_model_bucket_beats_candidate():
 @pytest.fixture(scope="module")
 def datasets():
     out = {}
-    for name, n_txn, frac in [("mushroom", 250, 0.3), ("chess", 150, 0.8)]:
+    for name, n_txn, frac in [("mushroom", 250, 0.3), ("chess", 150, 0.8),
+                              ("retail", 800, 0.03)]:
         db, p = load(name, seed=0)
         db = db[:n_txn]
-        bm = pack_database(db, p.n_dense_items)
+        n_items = p.n_dense_items if p.kind == "dense" else p.n_items
+        bm = pack_database(db, n_items)
         ms = int(frac * len(db))
         out[name] = (db, bm, ms)
     return out
@@ -66,12 +68,14 @@ def test_serial_matches_brute_force(datasets, name):
         db, ms, max_k=4)
 
 
-@pytest.mark.parametrize("granularity", ["bucket", "candidate"])
+@pytest.mark.parametrize("granularity",
+                         ["bucket", "candidate", "depth-first"])
 @pytest.mark.parametrize("policy", POLICIES)
-@pytest.mark.parametrize("name", ["mushroom", "chess"])
+@pytest.mark.parametrize("name", ["mushroom", "chess", "retail"])
 def test_engine_equivalence(datasets, name, policy, granularity):
-    """The acceptance matrix: every policy × both granularities returns
-    supports identical to the serial reference, on two datasets."""
+    """The acceptance matrix: every policy × every granularity returns
+    supports identical to the serial reference, on three datasets
+    (dense mushroom/chess + the sparse long-tail retail profile)."""
     db, bm, ms = datasets[name]
     ref = mine_serial(bm, ms, max_k=4)
     got, met = mine(bm, ms, policy=policy, n_workers=3, max_k=4,
@@ -104,6 +108,52 @@ def test_bad_granularity_raises(datasets):
     _, bm, ms = datasets["mushroom"]
     with pytest.raises(ValueError, match="granularity"):
         mine(bm, ms, granularity="itemset")
+
+
+# ----------------------------------------------------- depth-first engine
+def test_depth_first_handoff_makes_cache_vestigial(datasets):
+    """The parent→child bitmap handoff: no prefix is ever recomputed or
+    cache-probed, so the LRU cache shows zero traffic; the engine also
+    reports its retained-bitmap peak (children exist on this dataset)."""
+    _, bm, ms = datasets["retail"]
+    got, met = mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                    granularity="depth-first")
+    assert met.cache_hits == met.cache_misses == 0
+    assert met.peak_retained_bitmaps > 0        # children were spawned
+    assert met.peak_bytes_retained > 0
+    assert met.buckets == met.scheduler["tasks_run"]
+    assert got == mine_serial(bm, ms, max_k=4)
+
+
+def test_depth_first_child_error_surfaces_on_driver(datasets, monkeypatch):
+    """A task body raising inside a spawned-from-task child class must
+    surface on the driver thread (not deadlock the terminal wait_all).
+    Child classes are exactly the tasks holding an OWNED materialized
+    bitmap (base is None); root classes hold views of the base array."""
+    from repro.core import fpm as fpm_mod
+    from repro.core.join_backend import NumpyBackend
+
+    class ChildBomb(NumpyBackend):
+        def sweep(self, prefix, exts):
+            if prefix.base is None:             # a parent-handed bitmap
+                raise RuntimeError("child boom")
+            return super().sweep(prefix, exts)
+
+    bomb = ChildBomb()
+    monkeypatch.setattr(fpm_mod, "make_selector",
+                        lambda spec: (lambda n_exts: bomb))
+    _, bm, ms = datasets["retail"]
+    with pytest.raises(RuntimeError, match="child boom"):
+        mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+             granularity="depth-first")
+
+
+def test_depth_first_single_frequent_item_spawns_nothing():
+    db = [[0], [0], [0]]
+    bm = pack_database(db, 1)
+    got, met = mine(bm, 2, granularity="depth-first", n_workers=2)
+    assert got == {(0,): 3}
+    assert met.scheduler["spawned"] == 0
 
 
 # ------------------------------------------------------ property tests
@@ -142,6 +192,7 @@ def test_property_bucket_engine_equals_brute_force(seed):
     ms = int(rng.integers(2, 10))
     ref = brute_force_frequent(db, ms, max_k=4)
     bm = pack_database(db, 10)
-    got, _ = mine(bm, ms, policy="clustered", n_workers=2, max_k=4,
-                  granularity="bucket")
-    assert got == ref
+    for gran in ("bucket", "depth-first"):
+        got, _ = mine(bm, ms, policy="clustered", n_workers=2, max_k=4,
+                      granularity=gran)
+        assert got == ref, gran

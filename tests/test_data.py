@@ -8,7 +8,8 @@ from repro.data import lm_pipeline as lmp
 from repro.data.transactions import PROFILES, load, min_support_count
 
 
-@pytest.mark.parametrize("profile", ["chess", "mushroom", "t10i4"])
+@pytest.mark.parametrize("profile", ["chess", "mushroom", "t10i4",
+                                     "retail"])
 def test_profiles_generate_valid_dbs(profile):
     db, p = load(profile, seed=0)
     n_items = p.n_dense_items if p.kind == "dense" else p.n_items
@@ -29,6 +30,35 @@ def test_generator_deterministic():
     a, _ = load("mushroom", seed=42)
     b, _ = load("mushroom", seed=42)
     assert a[:50] == b[:50]
+
+
+def test_retail_profile_is_sparse_long_tail():
+    """The retail profile must be a sparse long-tail regime: steep item
+    popularity skew (a few head items carry much of the traffic, a long
+    tail of rare items) at low density — the deep-narrow-equivalence-
+    class regime the depth-first engine targets."""
+    db, p = load("retail", 0)
+    assert p.kind == "quest" and p.zipf > PROFILES["t10i4"].zipf
+    counts = np.zeros(p.n_items)
+    for t in db:
+        for i in t:
+            counts[i] += 1
+    order = np.sort(counts)[::-1]
+    head = order[: p.n_items // 100].sum() / counts.sum()
+    assert head > 0.2                       # top-1% items: heavy head
+    assert np.median(counts) < order[0] / 50    # long rare tail
+    density = np.mean([len(t) for t in db]) / p.n_items
+    assert density < 0.05                   # sparse
+
+
+def test_retail_profile_yields_deep_itemsets():
+    """Low support + correlated Quest patterns must produce k>=4
+    frequent itemsets — deep classes, the depth-first regime."""
+    db, p = load("retail", 0)
+    db = db[:3000]
+    bm = pack_database(db, p.n_items)
+    res = mine_serial(bm, int(p.support * len(db)), max_k=4)
+    assert any(len(k) >= 4 for k in res)
 
 
 def test_profiles_yield_multilevel_itemsets():

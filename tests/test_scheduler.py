@@ -232,6 +232,103 @@ def test_worker_stats_traffic_counters():
     assert sched.merged_stats()["rows_touched"] == 35
 
 
+def test_clustered_drains_deepest_bucket_first():
+    """Depth-first drain order: when the drain bucket empties, the
+    deepest waiting bucket (Task.depth) is picked next — the memory
+    bound of the barrier-free engine."""
+    from repro.core.scheduler import Task
+    pol = ClusteredPolicy(1, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr="a", depth=1))
+    pol.put(0, Task(lambda: None, (), attr="b", depth=3))
+    pol.put(0, Task(lambda: None, (), attr="c", depth=2))
+    assert pol.get(0).attr == "b"
+    assert pol.get(0).attr == "c"
+    assert pol.get(0).attr == "a"
+
+
+def test_nn_drain_selects_max_overlap_within_cap():
+    """NN bucket selection: after a drain, the bucket sharing the most
+    items with the last-executed prefix is picked."""
+    from repro.core.scheduler import NearestNeighborPolicy, Task
+    pol = NearestNeighborPolicy(1, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr=(5, 6)))
+    assert pol.get(0).attr == (5, 6)            # sets _last
+    pol.put(0, Task(lambda: None, (), attr=(7, 8)))
+    pol.put(0, Task(lambda: None, (), attr=(5, 9)))
+    assert pol.get(0).attr == (5, 9)            # overlap 1 beats 0
+
+
+def test_nn_drain_scan_cap_bounds_selection():
+    """The nearest-neighbour scan inspects at most SCAN_CAP buckets: a
+    perfect-overlap bucket inserted beyond the cap must NOT be found."""
+    from repro.core.scheduler import NearestNeighborPolicy, Task
+    pol = NearestNeighborPolicy(1, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr=(1, 2)))
+    assert pol.get(0).attr == (1, 2)            # _last = (1, 2)
+    # the scan walks the NEWEST buckets first, so the oldest insertion
+    # is the one beyond the cap
+    pol.put(0, Task(lambda: None, (), attr=(1, 2, 3)))   # perfect overlap
+    for i in range(pol.SCAN_CAP):               # zero-overlap fillers
+        pol.put(0, Task(lambda: None, (), attr=(100 + 2 * i,
+                                                101 + 2 * i)))
+    got = pol.get(0).attr
+    assert got != (1, 2, 3)
+
+
+def test_spawn_from_worker_lands_on_spawning_worker():
+    """The paper's runtime semantics: a task spawned from inside a task
+    body defaults onto the spawning worker's own queue (locality by
+    construction; a stolen bucket carries its whole subtree)."""
+    class SpyPolicy(CilkPolicy):
+        def __init__(self, n):
+            super().__init__(n)
+            self.puts = []
+
+        def put(self, worker, task):
+            self.puts.append((worker, task.attr))
+            super().put(worker, task)
+
+    pol = SpyPolicy(3)
+    sched = TaskScheduler(3, pol)
+    ran_on = {}
+
+    def child():
+        pass
+
+    def parent():
+        ran_on["worker"] = sched._tls.worker_id
+        sched.spawn(child, attr="child", depth=1)
+
+    sched.spawn(parent, attr="parent")
+    sched.wait_all()
+    sched.shutdown()
+    child_puts = [w for w, a in pol.puts if a == "child"]
+    assert child_puts == [ran_on["worker"]]
+
+
+def test_child_spawned_from_task_error_surfaces_no_deadlock():
+    """An exception inside a *spawned-from-task* child must be recorded
+    on the child task (for the driver to raise) without killing the
+    worker or deadlocking the terminal wait_all."""
+    sched = TaskScheduler(2, CilkPolicy(2))
+    children = []
+
+    def child():
+        raise RuntimeError("child boom")
+
+    def parent():
+        children.append(sched.spawn(child, attr="c", depth=1))
+
+    sched.spawn(parent, attr="p")
+    sched.wait_all()                     # must return, not hang
+    sched.shutdown()
+    assert sched._outstanding == 0
+    assert len(children) == 1
+    assert isinstance(children[0].error, RuntimeError)
+    s = sched.merged_stats()
+    assert s["tasks_run"] == s["spawned"] == 2
+
+
 def test_task_exception_does_not_deadlock_wait_all():
     """A raising task body must not kill the worker (which would leave
     _outstanding stuck and deadlock wait_all); the error is recorded on

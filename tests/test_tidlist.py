@@ -38,6 +38,37 @@ def test_support_counts_prefix():
     assert counts.tolist() == [2, 2]   # {0,1}: t0,t1 ; {0,2}: t0,t3
 
 
+def test_support_counts_single_extension_fast_path():
+    """E==1 (deep, narrow equivalence classes) skips the broadcast
+    temporary but must return the same shape/dtype/values."""
+    db = [[0, 1, 2], [0, 1], [1, 2], [0, 2]]
+    bm = tidlist.pack_database(db, 3)
+    counts = tidlist.support_counts(bm[0], bm[[1]])
+    assert counts.shape == (1,) and counts.dtype == np.int64
+    assert counts.tolist() == [2]
+
+
+def test_support_counts_empty_database_zero_words():
+    """W==0 (empty database) must return zeros, not divide by zero in
+    the adaptive chunk computation."""
+    prefix = np.zeros(0, dtype=np.uint32)
+    exts = np.zeros((3, 0), dtype=np.uint32)
+    assert tidlist.support_counts(prefix, exts).tolist() == [0, 0, 0]
+
+
+def test_support_counts_default_chunk_adapts_to_width():
+    """The [chunk, W] temporary stays ~CHUNK_TARGET_BYTES: wide rows
+    (scaled datasets) get a proportionally smaller chunk, and chunked
+    execution still matches the unchunked result."""
+    rng = np.random.default_rng(7)
+    w = tidlist.CHUNK_TARGET_BYTES // 4 // 100    # -> default chunk 100
+    prefix = rng.integers(0, 2 ** 32, size=w, dtype=np.uint32)
+    exts = rng.integers(0, 2 ** 32, size=(250, w), dtype=np.uint32)
+    got = tidlist.support_counts(prefix, exts)    # forces 3 chunks
+    want = tidlist.support_counts(prefix, exts, chunk=exts.shape[0])
+    np.testing.assert_array_equal(got, want)
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.lists(st.integers(0, 19), max_size=10), min_size=1,
                 max_size=40))
