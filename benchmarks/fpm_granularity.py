@@ -12,6 +12,12 @@ engine turns the clustered policy's incidental cache locality into
 structure, and the depth-first engine removes the remaining inter-level
 barriers plus every prefix recomputation.
 
+Also measures the arena/dispatcher plumbing: per-run batch occupancy
+(sweep requests per flush — asserted > 1 under --smoke so the
+dispatcher cannot silently degrade to one-bucket launches) and a
+repeated-sweep H2D contrast (device-resident arena: ~one initial
+upload; host-only arena: the old per-sweep transfer bill).
+
 Emits ``BENCH_granularity.json`` so the perf trajectory is recorded.
 Run ``--smoke`` for the CI-sized variant (~2 min).
 """
@@ -23,7 +29,8 @@ import os
 from typing import Dict, List
 
 from repro.core.fpm import mine
-from repro.core.tidlist import pack_database
+from repro.core.join_backend import SweepDispatcher, get_backend
+from repro.core.tidlist import BitmapArena, pack_database
 from repro.data.transactions import load
 
 #                 scale  support
@@ -41,7 +48,9 @@ SMOKE_SETUP = {
 
 def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
         policies=("clustered", "cilk"), backend: str = "auto",
-        smoke: bool = False, repeats: int = 1) -> List[Dict]:
+        arena: str = "auto", max_batch: int = 32,
+        flush_us: float = 200.0, smoke: bool = False,
+        repeats: int = 1) -> List[Dict]:
     setup = SMOKE_SETUP if smoke else SETUP
     repeats = max(1, repeats)
     rows = []
@@ -55,7 +64,9 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
         for policy in policies:
             rec: Dict = {"dataset": f"synth:{name}", "policy": policy,
                          "support": frac, "n_workers": n_workers,
-                         "max_k": max_k, "backend": backend}
+                         "max_k": max_k, "backend": backend,
+                         "arena": arena, "max_batch": max_batch,
+                         "flush_us": flush_us}
             counts = {}
             for gran in ("candidate", "bucket", "depth-first"):
                 key = gran.replace("-", "_")
@@ -63,7 +74,9 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
                 for _ in range(repeats):
                     res, m = mine(bm, ms, policy=policy,
                                   n_workers=n_workers, max_k=max_k,
-                                  granularity=gran, backend=backend)
+                                  granularity=gran, backend=backend,
+                                  arena=arena, max_batch=max_batch,
+                                  flush_us=flush_us)
                     if m.wall_s < best:
                         # counters travel with the run that set the
                         # best wall-clock, never mixed across repeats
@@ -74,6 +87,9 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
                 rec[f"{key}_bytes_swept"] = met.bytes_swept
                 rec[f"{key}_tasks"] = int(met.scheduler["tasks_run"])
                 rec[f"{key}_cache_misses"] = met.cache_misses
+                rec[f"{key}_flushes"] = met.flushes
+                rec[f"{key}_batch_occupancy"] = met.batch_occupancy
+                rec[f"{key}_h2d_bytes"] = met.h2d_bytes
                 rec["frequent"] = met.frequent
                 if gran == "depth-first":
                     rec["depth_first_peak_retained_bitmaps"] = \
@@ -91,6 +107,47 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
     return rows
 
 
+def repeat_sweep_h2d(repeats: int = 5, n_txn: int = 400,
+                     n_buckets: int = 24, n_exts: int = 16) -> List[Dict]:
+    """Repeated-sweep H2D contrast, the tentpole's whole point.
+
+    The same ``n_buckets`` sweeps are submitted ``repeats`` times
+    through one pallas-interpret dispatcher. With a device-resident
+    arena ("jax") the bitmaps cross host→device exactly once — the
+    initial arena upload — no matter how often they are swept; with a
+    host-only arena ("numpy", the old path's behaviour) every batch
+    re-uploads its gathered payload. Both rows land in the JSON so the
+    trajectory records the drop."""
+    db, prof = load("mushroom", seed=0)
+    bm = pack_database(db[:n_txn], prof.n_dense_items)
+    n_items = bm.shape[0]
+    out = []
+    for backing in ("jax", "numpy"):
+        arena = BitmapArena.from_bitmaps(bm, backing=backing)
+        disp = SweepDispatcher(arena, get_backend("pallas-interpret"),
+                               n_clients=n_buckets)
+        sweep_rows = 0
+        try:
+            for _ in range(repeats):
+                futs = [disp.submit(p, tuple(range(p + 1,
+                                                   p + 1 + n_exts)))
+                        for p in range(n_buckets)]
+                for f in futs:
+                    f.result()
+                sweep_rows += n_buckets * (1 + n_exts)
+        finally:
+            disp.stop()
+        naive = sweep_rows * bm.shape[1] * 4    # old path: re-upload all
+        out.append({"bench": "repeat_sweep_h2d", "arena": backing,
+                    "repeats": repeats, "n_buckets": n_buckets,
+                    "n_exts": n_exts, "n_items": n_items,
+                    "arena_bytes": arena.nbytes_base,
+                    "h2d_bytes": arena.h2d_bytes,
+                    "naive_h2d_bytes": naive,
+                    "batch_occupancy": disp.batch_occupancy})
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -99,6 +156,10 @@ def main(argv=None) -> None:
                     default=["mushroom", "chess", "retail"])
     ap.add_argument("--policies", nargs="*", default=["clustered", "cilk"])
     ap.add_argument("--backend", default="auto")
+    ap.add_argument("--arena", default="auto",
+                    choices=["auto", "numpy", "jax"])
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--flush-us", type=float, default=200.0)
     ap.add_argument("--n-workers", type=int, default=4)
     ap.add_argument("--max-k", type=int, default=5)
     ap.add_argument("--repeats", type=int, default=1,
@@ -108,12 +169,17 @@ def main(argv=None) -> None:
 
     rows = run(args.datasets, n_workers=args.n_workers, max_k=args.max_k,
                policies=tuple(args.policies), backend=args.backend,
-               smoke=args.smoke, repeats=args.repeats)
+               arena=args.arena, max_batch=args.max_batch,
+               flush_us=args.flush_us, smoke=args.smoke,
+               repeats=args.repeats)
+    h2d_rows = repeat_sweep_h2d()
     payload = {
         "bench": "fpm_granularity",
         "smoke": args.smoke,
         "backend": args.backend,
+        "arena": args.arena,
         "results": rows,
+        "repeat_sweep_h2d": h2d_rows,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -124,8 +190,32 @@ def main(argv=None) -> None:
               f"speedup={r['speedup']:.2f}x;"
               f"df_speedup={r['df_speedup']:.2f}x;"
               f"df_cache_misses={r['depth_first_cache_misses']};"
+              f"batch_occ={r['bucket_batch_occupancy']:.2f};"
               f"rows={r['bucket_rows_touched']}vs"
               f"{r['candidate_rows_touched']}")
+    for h in h2d_rows:
+        print(f"repeat_sweep_h2d_arena={h['arena']},,"
+              f"h2d={h['h2d_bytes']}B;naive={h['naive_h2d_bytes']}B;"
+              f"arena={h['arena_bytes']}B;"
+              f"occ={h['batch_occupancy']:.2f}")
+    if args.smoke:
+        # the dispatcher must actually coalesce: mean occupancy of the
+        # batched granularities stays above one request per launch
+        occs = [r[f"{g}_batch_occupancy"] for r in rows
+                for g in ("bucket", "depth_first")]
+        mean_occ = sum(occs) / len(occs)
+        assert mean_occ > 1.0, (
+            f"dispatcher degraded to one-bucket batches: mean "
+            f"batch_occupancy {mean_occ:.2f} (per-run: {occs})")
+        print(f"# smoke occupancy check passed: mean={mean_occ:.2f}")
+        # device-resident arena: repeated sweeps cost ~one initial
+        # upload (indices excluded from the gauge), not one per sweep
+        dev = next(h for h in h2d_rows if h["arena"] == "jax")
+        assert dev["h2d_bytes"] <= 1.05 * dev["arena_bytes"], dev
+        assert dev["h2d_bytes"] < 0.1 * dev["naive_h2d_bytes"], dev
+        print("# smoke h2d check passed: "
+              f"{dev['h2d_bytes']}B ~= one arena upload "
+              f"({dev['arena_bytes']}B) vs naive {dev['naive_h2d_bytes']}B")
     print(f"# wrote {os.path.abspath(args.out)}")
 
 

@@ -9,28 +9,35 @@ mining algorithms for supercomputers"):
       they run back-to-back on the same worker — exactly the locality
       the clustered policy creates and the Cilk-style policy destroys.
   granularity="bucket"       one task per (k-1)-prefix bucket (default).
-      The task computes the prefix intersection ONCE and sweeps all of
-      the bucket's extensions with one vectorized call through a
-      pluggable join backend (numpy ufuncs or the Pallas bitmap_join
-      kernel — repro.core.join_backend). Level-synchronous: a driver
-      barrier separates level k from level k+1.
+      The task resolves its prefix intersection ONCE (to an arena
+      handle) and enqueues one handle-based SweepRequest on the sweep
+      dispatcher, which coalesces many workers' buckets into batched
+      multi-prefix kernel launches (repro.core.join_backend).
+      Level-synchronous: a driver barrier separates level k from k+1.
   granularity="depth-first"  barrier-free equivalence-class recursion.
       Each task owns one class (prefix P, sibling extensions E): it
-      sweeps E through the join backend, records the frequent
-      extensions, forms the child classes P+(e,) × {siblings > e}
-      Eclat-style (no global candidate generation), materializes each
-      child's ``prefix ∧ ext`` bitmap exactly once and *hands it to the
-      child task* — so no child ever recomputes or cache-probes a
-      prefix intersection. Children spawn onto the spawning worker's
-      queue (steals move whole subtrees); the deepest class drains
-      first, bounding retained handoff bitmaps; one terminal
-      ``wait_all`` replaces every inter-level barrier.
+      sweeps E through the dispatcher, records the frequent extensions,
+      forms the child classes P+(e,) × {siblings > e} Eclat-style (no
+      global candidate generation), materializes each child's
+      ``prefix ∧ ext`` bitmap exactly once *into the arena* and hands
+      the child task the handle — so no child ever recomputes or
+      cache-probes a prefix intersection. Children spawn onto the
+      spawning worker's queue (steals move whole subtrees); the deepest
+      class drains first, bounding retained handoff bitmaps; one
+      terminal ``wait_all`` replaces every inter-level barrier.
+
+Every bitmap lives in one ``BitmapArena`` (repro.core.tidlist): item
+bitmaps are loaded once (handle == item id), prefix intersections and
+child handoffs are refcounted arena rows, and on the Pallas path the
+arena's device mirror is synced incrementally — repeated sweeps cost
+~one initial upload (``MiningMetrics.h2d_bytes``) instead of one
+upload per sweep.
 
 All granularities return identical supports under every policy. The
 cache hit-rate (candidate), rows-touched/bytes-swept counters (all,
-shared with repro.core.distributed_fpm) and peak-retained-bitmap gauge
-(depth-first) are this reproduction's analogue of the paper's dTLB/IPC
-counters.
+shared with repro.core.distributed_fpm), batch-occupancy/flush gauges
+(dispatcher), and peak-retained-bitmap gauge (arena) are this
+reproduction's analogue of the paper's dTLB/IPC counters.
 """
 from __future__ import annotations
 
@@ -47,8 +54,10 @@ from repro.core.buckets import (Bucket, class_rows_touched, group_by_prefix,
                                 rows_to_bytes)
 from repro.core.itemsets import (Itemset, gen_candidates, itemset_hash,
                                  prefix_hash)
-from repro.core.join_backend import make_selector
+from repro.core.join_backend import (FLUSH_US, MAX_BATCH, SweepDispatcher,
+                                     resolve_backend)
 from repro.core.scheduler import TaskScheduler, make_policy
+from repro.core.tidlist import BitmapArena
 
 GRANULARITIES = ("bucket", "candidate", "depth-first")
 
@@ -65,10 +74,16 @@ class MiningMetrics:
     cache_partial_hits: int = 0
     rows_touched: int = 0        # bitmap rows actually read (measured)
     bytes_swept: int = 0         # rows_touched * W * 4
-    # depth-first handoff gauges: how many materialized child bitmaps
-    # (and their bytes) were alive at once — the engine's memory bound
+    # arena gauges: how many non-base rows (cached prefix intersections
+    # + depth-first handoff bitmaps) were alive at once — the engines'
+    # memory bound — and the bitmap payload uploaded host→device
     peak_retained_bitmaps: int = 0
     peak_bytes_retained: int = 0
+    h2d_bytes: int = 0
+    # dispatcher gauges: batched launches and their mean occupancy
+    # (sweep requests per flush; >1 means coalescing actually happened)
+    flushes: int = 0
+    batch_occupancy: float = 0.0
     scheduler: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -78,7 +93,8 @@ class MiningMetrics:
 
 
 class _PrefixCache:
-    """LRU of prefix -> intersected bitmap (one instance per worker).
+    """LRU of prefix -> arena handle of the intersected bitmap (one
+    instance per worker).
 
     *Hierarchical*: a miss on ABC first checks AB — if present, only one
     extra AND is needed. With the nearest-neighbour policy (the paper's
@@ -88,30 +104,45 @@ class _PrefixCache:
     ``get`` also returns the number of bitmap rows it read to build the
     intersection (0 on a full hit) — the measured locality traffic.
 
+    Ownership contract: the cache owns one arena reference per entry
+    (``push`` grants it; eviction releases), and ``get`` retains a
+    SECOND reference on the caller's behalf before returning — the
+    caller must release it when done. This keeps a handle live across
+    the async dispatcher flight even if the entry is evicted meanwhile,
+    and makes ``cache_size=0`` a valid "no cache" A/B knob (the entry
+    is evicted immediately, but the caller's reference keeps the row
+    alive until its release).
+
     The depth-first engine never touches this cache: the parent→child
-    bitmap handoff makes it vestigial on that path (cache_misses == 0
+    handle handoff makes it vestigial on that path (cache_misses == 0
     structurally)."""
 
-    def __init__(self, maxsize: int = 32):
+    def __init__(self, arena: BitmapArena, maxsize: int = 32):
+        self.arena = arena
         self.maxsize = maxsize
-        self.d: "collections.OrderedDict[Itemset, np.ndarray]" = \
+        self.d: "collections.OrderedDict[Itemset, int]" = \
             collections.OrderedDict()
         self.hits = 0
         self.misses = 0
         self.partial_hits = 0
 
-    def _put(self, prefix: Itemset, bm: np.ndarray):
-        self.d[prefix] = bm
+    def _put(self, prefix: Itemset, handle: int):
+        self.d[prefix] = handle
         if len(self.d) > self.maxsize:
-            self.d.popitem(last=False)
+            _, old = self.d.popitem(last=False)
+            self.arena.release(old)
 
-    def get(self, prefix: Itemset, bitmaps: np.ndarray
-            ) -> Tuple[np.ndarray, int]:
+    def get(self, prefix: Itemset) -> Tuple[int, int]:
+        """(caller-retained arena handle, bitmap rows read to build
+        it). The caller must ``release`` the handle when done."""
         d = self.d
+        arena = self.arena
         if prefix in d:
             d.move_to_end(prefix)
             self.hits += 1
-            return d[prefix], 0
+            h = d[prefix]
+            arena.retain(h)
+            return h, 0
         self.misses += 1
         # hierarchical fallback: longest cached ancestor prefix
         for cut in range(len(prefix) - 1, 1, -1):
@@ -119,14 +150,20 @@ class _PrefixCache:
             if parent in d:
                 d.move_to_end(parent)
                 self.partial_hits += 1
-                bm = d[parent]
+                bm = arena.row(d[parent])
                 for item in prefix[cut:]:
-                    bm = bm & bitmaps[item]
-                self._put(prefix, bm)
-                return bm, len(prefix) - cut
-        bm = tidlist.intersect(bitmaps[list(prefix)])
-        self._put(prefix, bm)
-        return bm, len(prefix)
+                    bm = bm & arena.row(item)
+                rows_read = len(prefix) - cut
+                break
+        else:
+            bm = arena.row(prefix[0]).copy()
+            for item in prefix[1:]:
+                bm &= arena.row(item)
+            rows_read = len(prefix)
+        h = arena.push(bm)
+        arena.retain(h)           # the caller's reference, BEFORE _put:
+        self._put(prefix, h)      # maxsize=0 evicts-and-releases at once
+        return h, rows_read
 
 
 def _raise_task_errors(tasks) -> None:
@@ -165,22 +202,32 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
          policy: str = "clustered", n_workers: int = 8,
          max_k: int = 8, cache_size: int = 32,
          granularity: str = "bucket", backend: str = "auto",
+         arena: str = "auto", max_batch: int = MAX_BATCH,
+         flush_us: float = FLUSH_US,
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
     ``granularity`` selects the unit of scheduler task: "bucket" (one
-    task per (k-1)-prefix, vectorized extension sweep), "candidate"
+    task per (k-1)-prefix, batched extension sweep), "candidate"
     (one scalar join per candidate — kept for A/B benchmarking), or
     "depth-first" (barrier-free equivalence-class recursion with
-    parent→child bitmap handoff).
-    ``backend`` names the bucket-sweep executor ("auto", "numpy",
+    parent→child handle handoff).
+    ``backend`` names the sweep executor ("auto", "numpy",
     "pallas-interpret", "pallas-jit"; see repro.core.join_backend).
+    ``arena`` picks the bitmap store's device residency ("auto": lazy
+    device mirror; "jax": eager upload; "numpy": host-only — Pallas
+    backends then re-upload per batch, the old transfer-bound
+    behaviour). ``max_batch``/``flush_us`` tune the sweep dispatcher's
+    coalescing (requests per launch / straggler wait).
     """
     if granularity not in GRANULARITIES:
         raise ValueError(
             f"granularity must be one of {GRANULARITIES}, "
             f"got {granularity!r}")
-    select = make_selector(backend)
+    backend_obj = resolve_backend(backend)
+    store = BitmapArena.from_bitmaps(bitmaps, backing=arena)
+    dispatcher = SweepDispatcher(store, backend_obj, n_clients=n_workers,
+                                 max_batch=max_batch, flush_us=flush_us)
     metrics = MiningMetrics()
     t0 = time.time()
 
@@ -193,14 +240,15 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     caches: Dict[int, _PrefixCache] = {}        # thread ident -> cache
     try:
         if granularity == "depth-first":
-            _mine_depth_first(bitmaps, min_support, max_k, select, sched,
-                              metrics, result, frequent)
+            _mine_depth_first(store, dispatcher, min_support, max_k,
+                              sched, metrics, result, frequent)
         else:
-            _mine_levelwise(bitmaps, min_support, max_k, select, sched,
-                            metrics, result, frequent, granularity,
-                            cache_size, caches)
+            _mine_levelwise(store, dispatcher, min_support, max_k,
+                            sched, metrics, result, frequent,
+                            granularity, cache_size, caches)
     finally:
         sched.shutdown()
+        dispatcher.stop()
 
     metrics.wall_s = time.time() - t0
     metrics.scheduler = sched.merged_stats()
@@ -210,14 +258,19 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     metrics.cache_misses = sum(c.misses for c in caches.values())
     metrics.cache_partial_hits = sum(c.partial_hits
                                      for c in caches.values())
+    metrics.flushes = dispatcher.flushes
+    metrics.batch_occupancy = dispatcher.batch_occupancy
+    metrics.h2d_bytes = store.h2d_bytes
+    metrics.peak_retained_bitmaps = store.peak_live_extra
+    metrics.peak_bytes_retained = store.peak_bytes_extra
     return result, metrics
 
 
-def _mine_levelwise(bitmaps, min_support, max_k, select, sched, metrics,
+def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
                     result, frequent, granularity, cache_size, caches):
     """Level-synchronous engines: plan level k, spawn, barrier, plan
     level k+1 (the paper's §2 shape, at candidate or bucket grain)."""
-    n_w = bitmaps.shape[1]
+    n_w = store.n_words
     lock = threading.Lock()
 
     def _thread_cache() -> _PrefixCache:
@@ -225,14 +278,16 @@ def _mine_levelwise(bitmaps, min_support, max_k, select, sched, metrics,
         c = caches.get(tid)
         if c is None:
             with lock:
-                c = caches.setdefault(tid, _PrefixCache(cache_size))
+                c = caches.setdefault(tid, _PrefixCache(store, cache_size))
         return c
 
-    def _prefix_bitmap(cache: _PrefixCache, prefix: Itemset
-                       ) -> Tuple[np.ndarray, int]:
+    def _prefix_handle(cache: _PrefixCache, prefix: Itemset
+                       ) -> Tuple[int, int]:
+        """Caller-retained handle (release when done; a no-op for the
+        pinned base rows at k=2) + rows read to build it."""
         if len(prefix) == 1:
-            return bitmaps[prefix[0]], 1        # no reuse term at k=2
-        return cache.get(prefix, bitmaps)
+            return prefix[0], 1                 # base row; no reuse at k=2
+        return cache.get(prefix)
 
     def _account(rows: int) -> None:
         st = sched.worker_stats()
@@ -241,18 +296,27 @@ def _mine_levelwise(bitmaps, min_support, max_k, select, sched, metrics,
 
     def count_task(cand: Itemset) -> int:
         cache = _thread_cache()
-        pbm, prows = _prefix_bitmap(cache, cand[:-1])
-        _account(prows + 1)
-        return int(tidlist.popcount32(pbm & bitmaps[cand[-1]]).sum())
+        ph, prows = _prefix_handle(cache, cand[:-1])
+        try:
+            _account(prows + 1)
+            return int(tidlist.popcount32(store.row(ph)
+                                          & store.row(cand[-1])).sum())
+        finally:
+            store.release(ph)
 
     def sweep_task(bucket: Bucket) -> np.ndarray:
-        """Bucket-granularity body: prefix intersection once, then one
-        vectorized sweep over all extensions. Returns [E] counts."""
+        """Bucket-granularity body: resolve the prefix handle once,
+        then one handle-based request on the dispatcher (which batches
+        it with other workers' buckets). Returns [E] counts."""
         cache = _thread_cache()
-        pbm, prows = _prefix_bitmap(cache, bucket.prefix)
-        _account(prows + len(bucket.exts))
-        exts = bitmaps[list(bucket.exts)]
-        return select(len(bucket.exts)).sweep(pbm, exts)
+        ph, prows = _prefix_handle(cache, bucket.prefix)
+        try:
+            _account(prows + len(bucket.exts))
+            st = sched.worker_stats()
+            st.sweeps_submitted += 1
+            return dispatcher.sweep(ph, bucket.exts)
+        finally:
+            store.release(ph)
 
     k = 2
     while frequent and k <= max_k:
@@ -292,69 +356,53 @@ def _mine_levelwise(bitmaps, min_support, max_k, select, sched, metrics,
         k += 1
 
 
-def _mine_depth_first(bitmaps, min_support, max_k, select, sched,
+def _mine_depth_first(store, dispatcher, min_support, max_k, sched,
                       metrics, result, frequent):
     """Barrier-free engine: tasks spawn child equivalence classes.
 
-    A task = one equivalence class (P, E): sweep the |E| extensions
-    against the parent-handed prefix bitmap, record frequent
-    extensions, then for each frequent sibling e (except the last)
-    materialize ``pbm ∧ bitmaps[e]`` ONCE and spawn the child class
-    (P+(e,), {frequent siblings > e}) with that bitmap. The child
-    never recomputes a prefix intersection — the handoff replaces the
-    LRU cache entirely. Eclat shape: no global candidate generation,
-    no Apriori cross-class prune (supports are identical; a few extra
-    infrequent candidates get swept).
+    A task = one equivalence class (P, E) owning an arena handle for
+    P's bitmap: it sweeps the |E| extensions through the dispatcher,
+    records frequent extensions, then for each frequent sibling e
+    (except the last) materializes ``row(P) ∧ row(e)`` ONCE into the
+    arena and spawns the child class (P+(e,), {frequent siblings > e})
+    with the new handle. The child never recomputes a prefix
+    intersection — the handoff replaces the LRU cache entirely. Eclat
+    shape: no global candidate generation, no Apriori cross-class prune
+    (supports are identical; a few extra infrequent candidates get
+    swept).
 
-    Memory bound: a handed bitmap is retained from spawn until its
-    task finishes. With depth-first drain order (scheduler) and
-    spawn-onto-own-worker placement, each worker holds O(depth ×
-    branching) live bitmaps instead of a whole level's worth; the
-    peak is measured in ``metrics.peak_retained_bitmaps`` /
+    Memory bound: a handed row is live from materialize until the
+    child task's ``finally`` releases it (including on task error — an
+    error may NOT leak the refcount, or the arena slot never recycles).
+    With depth-first drain order (scheduler) and spawn-onto-own-worker
+    placement, each worker holds O(depth × branching) live rows instead
+    of a whole level's worth; the peak is measured by the arena and
+    reported as ``metrics.peak_retained_bitmaps`` /
     ``peak_bytes_retained``.
     """
-    n_w = bitmaps.shape[1]
+    n_w = store.n_words
     lock = threading.Lock()
     all_tasks: List = []
-    retained_n = retained_bytes = 0
 
-    def _retain(nbytes: int) -> None:
-        nonlocal retained_n, retained_bytes
-        retained_n += 1
-        retained_bytes += nbytes
-        metrics.peak_retained_bitmaps = max(metrics.peak_retained_bitmaps,
-                                            retained_n)
-        metrics.peak_bytes_retained = max(metrics.peak_bytes_retained,
-                                          retained_bytes)
-
-    def _release(nbytes: int) -> None:
-        nonlocal retained_n, retained_bytes
-        retained_n -= 1
-        retained_bytes -= nbytes
-
-    def class_task(prefix: Itemset, pbm: np.ndarray,
+    def class_task(prefix: Itemset, ph: int,
                    exts: Tuple[int, ...], owned: bool) -> None:
+        children: List[Tuple[Itemset, int, Tuple[int, ...]]] = []
         try:
             k = len(prefix) + 1                 # size of swept itemsets
-            backend = select(len(exts))
-            counts = backend.sweep(pbm, bitmaps[list(exts)])
+            st = sched.worker_stats()
+            st.sweeps_submitted += 1
+            counts = dispatcher.sweep(ph, exts)
             freq = [(e, int(s)) for e, s in zip(exts, counts)
                     if s >= min_support]
             sibs = [e for e, _ in freq]         # ascending (exts sorted)
-            children: List[Tuple[Itemset, np.ndarray, Tuple[int, ...]]] \
-                = []
             if k < max_k and len(freq) > 1:
-                children = [(prefix + (e,),
-                             backend.materialize(pbm, bitmaps[e]),
-                             tuple(sibs[i + 1:]))
-                            for i, e in enumerate(sibs[:-1])]
+                for i, e in enumerate(sibs[:-1]):
+                    children.append((prefix + (e,),
+                                     store.materialize(ph, e),
+                                     tuple(sibs[i + 1:])))
             rows = class_rows_touched(len(exts), len(children))
-            st = sched.worker_stats()
             st.rows_touched += rows
             st.bytes_swept += rows_to_bytes(rows, n_w)
-            # ONE lock round-trip per class for metrics + retains (the
-            # retain must precede the spawn: a fast child could finish
-            # and _release before a late _retain, skewing the gauge)
             with lock:
                 metrics.buckets += 1
                 metrics.candidates += len(exts)
@@ -362,27 +410,34 @@ def _mine_depth_first(bitmaps, min_support, max_k, select, sched,
                 metrics.frequent += len(freq)
                 for e, s in freq:
                     result[prefix + (e,)] = s
-                for _, cbm, _ in children:
-                    _retain(cbm.nbytes)
-            if not children:
-                return
-            spawned = [sched.spawn(class_task, cprefix, cbm, csibs, True,
-                                   attr=(itemset_hash(cprefix), cprefix),
-                                   depth=len(cprefix))
-                       for cprefix, cbm, csibs in children]
-            with lock:
-                all_tasks.extend(spawned)
+            spawned = []
+            while children:
+                cprefix, ch, csibs = children[0]
+                spawned.append(
+                    sched.spawn(class_task, cprefix, ch, csibs, True,
+                                attr=(itemset_hash(cprefix), cprefix),
+                                depth=len(cprefix)))
+                children.pop(0)       # ownership moved to the child task
+            if spawned:
+                with lock:
+                    all_tasks.extend(spawned)
+        except BaseException:
+            # refcount hygiene on error: materialized handles whose
+            # child tasks never spawned must release here or the rows
+            # leak for the rest of the run
+            for _, ch, _ in children:
+                store.release(ch)
+            raise
         finally:
             if owned:
-                with lock:
-                    _release(pbm.nbytes)
+                store.release(ph)
 
     if max_k >= 2 and len(frequent) > 1:
         items = [p[0] for p in frequent]        # sorted singleton items
         for i, it in enumerate(items[:-1]):
-            # root classes hand the base bitmap row itself (a view —
-            # nothing materialized, nothing retained)
-            t = sched.spawn(class_task, (it,), bitmaps[it],
+            # root classes hand the pinned base row's handle (== item
+            # id — nothing materialized, nothing retained)
+            t = sched.spawn(class_task, (it,), it,
                             tuple(items[i + 1:]), False,
                             attr=(itemset_hash((it,)), (it,)),
                             depth=1)

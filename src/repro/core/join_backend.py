@@ -1,84 +1,156 @@
-"""Pluggable join backends for the bucket-sweep mining engine.
+"""Batched join backends + the sweep dispatcher.
 
 A *bucket sweep* is the paper's per-task TID join restructured at bucket
-granularity: given one (k-1)-prefix bitmap and the bucket's E extension
-bitmaps, produce the E support counts in one vectorized call. Three
-interchangeable executors:
+granularity: one (k-1)-prefix bitmap against the bucket's E extension
+bitmaps, producing E support counts in one vectorized call. The old
+design gave every scheduler worker its own single-prefix ``sweep`` call
+and serialized all JAX dispatch behind a module-global lock, so the
+"TPU fast path" was transfer-bound (every sweep re-uploaded its
+extension bitmaps host→device) and single-dispatch.
 
-  numpy             ``tidlist.support_counts`` — one fused AND+popcount
-                    ufunc pass, GIL-released, the right choice for the
-                    threaded shared-memory scheduler on CPU.
-  pallas-interpret  the Pallas ``bitmap_join`` kernel under the Pallas
-                    interpreter — bit-exact with the TPU kernel,
-                    runnable anywhere (parity tests, debugging).
-  pallas-jit        the compiled Pallas kernel — TPU only; keeps the
-                    prefix tile VMEM-resident across the extension
-                    sweep (the clustered policy's reuse, structural).
+This layer inverts that around two pieces:
 
-``make_selector`` returns the per-bucket choice function the engine
-uses: backends are picked by extension count, so tiny buckets skip
-kernel-launch overhead while large buckets get the tiled sweep.
+  ``BitmapArena`` (repro.core.tidlist)  every bitmap lives in one
+      refcounted, append-only row store with integer handles; the
+      device mirror is synced incrementally, so repeated sweeps cost
+      ~one initial upload instead of one upload per sweep.
+  ``SweepDispatcher``  workers enqueue handle-based ``SweepRequest``s
+      and block on a future; one dedicated dispatcher thread coalesces
+      pending requests into a padded batch and launches ONE
+      multi-prefix ``bitmap_join_many`` kernel for all of them. Only
+      the dispatcher thread ever touches JAX — no lock exists at all.
+
+Backends implement the same batched API:
+
+  numpy             per-request ``tidlist.support_counts`` over
+                    zero-copy arena row views — GIL-released ufunc
+                    passes, the CPU tier-1 path. It runs through the
+                    identical dispatcher/batching code as the kernels.
+  pallas-interpret  ``bitmap_join_many`` under the Pallas interpreter —
+                    bit-exact with the TPU kernel, runnable anywhere.
+  pallas-jit        the compiled kernel — TPU only; each request's
+                    prefix tile stays VMEM-resident across its
+                    extension sweep while B requests share the launch.
 """
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List, Optional
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import tidlist
+from repro.core.tidlist import BitmapArena
 
-# Buckets at least this wide amortize a Pallas kernel launch (one E-tile
-# of the kernel's grid); narrower buckets stay on the numpy path.
-PALLAS_MIN_EXTS = 256
+# Dispatcher defaults: how many requests one kernel launch may carry,
+# and how long (µs) the dispatcher waits for stragglers to coalesce
+# before flushing a partial batch.
+MAX_BATCH = 32
+FLUSH_US = 200.0
 
-_jax_lock = threading.Lock()
+
+@dataclass
+class SweepRequest:
+    """One bucket sweep, by handle: counts[i] = |row(prefix) ∧ row(ext_i)|."""
+    prefix_handle: int
+    ext_handles: Tuple[int, ...]
+    future: Future = field(default_factory=Future)
 
 
 class JoinBackend:
-    """sweep(prefix, exts) -> counts. prefix: [W] uint32; exts: [E, W]
-    uint32; counts: [E] int64."""
+    """Batched executor: ``sweep_many(arena, requests)`` returns one
+    int64 counts array per request (ragged — each sized to the
+    request's own extension count)."""
 
     name: str = "base"
 
-    def sweep(self, prefix: np.ndarray, exts: np.ndarray) -> np.ndarray:
+    def sweep_many(self, arena: BitmapArena,
+                   requests: Sequence[SweepRequest]) -> List[np.ndarray]:
         raise NotImplementedError
-
-    def materialize(self, prefix: np.ndarray, ext: np.ndarray
-                    ) -> np.ndarray:
-        """prefix ∧ ext as a fresh owned array — the parent→child bitmap
-        handoff of the depth-first engine. Computed exactly once per
-        frequent child; the child never recomputes or cache-probes its
-        prefix intersection. One ufunc pass on every backend (the
-        Pallas backends sweep counts on device but materialize child
-        bitmaps host-side, where the scheduler hands them off)."""
-        return prefix & ext
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<JoinBackend {self.name}>"
 
 
 class NumpyBackend(JoinBackend):
+    """Zero-copy arena row views into the fused AND+popcount ufunc
+    pass. Runs per-request (no padding copies), but through the same
+    dispatcher path as the kernels so CPU tier-1 tests exercise the
+    identical request/batch/flush machinery."""
+
     name = "numpy"
 
-    def sweep(self, prefix, exts):
-        return tidlist.support_counts(prefix, exts)
+    def sweep_many(self, arena, requests):
+        rows = arena.rows_view()
+        return [tidlist.support_counts(rows[r.prefix_handle],
+                                       arena.gather(r.ext_handles))
+                for r in requests]
+
+
+def _pow2(n: int, lo: int = 1) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+# E-padding floor = the batched kernel's E tile (kernel.EB_TILE, not
+# imported to keep jax out of this module's import path): any narrower
+# pad would be re-padded to one tile inside the kernel anyway, so
+# distinct sub-tile shapes would only multiply jit compilations.
+E_PAD_FLOOR = 64
 
 
 class _PallasBackend(JoinBackend):
-    """Shared plumbing: numpy in, numpy out, jax under a lock (jax
-    dispatch is not re-entrant across scheduler worker threads)."""
+    """Shared plumbing for the kernel modes: pad the ragged batch to
+    [B', E', W], gather rows (on device when the arena has a mirror,
+    host-side otherwise), launch one ``bitmap_join_many``, slice each
+    request's counts back out. B and E pad to powers of two so the jit
+    cache stays bounded (~log × log shapes per run)."""
 
     mode = "pallas-interpret"
 
-    def sweep(self, prefix, exts):
+    def sweep_many(self, arena, requests):
         import jax.numpy as jnp
 
-        from repro.kernels.bitmap_join.ops import bitmap_join
-        with _jax_lock:
-            out = bitmap_join(jnp.asarray(prefix), jnp.asarray(exts),
-                              mode=self.mode)
-            return np.asarray(out).astype(np.int64)
+        from repro.kernels.bitmap_join.ops import bitmap_join_many
+        b = len(requests)
+        emax = max(len(r.ext_handles) for r in requests)
+        bp = _pow2(b)
+        ep = _pow2(emax, lo=E_PAD_FLOOR)
+        pidx = np.zeros(bp, np.int32)
+        eidx = np.zeros((bp, ep), np.int32)
+        mask = np.zeros((bp, ep), bool)
+        for i, r in enumerate(requests):
+            pidx[i] = r.prefix_handle
+            n = len(r.ext_handles)
+            eidx[i, :n] = r.ext_handles
+            mask[i, :n] = True
+        dev = arena.device_rows()
+        if dev is not None:
+            # arena-gather path: bitmaps are already device-resident,
+            # only the (tiny) index arrays cross host→device
+            prefixes = dev[jnp.asarray(pidx)]
+            exts = dev[jnp.asarray(eidx.reshape(-1))].reshape(
+                bp, ep, arena.n_words)
+        else:
+            # host-gather baseline (arena backing "numpy"): the old
+            # transfer-bound behaviour — every batch re-uploads its
+            # bitmap payload, and the gauge records it
+            rows = arena.rows_view()
+            ph = rows[pidx]
+            eh = rows[eidx.reshape(-1)].reshape(bp, ep, arena.n_words)
+            arena.count_h2d(ph.nbytes + eh.nbytes)
+            prefixes = jnp.asarray(ph)
+            exts = jnp.asarray(eh)
+        counts = np.asarray(bitmap_join_many(prefixes, exts,
+                                             jnp.asarray(mask),
+                                             mode=self.mode))
+        return [counts[i, :len(r.ext_handles)].astype(np.int64)
+                for i, r in enumerate(requests)]
 
 
 class PallasInterpretBackend(_PallasBackend):
@@ -126,32 +198,126 @@ def available_backends() -> List[str]:
     return names
 
 
-Selector = Callable[[int], JoinBackend]
+def resolve_backend(spec: str = "auto") -> JoinBackend:
+    """One backend per run (batching replaced the per-bucket choice:
+    narrow buckets now amortize a launch by sharing it, so there is no
+    tiny-bucket penalty to route around). "auto" is the compiled
+    kernel on TPU and numpy on CPU — the interpreter is a correctness
+    tool, not a fast path."""
+    if spec == "auto":
+        return get_backend("pallas-jit" if _on_tpu() else "numpy")
+    avail = available_backends()
+    if spec not in avail:
+        # fail fast: an unavailable backend must error here, not
+        # inside a scheduler worker thread mid-mine
+        get_backend(spec)                     # unknown name -> ValueError
+        raise ValueError(
+            f"join backend {spec!r} is not available on this host "
+            f"(available: {avail})")
+    return get_backend(spec)
 
 
-def make_selector(spec: str = "auto",
-                  min_pallas_exts: int = PALLAS_MIN_EXTS) -> Selector:
-    """Per-bucket backend choice, keyed by extension count.
+class SweepDispatcher:
+    """Coalesces many workers' sweep requests into batched launches.
 
-    ``spec`` is either a backend name (constant choice) or "auto":
-    numpy for narrow buckets, the Pallas kernel (compiled on TPU) for
-    buckets wide enough to fill a kernel E-tile. On CPU "auto" is
-    always numpy — the interpreter is a correctness tool, not a fast
-    path.
+    Workers call :meth:`sweep` (or :meth:`submit` + ``future.result()``)
+    and block; the dedicated dispatcher thread gathers pending requests
+    and flushes a batch when either
+
+      * ``min(max_batch, n_clients)`` requests are pending — since
+        ``sweep`` blocks its caller, pending requests count currently
+        blocked clients, so once every client is waiting no further
+        request can arrive and waiting longer is pure latency; or
+      * ``flush_us`` elapsed since the flush started forming — bounding
+        the latency a lone straggler pays when other workers are busy
+        with non-sweep work.
+
+    Errors from the backend resolve every future in the flight batch,
+    so task bodies re-raise through the scheduler's normal task-error
+    machinery. ``batch_occupancy`` (requests per flush) is the gauge
+    that shows whether batching actually happened — the granularity
+    benchmark asserts it stays above 1 so the dispatcher cannot
+    silently degrade to one-bucket launches.
     """
-    if spec != "auto":
-        avail = available_backends()
-        if spec not in avail:
-            # fail fast: an unavailable backend must error here, not
-            # inside a scheduler worker thread mid-mine
-            get_backend(spec)                 # unknown name -> ValueError
-            raise ValueError(
-                f"join backend {spec!r} is not available on this host "
-                f"(available: {avail})")
-        backend = get_backend(spec)
-        return lambda n_exts: backend
-    small = get_backend("numpy")
-    if not _on_tpu():
-        return lambda n_exts: small
-    big = get_backend("pallas-jit")
-    return lambda n_exts: big if n_exts >= min_pallas_exts else small
+
+    def __init__(self, arena: BitmapArena, backend: JoinBackend,
+                 n_clients: int, max_batch: int = MAX_BATCH,
+                 flush_us: float = FLUSH_US):
+        self.arena = arena
+        self.backend = backend
+        self.n_clients = max(1, n_clients)
+        self.max_batch = max(1, max_batch)
+        self.flush_s = max(0.0, flush_us) * 1e-6
+        self._pending: List[SweepRequest] = []
+        self._cv = threading.Condition()
+        self._stop = False
+        self.flushes = 0
+        self.requests = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="sweep-dispatcher")
+        self._thread.start()
+
+    # ------------------------------------------------------------ client --
+    def submit(self, prefix_handle: int,
+               ext_handles: Sequence[int]) -> Future:
+        req = SweepRequest(int(prefix_handle), tuple(ext_handles))
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("dispatcher is stopped")
+            self._pending.append(req)
+            self._cv.notify_all()
+        return req.future
+
+    def sweep(self, prefix_handle: int,
+              ext_handles: Sequence[int]) -> np.ndarray:
+        """Blocking convenience: enqueue and wait for the counts."""
+        return self.submit(prefix_handle, ext_handles).result()
+
+    @property
+    def batch_occupancy(self) -> float:
+        return self.requests / self.flushes if self.flushes else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {"flushes": self.flushes, "sweep_requests": self.requests,
+                "batch_occupancy": self.batch_occupancy,
+                "h2d_bytes": self.arena.h2d_bytes}
+
+    # -------------------------------------------------------------- loop --
+    def _loop(self):
+        full = min(self.max_batch, self.n_clients)
+        while True:
+            with self._cv:
+                while not self._pending and not self._stop:
+                    self._cv.wait()
+                if not self._pending and self._stop:
+                    return
+                if len(self._pending) < full and not self._stop:
+                    deadline = time.monotonic() + self.flush_s
+                    while len(self._pending) < full and not self._stop:
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            break
+                        self._cv.wait(timeout=left)
+                batch = self._pending[:self.max_batch]
+                del self._pending[:self.max_batch]
+            self.flushes += 1
+            self.requests += len(batch)
+            try:
+                results = self.backend.sweep_many(self.arena, batch)
+            except BaseException as e:  # noqa: BLE001 - resolve futures:
+                for r in batch:         # a swallowed error would deadlock
+                    r.future.set_exception(e)   # every blocked worker
+            else:
+                for r, counts in zip(batch, results):
+                    r.future.set_result(counts)
+
+    def stop(self):
+        """Drain pending requests, then join the dispatcher thread."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._thread.join(timeout=10)
+        with self._cv:                  # only non-empty if the thread died
+            leftover, self._pending = self._pending, []
+        for r in leftover:              # pragma: no cover - crash path
+            r.future.set_exception(RuntimeError("dispatcher stopped"))

@@ -51,6 +51,10 @@ class WorkerStats:
     # rows/bytes they swept via TaskScheduler.worker_stats()
     rows_touched: int = 0
     bytes_swept: int = 0
+    # handle-based sweep requests this worker enqueued on the sweep
+    # dispatcher (repro.core.join_backend); together with the
+    # dispatcher's flush count this yields batch_occupancy
+    sweeps_submitted: int = 0
 
 
 class SchedulingPolicy:
@@ -437,6 +441,7 @@ class TaskScheduler:
                                 / max(steals, 1)),
             "rows_touched": sum(w.rows_touched for w in s),
             "bytes_swept": sum(w.bytes_swept for w in s),
+            "sweeps_submitted": sum(w.sweeps_submitted for w in s),
         }
 
 

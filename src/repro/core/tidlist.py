@@ -9,7 +9,8 @@ re-expressed; DESIGN.md §3).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Sequence, Tuple
+import threading
+from typing import List, Sequence
 
 import numpy as np
 
@@ -21,13 +22,20 @@ def n_words(n_transactions: int) -> int:
 
 
 def pack_database(db: Sequence[Sequence[int]], n_items: int) -> np.ndarray:
-    """db: list of transactions (item id lists) -> [n_items, W] uint32."""
+    """db: list of transactions (item id lists) -> [n_items, W] uint32.
+
+    Packs per-word directly — O(n_items × W) memory, never the dense
+    [n_items, n_transactions] bool matrix (which on scaled Quest/retail
+    profiles could exceed the packed bitmaps by 32× and blow host
+    memory before mining even starts)."""
     m = len(db)
-    bits = np.zeros((n_items, m), dtype=bool)
+    out = np.zeros((n_items, n_words(m)), dtype=np.uint32)
     for t, txn in enumerate(db):
+        word = t >> 5
+        bit = np.uint32(1 << (t & 31))
         for i in txn:
-            bits[i, t] = True
-    return pack_bool(bits)
+            out[i, word] |= bit
+    return out
 
 
 def pack_bool(bits: np.ndarray) -> np.ndarray:
@@ -55,7 +63,8 @@ def popcount32(x: np.ndarray) -> np.ndarray:
     """Vectorized popcount for uint32 arrays (numpy, GIL-released)."""
     if hasattr(np, "bitwise_count"):          # numpy >= 2.0: one ufunc pass
         return np.bitwise_count(x).astype(np.int64)
-    x = x.astype(np.uint32)
+    if x.dtype != np.uint32:                  # hot path: no copy when the
+        x = x.astype(np.uint32)               # input is already uint32
     x = x - ((x >> 1) & np.uint32(0x55555555))
     x = (x & np.uint32(0x33333333)) + ((x >> 2) & np.uint32(0x33333333))
     x = (x + (x >> 4)) & np.uint32(0x0F0F0F0F)
@@ -104,3 +113,246 @@ def support_counts(prefix: np.ndarray, exts: np.ndarray,
         hi = min(lo + chunk, e)
         out[lo:hi] = popcount32(exts[lo:hi] & prefix[None, :]).sum(axis=1)
     return out
+
+
+# ---------------------------------------------------------------------------
+# BitmapArena: the device-resident home of every TID bitmap
+# ---------------------------------------------------------------------------
+
+ARENA_BACKINGS = ("auto", "numpy", "jax")
+
+
+class BitmapArena:
+    """Append-only ``[N, W]`` uint32 row store with integer handles.
+
+    Every bitmap the mining engines touch lives here: the pinned item
+    bitmaps loaded once by :meth:`from_bitmaps` (handle == item id),
+    cached prefix intersections, and the depth-first engine's
+    materialized child bitmaps. Tasks pass *handles* around instead of
+    floating ndarrays, so the sweep dispatcher can batch many workers'
+    requests into one multi-prefix kernel launch without re-marshalling
+    bitmap payloads.
+
+    Rows are refcounted: :meth:`push`/:meth:`materialize` return a
+    handle with refcount 1, :meth:`retain`/:meth:`release` adjust it,
+    and a row whose count reaches zero goes on a free list — the next
+    push reuses the slot, so the depth-first engine's churn of child
+    bitmaps recycles storage instead of growing ``N`` without bound.
+    Rows below ``n_base`` (the item bitmaps) are pinned: retain/release
+    on them are no-ops.
+
+    Device residency (``backing``):
+      "auto"   a jax mirror is created lazily on the first
+               :meth:`device_rows` call and kept in sync incrementally —
+               only rows appended or recycled since the last sync are
+               uploaded, and those payload bytes accumulate in
+               ``h2d_bytes`` (index uploads, 4 B/row vs ``4·W`` B of
+               payload, are not counted).
+      "jax"    same, but the initial upload happens eagerly at load.
+      "numpy"  host-only; :meth:`device_rows` returns None, so Pallas
+               backends fall back to per-batch host gathers (the old
+               transfer-bound behaviour, kept as the A/B baseline for
+               the h2d benchmark).
+
+    Thread-safe: workers push/release concurrently; the single
+    dispatcher thread syncs the device mirror. Growth reallocates the
+    backing store, but handed-out row views keep the old buffer alive
+    and live rows are never mutated, so views stay content-correct.
+    """
+
+    GROW = 2                      # capacity doubling factor
+
+    def __init__(self, n_words_: int, backing: str = "auto",
+                 capacity: int = 64):
+        if backing not in ARENA_BACKINGS:
+            raise ValueError(
+                f"arena backing must be one of {ARENA_BACKINGS}, "
+                f"got {backing!r}")
+        self.n_words = n_words_
+        self.backing = backing
+        self._rows = np.zeros((max(capacity, 1), n_words_), np.uint32)
+        self._refs = np.zeros(max(capacity, 1), np.int32)
+        self.n_rows = 0               # high-water mark (rows ever used)
+        self.n_base = 0               # pinned item rows [0, n_base)
+        self._free: List[int] = []
+        self._lock = threading.Lock()
+        # live-row gauges (rows beyond the pinned base — the engines'
+        # retained-bitmap memory bound)
+        self.live_extra = 0
+        self.peak_live_extra = 0
+        # device mirror state
+        self._dev = None              # jax array [_dev_n, W] or None
+        self._dev_n = 0               # rows synced to the device
+        self._dirty: set = set()      # recycled rows < _dev_n rewritten
+        self.h2d_bytes = 0            # bitmap payload uploaded, total
+
+    # ------------------------------------------------------------- load --
+    @classmethod
+    def from_bitmaps(cls, bitmaps: np.ndarray, backing: str = "auto"
+                     ) -> "BitmapArena":
+        """Load packed item bitmaps as the pinned base rows (handle ==
+        item id). One copy, once — every later sweep references rows by
+        handle instead of re-marshalling them."""
+        n, w = bitmaps.shape
+        arena = cls(w, backing, capacity=max(64, 2 * n))
+        arena._rows[:n] = bitmaps
+        arena._refs[:n] = 1
+        arena.n_rows = arena.n_base = n
+        if backing == "jax":
+            arena.device_rows()       # eager initial upload
+        return arena
+
+    @classmethod
+    def from_database(cls, db: Sequence[Sequence[int]], n_items: int,
+                      backing: str = "auto") -> "BitmapArena":
+        """pack_database straight into the arena (no intermediate)."""
+        return cls.from_bitmaps(pack_database(db, n_items), backing)
+
+    # ------------------------------------------------------ row lifecycle --
+    def _alloc_slot(self) -> int:
+        # caller holds self._lock
+        if self._free:
+            slot = self._free.pop()
+            if slot < self._dev_n:
+                self._dirty.add(slot)     # mirror holds stale content
+            return slot
+        if self.n_rows == self._rows.shape[0]:
+            cap = self.GROW * self._rows.shape[0]
+            rows = np.zeros((cap, self.n_words), np.uint32)
+            rows[:self.n_rows] = self._rows[:self.n_rows]
+            refs = np.zeros(cap, np.int32)
+            refs[:self.n_rows] = self._refs[:self.n_rows]
+            self._rows, self._refs = rows, refs
+        slot = self.n_rows
+        self.n_rows += 1
+        return slot
+
+    def _bump_live(self) -> None:
+        self.live_extra += 1
+        self.peak_live_extra = max(self.peak_live_extra, self.live_extra)
+
+    def push(self, row: np.ndarray) -> int:
+        """Append (or recycle a slot for) one bitmap row; refcount 1."""
+        with self._lock:
+            slot = self._alloc_slot()
+            self._rows[slot] = row
+            self._refs[slot] = 1
+            self._bump_live()
+            return slot
+
+    def materialize(self, prefix_handle: int, ext_handle: int) -> int:
+        """``row(prefix) ∧ row(ext)`` appended in place — the depth-first
+        parent→child handoff, with no floating temporary."""
+        with self._lock:
+            slot = self._alloc_slot()
+            np.bitwise_and(self._rows[prefix_handle],
+                           self._rows[ext_handle],
+                           out=self._rows[slot])
+            self._refs[slot] = 1
+            self._bump_live()
+            return slot
+
+    def retain(self, handle: int) -> None:
+        if handle < self.n_base:
+            return                    # pinned item row
+        with self._lock:
+            self._refs[handle] += 1
+
+    def release(self, handle: int) -> None:
+        if handle < self.n_base:
+            return                    # pinned item row
+        with self._lock:
+            self._refs[handle] -= 1
+            if self._refs[handle] == 0:
+                self._free.append(handle)
+                self.live_extra -= 1
+            elif self._refs[handle] < 0:   # pragma: no cover - API misuse
+                raise RuntimeError(f"double release of handle {handle}")
+
+    def refcount(self, handle: int) -> int:
+        return int(self._refs[handle])
+
+    # ------------------------------------------------------------ access --
+    def row(self, handle: int) -> np.ndarray:
+        """Zero-copy [W] view of one live row."""
+        return self._rows[handle]
+
+    def rows_view(self) -> np.ndarray:
+        """Zero-copy [n_rows, W] view of the whole store (numpy backend
+        sweeps index this directly)."""
+        return self._rows[:self.n_rows]
+
+    def gather(self, handles: Sequence[int]) -> np.ndarray:
+        """Rows for ``handles`` — a zero-copy slice view when the
+        handles are contiguous (item ranges often are), a fancy-index
+        copy otherwise."""
+        h0 = handles[0]
+        n = len(handles)
+        if all(handles[i] == h0 + i for i in range(1, n)):
+            return self._rows[h0:h0 + n]
+        return self._rows[list(handles)]
+
+    @property
+    def live_bytes_extra(self) -> int:
+        return self.live_extra * self.n_words * 4
+
+    @property
+    def peak_bytes_extra(self) -> int:
+        return self.peak_live_extra * self.n_words * 4
+
+    @property
+    def nbytes_base(self) -> int:
+        return self.n_base * self.n_words * 4
+
+    # ------------------------------------------------------------ device --
+    @property
+    def device_enabled(self) -> bool:
+        return self.backing != "numpy"
+
+    def device_rows(self):
+        """jax mirror of ``rows_view()``, synced incrementally (only
+        the dispatcher thread calls this). Returns None for host-only
+        ("numpy") backing.
+
+        "Incremental" bounds host→device PAYLOAD (the ``h2d_bytes``
+        gauge): only changed rows cross the bus. The functional update
+        (concatenate / ``.at[].set``) still rebuilds the mirror buffer
+        on device, an O(n_rows) device-to-device copy per sync with
+        fresh rows — acceptable while mirrors are MBs; a donated
+        preallocated buffer would remove it when arenas reach device
+        memory scale."""
+        if not self.device_enabled:
+            return None
+        with self._lock:
+            n = self.n_rows
+            lo = self._dev_n
+            fresh = self._rows[lo:n].copy() if n > lo else None
+            dirty = sorted(d for d in self._dirty if d < lo)
+            dirty_rows = self._rows[dirty].copy() if dirty else None
+            self._dirty.clear()
+            self._dev_n = n
+        import jax.numpy as jnp
+        row_bytes = self.n_words * 4
+        dev = self._dev
+        if dev is None:
+            dev = jnp.asarray(self._rows[:n])
+            self.h2d_bytes += n * row_bytes
+        else:
+            if fresh is not None:
+                dev = jnp.concatenate([dev, jnp.asarray(fresh)])
+                self.h2d_bytes += fresh.shape[0] * row_bytes
+            if dirty_rows is not None:
+                dev = dev.at[jnp.asarray(dirty, dtype=jnp.int32)
+                             ].set(jnp.asarray(dirty_rows))
+                self.h2d_bytes += dirty_rows.shape[0] * row_bytes
+        self._dev = dev
+        return dev
+
+    def count_h2d(self, nbytes: int) -> None:
+        """Backends add per-batch host→device payload here (the
+        host-gather fallback path)."""
+        self.h2d_bytes += nbytes
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        return (f"<BitmapArena rows={self.n_rows} base={self.n_base} "
+                f"live_extra={self.live_extra} backing={self.backing}>")

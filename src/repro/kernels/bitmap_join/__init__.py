@@ -1,1 +1,2 @@
-from repro.kernels.bitmap_join.ops import bitmap_join  # noqa: F401
+from repro.kernels.bitmap_join.ops import (bitmap_join,  # noqa: F401
+                                           bitmap_join_many)

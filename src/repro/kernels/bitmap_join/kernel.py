@@ -65,3 +65,63 @@ def bitmap_join_kernel(prefix: jnp.ndarray, exts: jnp.ndarray,
         interpret=interpret,
     )(prefix[None, :], exts)
     return out[:e]
+
+
+# ---------------------------------------------------------------------------
+# Multi-prefix (batched) variant: one grid launch for B coalesced sweeps
+# ---------------------------------------------------------------------------
+
+# The batched kernel serves dispatcher batches where most requests are
+# narrow (tens of extensions), so its E-tile is smaller than the
+# single-prefix kernel's: [64, 512] words = 128 KiB uint32 per exts
+# block, still lane-aligned (512 = 4×128) and VMEM-comfortable.
+EB_TILE = 64
+WB_TILE = 512
+
+
+def _many_kernel(prefixes_ref, exts_ref, out_ref):
+    w_idx = pl.program_id(2)
+
+    @pl.when(w_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = prefixes_ref[...]                     # [1, Wt] uint32 (VMEM,
+                                              # resident across the
+                                              # request's E sweep)
+    e = exts_ref[0]                           # [Et, Wt] uint32
+    joined = jnp.bitwise_and(e, p)            # broadcast over E
+    counts = jax.lax.population_count(joined).astype(jnp.int32)
+    out_ref[0, :] += jnp.sum(counts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_join_many_kernel(prefixes: jnp.ndarray, exts: jnp.ndarray,
+                            *, interpret: bool = False) -> jnp.ndarray:
+    """prefixes: [B, W] uint32; exts: [B, E, W] uint32 -> [B, E] int32.
+
+    B coalesced sweep requests share one grid launch; within each
+    batch row the request's prefix tile stays VMEM-resident across its
+    extension sweep (same reuse as the single-prefix kernel). E and W
+    are padded to tile multiples — zero words count nothing, and the
+    dispatcher slices each request's real extension count out.
+    """
+    b, e, w = exts.shape
+    ep = (e + EB_TILE - 1) // EB_TILE * EB_TILE
+    wp = (w + WB_TILE - 1) // WB_TILE * WB_TILE
+    if (ep, wp) != (e, w):
+        exts = jnp.pad(exts, ((0, 0), (0, ep - e), (0, wp - w)))
+        prefixes = jnp.pad(prefixes, ((0, 0), (0, wp - w)))
+    grid = (b, ep // EB_TILE, wp // WB_TILE)
+    out = pl.pallas_call(
+        _many_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, WB_TILE), lambda bi, i, j: (bi, j)),
+            pl.BlockSpec((1, EB_TILE, WB_TILE), lambda bi, i, j: (bi, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, EB_TILE), lambda bi, i, j: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ep), jnp.int32),
+        interpret=interpret,
+    )(prefixes, exts)
+    return out[:, :e]

@@ -4,8 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.bitmap_join.kernel import bitmap_join_kernel
-from repro.kernels.bitmap_join.ref import bitmap_join_ref
+from repro.kernels.bitmap_join.kernel import (bitmap_join_kernel,
+                                              bitmap_join_many_kernel)
+from repro.kernels.bitmap_join.ref import (bitmap_join_many_ref,
+                                           bitmap_join_ref)
 
 MODES = ("auto", "ref", "pallas-interpret", "pallas-jit")
 
@@ -40,3 +42,32 @@ def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
     return bitmap_join_kernel(prefix, exts,
                               interpret=bool(interpret if interpret
                                              is not None else not on_tpu))
+
+
+def bitmap_join_many(prefixes: jnp.ndarray, exts: jnp.ndarray,
+                     mask: jnp.ndarray | None = None,
+                     *, mode: str = "auto") -> jnp.ndarray:
+    """Batched multi-prefix join: counts[b, e] = |prefixes[b] ∧ exts[b, e]|.
+
+    prefixes: [B, W] uint32; exts: [B, E_max, W] uint32; optional mask
+    [B, E_max] bool zeroes padded lanes of ragged batches (the sweep
+    dispatcher pads every request to E_max). One kernel launch covers
+    all B requests — the dispatcher's coalescing unit.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "ref":
+        counts = jax.jit(bitmap_join_many_ref)(prefixes, exts)
+    elif mode == "pallas-interpret":
+        counts = bitmap_join_many_kernel(prefixes, exts, interpret=True)
+    elif mode == "pallas-jit":
+        counts = bitmap_join_many_kernel(prefixes, exts, interpret=False)
+    else:                                     # auto: Pallas on TPU only
+        if jax.default_backend() == "tpu":
+            counts = bitmap_join_many_kernel(prefixes, exts,
+                                             interpret=False)
+        else:
+            counts = jax.jit(bitmap_join_many_ref)(prefixes, exts)
+    if mask is not None:
+        counts = jnp.where(mask, counts, 0)
+    return counts

@@ -10,3 +10,13 @@ def bitmap_join_ref(prefix: jnp.ndarray, exts: jnp.ndarray) -> jnp.ndarray:
     joined = jnp.bitwise_and(exts, prefix[None, :])
     return jnp.sum(jax.lax.population_count(joined).astype(jnp.int32),
                    axis=1)
+
+
+def bitmap_join_many_ref(prefixes: jnp.ndarray, exts: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Batched (multi-prefix) oracle: prefixes [B, W] uint32, exts
+    [B, E, W] uint32 -> counts [B, E] int32. One batch row per sweep
+    request; masking of ragged/padded lanes happens in ops."""
+    joined = jnp.bitwise_and(exts, prefixes[:, None, :])
+    return jnp.sum(jax.lax.population_count(joined).astype(jnp.int32),
+                   axis=2)

@@ -28,6 +28,18 @@ def main():
     ap.add_argument("--backend", default="auto",
                     help="join backend: auto|numpy|pallas-interpret|"
                          "pallas-jit")
+    ap.add_argument("--arena", default="auto",
+                    choices=["auto", "numpy", "jax"],
+                    help="bitmap arena backing: auto (lazy device "
+                         "mirror), jax (eager upload), numpy "
+                         "(host-only; Pallas backends re-upload per "
+                         "batch — the transfer-bound baseline)")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="sweep dispatcher: max requests per batched "
+                         "kernel launch")
+    ap.add_argument("--flush-us", type=float, default=200.0,
+                    help="sweep dispatcher: µs to wait for straggler "
+                         "requests before flushing a partial batch")
     ap.add_argument("--support", type=float, default=None,
                     help="override the profile's min-support fraction")
     ap.add_argument("--max-k", type=int, default=6)
@@ -52,7 +64,8 @@ def main():
         res, met = mine(bitmaps, ms, policy=policy,
                         n_workers=args.workers, max_k=args.max_k,
                         granularity=args.granularity,
-                        backend=args.backend)
+                        backend=args.backend, arena=args.arena,
+                        max_batch=args.max_batch, flush_us=args.flush_us)
         assert res == ref, f"{policy} result mismatch!"
         s = met.scheduler
         line = (f"{policy:10s} wall={met.wall_s:6.2f}s "
@@ -60,6 +73,9 @@ def main():
                 f"cache_hit={met.cache_hit_rate:5.1%} "
                 f"steals={int(s['steals']):6d} "
                 f"tasks/steal={s['tasks_per_steal']:5.2f}")
+        if met.flushes:
+            line += (f" batch_occ={met.batch_occupancy:4.2f} "
+                     f"flushes={met.flushes} h2d={met.h2d_bytes}B")
         if args.granularity == "depth-first":
             line += (f" peak_retained={met.peak_retained_bitmaps}"
                      f" ({met.peak_bytes_retained} B)")

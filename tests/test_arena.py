@@ -1,0 +1,195 @@
+"""BitmapArena lifecycle: refcounts, handle reuse, device-mirror sync
+accounting, and engine-level refcount hygiene on task error."""
+import numpy as np
+import pytest
+
+from repro.core import fpm as fpm_mod
+from repro.core.fpm import mine
+from repro.core.join_backend import NumpyBackend
+from repro.core.tidlist import BitmapArena, pack_database
+
+RNG = np.random.default_rng(11)
+
+
+def small_arena(n=6, w=4, backing="auto"):
+    rows = RNG.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    return BitmapArena.from_bitmaps(rows, backing=backing), rows
+
+
+# ----------------------------------------------------------- lifecycle
+def test_base_rows_are_pinned_item_handles():
+    arena, rows = small_arena()
+    assert arena.n_base == 6 and arena.n_rows == 6
+    for i in range(6):
+        np.testing.assert_array_equal(arena.row(i), rows[i])
+        arena.release(i)                     # no-op on pinned rows
+        assert arena.refcount(i) == 1
+    assert arena.live_extra == 0
+
+
+def test_push_retain_release_refcounts():
+    arena, rows = small_arena()
+    h = arena.push(rows[0] | rows[1])
+    assert h == 6 and arena.refcount(h) == 1 and arena.live_extra == 1
+    arena.retain(h)
+    assert arena.refcount(h) == 2
+    arena.release(h)
+    assert arena.refcount(h) == 1 and arena.live_extra == 1
+    arena.release(h)
+    assert arena.live_extra == 0             # freed
+
+
+def test_handle_reuse_after_free():
+    arena, rows = small_arena()
+    h1 = arena.push(rows[0])
+    h2 = arena.push(rows[1])
+    arena.release(h1)
+    h3 = arena.push(rows[2])                 # recycles h1's slot
+    assert h3 == h1 and h3 != h2
+    np.testing.assert_array_equal(arena.row(h3), rows[2])
+    assert arena.n_rows == 8                 # no growth past high-water
+
+
+def test_materialize_is_the_and_of_both_rows():
+    arena, rows = small_arena()
+    h = arena.materialize(2, 4)
+    np.testing.assert_array_equal(arena.row(h), rows[2] & rows[4])
+    child = arena.materialize(h, 1)          # chained (depth-first)
+    np.testing.assert_array_equal(arena.row(child),
+                                  rows[2] & rows[4] & rows[1])
+    assert arena.peak_live_extra == 2
+    assert arena.peak_bytes_extra == 2 * arena.n_words * 4
+
+
+def test_growth_preserves_rows_and_views_stay_correct():
+    arena, rows = small_arena(n=3, w=5)
+    view = arena.row(1)
+    handles = [arena.push(rows[i % 3]) for i in range(300)]  # force grow
+    np.testing.assert_array_equal(arena.row(1), rows[1])
+    np.testing.assert_array_equal(view, rows[1])   # old view still right
+    for h in handles:
+        arena.release(h)
+    assert arena.live_extra == 0
+
+
+def test_gather_contiguous_is_view_strided_is_copy():
+    arena, rows = small_arena()
+    g = arena.gather([2, 3, 4])
+    assert g.base is not None                # slice view, zero-copy
+    np.testing.assert_array_equal(g, rows[2:5])
+    s = arena.gather([0, 2, 5])
+    np.testing.assert_array_equal(s, rows[[0, 2, 5]])
+
+
+def test_bad_backing_rejected():
+    with pytest.raises(ValueError, match="backing"):
+        BitmapArena(4, backing="cuda")
+
+
+# -------------------------------------------------------- device mirror
+def test_device_sync_is_incremental_and_counts_h2d():
+    arena, rows = small_arena(n=4, w=8)
+    row_bytes = 8 * 4
+    dev = arena.device_rows()                # initial upload: 4 rows
+    assert dev.shape == (4, 8) and arena.h2d_bytes == 4 * row_bytes
+    dev = arena.device_rows()                # no change -> no upload
+    assert arena.h2d_bytes == 4 * row_bytes
+    h = arena.push(rows[0] & rows[1])
+    dev = arena.device_rows()                # one appended row
+    assert dev.shape == (5, 8)
+    assert arena.h2d_bytes == 5 * row_bytes
+    np.testing.assert_array_equal(np.asarray(dev[h]), rows[0] & rows[1])
+    # recycled slot: freed row rewritten -> resynced as dirty, not
+    # re-uploading the whole store
+    arena.release(h)
+    h2 = arena.push(rows[2] | rows[3])
+    assert h2 == h
+    dev = arena.device_rows()
+    assert arena.h2d_bytes == 6 * row_bytes
+    np.testing.assert_array_equal(np.asarray(dev[h2]), rows[2] | rows[3])
+
+
+def test_numpy_backing_never_creates_device_mirror():
+    arena, _ = small_arena(backing="numpy")
+    assert not arena.device_enabled
+    assert arena.device_rows() is None
+    assert arena.h2d_bytes == 0
+
+
+def test_jax_backing_uploads_eagerly():
+    arena, _ = small_arena(n=5, w=3, backing="jax")
+    assert arena.h2d_bytes == 5 * 3 * 4
+
+
+# --------------------------------------------- engine refcount hygiene
+@pytest.fixture()
+def capture_arena(monkeypatch):
+    """Route fpm.mine's arena construction through a spy so the test
+    can inspect refcounts after mining ends."""
+    captured = []
+    orig = BitmapArena.from_bitmaps.__func__
+
+    class Spy(BitmapArena):
+        @classmethod
+        def from_bitmaps(cls, bitmaps, backing="auto"):
+            arena = orig(cls, bitmaps, backing)
+            captured.append(arena)
+            return arena
+
+    monkeypatch.setattr(fpm_mod, "BitmapArena", Spy)
+    return captured
+
+
+def retail_bitmaps():
+    from repro.data.transactions import load
+    db, p = load("retail", seed=0)
+    db = db[:800]
+    return pack_database(db, p.n_items), int(0.03 * len(db))
+
+
+def test_depth_first_releases_every_handoff_row(capture_arena):
+    """Clean depth-first run: every materialized child handle is
+    released by its task's ``finally`` — no live rows beyond the
+    pinned base remain when mining ends."""
+    bm, ms = retail_bitmaps()
+    _, met = mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                  granularity="depth-first")
+    (arena,) = capture_arena
+    assert met.peak_retained_bitmaps > 0     # handoffs happened
+    assert arena.live_extra == 0             # ... and all released
+
+
+def test_refcount_released_on_task_error(capture_arena):
+    """A class task that errors mid-subtree must still release its own
+    handle AND the handles of children it materialized but never
+    spawned — an error may not leak arena rows."""
+
+    class ChildBomb(NumpyBackend):
+        def sweep_many(self, arena, requests):
+            if any(r.prefix_handle >= arena.n_base for r in requests):
+                raise RuntimeError("child boom")
+            return super().sweep_many(arena, requests)
+
+    import repro.core.fpm as fpm
+    bm, ms = retail_bitmaps()
+    orig_resolve = fpm.resolve_backend
+    fpm.resolve_backend = lambda spec: ChildBomb()
+    try:
+        with pytest.raises(RuntimeError, match="child boom"):
+            mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                 granularity="depth-first")
+    finally:
+        fpm.resolve_backend = orig_resolve
+    (arena,) = capture_arena
+    assert arena.peak_live_extra > 0         # children were materialized
+    assert arena.live_extra == 0             # ... and none leaked
+
+
+def test_mine_with_jax_arena_matches_serial():
+    from repro.core.fpm import mine_serial
+    bm, ms = retail_bitmaps()
+    ref = mine_serial(bm, ms, max_k=4)
+    got, met = mine(bm, ms, n_workers=3, max_k=4, arena="jax",
+                    backend="pallas-interpret")
+    assert got == ref
+    assert met.h2d_bytes >= bm.nbytes        # the eager initial upload

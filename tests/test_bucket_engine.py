@@ -95,19 +95,51 @@ def test_bucket_rows_touched_below_candidate(datasets):
     assert 0 < m_b.bytes_swept < m_c.bytes_swept
 
 
-def test_explicit_backends_agree(datasets):
+@pytest.mark.parametrize("backend", ["numpy", "pallas-interpret"])
+@pytest.mark.parametrize("granularity",
+                         ["bucket", "candidate", "depth-first"])
+def test_backend_granularity_equivalence(datasets, granularity, backend):
+    """The arena/dispatcher acceptance matrix: every granularity ×
+    every CPU-capable backend produces identical frequent itemsets
+    through the handle-based request path."""
     _, bm, ms = datasets["mushroom"]
     ref = mine_serial(bm, ms, max_k=3)
-    for backend in ("numpy", "pallas-interpret"):
-        got, _ = mine(bm, ms, policy="clustered", n_workers=2, max_k=3,
-                      backend=backend)
-        assert got == ref, backend
+    got, met = mine(bm, ms, policy="clustered", n_workers=2, max_k=3,
+                    granularity=granularity, backend=backend)
+    assert got == ref, (granularity, backend)
+    if granularity != "candidate":
+        # sweeps went through the dispatcher, and every request was
+        # answered by a flush
+        assert met.flushes > 0
+        assert round(met.flushes * met.batch_occupancy) == \
+            met.scheduler["sweeps_submitted"]
+    if backend == "pallas-interpret" and granularity != "candidate":
+        # device-resident arena: the h2d gauge saw the initial upload
+        # plus incrementally synced prefix/handoff rows (at most ~2 per
+        # sweep) — never a per-sweep re-upload of extension bitmaps
+        row_bytes = bm.shape[1] * 4
+        sweeps = met.scheduler["sweeps_submitted"]
+        assert bm.nbytes <= met.h2d_bytes <= \
+            bm.nbytes + 2 * sweeps * row_bytes
 
 
 def test_bad_granularity_raises(datasets):
     _, bm, ms = datasets["mushroom"]
     with pytest.raises(ValueError, match="granularity"):
         mine(bm, ms, granularity="itemset")
+
+
+@pytest.mark.parametrize("granularity", ["bucket", "candidate"])
+def test_cache_size_zero_is_a_valid_no_cache_knob(datasets, granularity):
+    """cache_size=0 (the 'no cache' A/B setting) must work: get()
+    retains a caller reference before the instant eviction releases
+    the cache's own, so the handle stays live through the sweep."""
+    _, bm, ms = datasets["chess"]
+    ref = mine_serial(bm, ms, max_k=4)
+    got, met = mine(bm, ms, policy="clustered", n_workers=3, max_k=4,
+                    granularity=granularity, cache_size=0)
+    assert got == ref
+    assert met.cache_hits == 0               # nothing ever cached
 
 
 # ----------------------------------------------------- depth-first engine
@@ -128,20 +160,20 @@ def test_depth_first_handoff_makes_cache_vestigial(datasets):
 def test_depth_first_child_error_surfaces_on_driver(datasets, monkeypatch):
     """A task body raising inside a spawned-from-task child class must
     surface on the driver thread (not deadlock the terminal wait_all).
-    Child classes are exactly the tasks holding an OWNED materialized
-    bitmap (base is None); root classes hold views of the base array."""
+    Child classes are exactly the tasks whose prefix handle is an OWNED
+    materialized arena row (handle >= n_base); root classes hand the
+    pinned base row's handle (== item id)."""
     from repro.core import fpm as fpm_mod
     from repro.core.join_backend import NumpyBackend
 
     class ChildBomb(NumpyBackend):
-        def sweep(self, prefix, exts):
-            if prefix.base is None:             # a parent-handed bitmap
+        def sweep_many(self, arena, requests):
+            if any(r.prefix_handle >= arena.n_base for r in requests):
                 raise RuntimeError("child boom")
-            return super().sweep(prefix, exts)
+            return super().sweep_many(arena, requests)
 
-    bomb = ChildBomb()
-    monkeypatch.setattr(fpm_mod, "make_selector",
-                        lambda spec: (lambda n_exts: bomb))
+    monkeypatch.setattr(fpm_mod, "resolve_backend",
+                        lambda spec: ChildBomb())
     _, bm, ms = datasets["retail"]
     with pytest.raises(RuntimeError, match="child boom"):
         mine(bm, ms, policy="clustered", n_workers=3, max_k=4,

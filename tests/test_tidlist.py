@@ -30,6 +30,36 @@ def test_pack_database_supports():
     np.testing.assert_array_equal(sup, [2, 4, 2])
 
 
+def test_pack_database_matches_dense_pack_bool_reference():
+    """The direct per-word packer (O(W) per item, no [I, T] bool
+    temporary) must produce bit-identical words to packing the dense
+    bool matrix — including across word boundaries."""
+    rng = np.random.default_rng(3)
+    n_items, n_tx = 7, 131                   # 131 txns -> 5 words, ragged
+    db = [sorted(rng.choice(n_items, size=rng.integers(0, 5),
+                            replace=False).tolist()) for _ in range(n_tx)]
+    bits = np.zeros((n_items, n_tx), dtype=bool)
+    for t, txn in enumerate(db):
+        for i in txn:
+            bits[i, t] = True
+    np.testing.assert_array_equal(tidlist.pack_database(db, n_items),
+                                  tidlist.pack_bool(bits))
+
+
+def test_popcount_fallback_path_matches(monkeypatch):
+    """The pre-numpy-2.0 SWAR fallback (never taken when
+    np.bitwise_count exists) must agree with the ufunc — and not
+    copy an input that is already uint32."""
+    monkeypatch.delattr(np, "bitwise_count", raising=False)
+    rng = np.random.default_rng(5)
+    xs = rng.integers(0, 2 ** 32, size=500, dtype=np.uint32)
+    got = tidlist.popcount32(xs)
+    want = np.array([bin(int(x)).count("1") for x in xs])
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(tidlist.popcount32(xs.astype(np.int64)),
+                                  want)                # non-uint32 input
+
+
 def test_support_counts_prefix():
     db = [[0, 1, 2], [0, 1], [1, 2], [0, 2]]
     bm = tidlist.pack_database(db, 3)
