@@ -1,7 +1,10 @@
-"""Distributed FPM: clustered vs round-robin candidate placement.
+"""Distributed FPM: clustered vs round-robin placement through the
+`mine_distributed` compat shim (both now run the unified mesh engine —
+sharded arena, per-device dispatchers, device-affine workers).
 
 Spawns an 8-device subprocess (the bench process itself must keep seeing
-1 device). Reports rows-touched (HBM-locality proxy) and wall time.
+1 device). Reports rows-touched (HBM-locality proxy), cross-device
+d2d bytes, and wall time.
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ print(json.dumps(out))
 
 def run():
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu",   # skip TPU probing in the child
            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(CODE)],
                        capture_output=True, text=True, timeout=560,
@@ -48,7 +52,8 @@ def main():
     out = run()
     for pol, v in out.items():
         print(f"dist_fpm_{pol},{v['wall_s'] * 1e6:.0f},"
-              f"rows_touched={v['rows_touched']};found={v['found']}")
+              f"rows_touched={v['rows_touched']};found={v['found']};"
+              f"d2d={v['d2d_bytes']}B;migrations={v['migrations']}")
     ratio = (out["round_robin"]["rows_touched"]
              / max(out["clustered"]["rows_touched"], 1))
     print(f"dist_fpm_locality,0,rows_ratio_rr_over_clustered={ratio:.2f}")

@@ -16,7 +16,11 @@ Also measures the arena/dispatcher plumbing: per-run batch occupancy
 (sweep requests per flush — asserted > 1 under --smoke so the
 dispatcher cannot silently degrade to one-bucket launches) and a
 repeated-sweep H2D contrast (device-resident arena: ~one initial
-upload; host-only arena: the old per-sweep transfer bill).
+upload; host-only arena: the old per-sweep transfer bill). The
+``mesh_granularity`` rows run the same engine over ``--mesh`` device
+shards and record per-device dispatcher occupancy plus the
+cross-device gauges (``d2d_bytes``, ``migrations``); --smoke asserts
+depth-first keeps ``cache_misses == 0`` on the mesh.
 
 Emits ``BENCH_granularity.json`` so the perf trajectory is recorded.
 Run ``--smoke`` for the CI-sized variant (~2 min).
@@ -28,7 +32,7 @@ import json
 import os
 from typing import Dict, List
 
-from repro.core.fpm import mine
+from repro.core.fpm import mesh_over_devices, mine
 from repro.core.join_backend import SweepDispatcher, get_backend
 from repro.core.tidlist import BitmapArena, pack_database
 from repro.data.transactions import load
@@ -107,6 +111,50 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
     return rows
 
 
+def mesh_granularity(n_shards: int = 2, *, n_workers: int = 4,
+                     max_k: int = 4, smoke: bool = False) -> List[Dict]:
+    """The unified engine on a mesh: every granularity distributed over
+    ``n_shards`` device shards (real jax devices when the host exposes
+    enough — e.g. under --xla_force_host_platform_device_count —
+    logical shards otherwise). Emits per-device dispatcher occupancy
+    and the cross-device traffic gauges (``d2d_bytes``,
+    ``migrations``) so the trajectory records the mesh path, and shows
+    depth-first keeping its structural ``cache_misses == 0`` on the
+    mesh."""
+    mesh = mesh_over_devices(n_shards) or n_shards
+    mesh_kind = "logical" if isinstance(mesh, int) else "jax"
+    db, prof = load("mushroom", seed=0, scale=1 if smoke else 4)
+    bm = pack_database(db, prof.n_dense_items)
+    ms = max(1, int(0.18 * len(db)))
+    out = []
+    for gran in ("bucket", "candidate", "depth-first"):
+        # on a real jax mesh, run the batched sweeps through the
+        # interpreted kernel so the per-shard DEVICE mirrors (and their
+        # d2d fetch path) are actually exercised — numpy would reduce
+        # the row to logical-shard bookkeeping. Candidate stays on
+        # numpy: per-candidate interpreted launches cost minutes and
+        # the dispatcher routing under test is identical.
+        backend = ("pallas-interpret"
+                   if mesh_kind == "jax" and gran != "candidate"
+                   else "numpy")
+        res, met = mine(bm, ms, policy="clustered", n_workers=n_workers,
+                        max_k=max_k, granularity=gran, mesh=mesh,
+                        backend=backend)
+        out.append({
+            "bench": "mesh_granularity", "granularity": gran,
+            "mesh_kind": mesh_kind, "backend": backend,
+            "n_devices": met.n_devices,
+            "wall_s": met.wall_s, "frequent": met.frequent,
+            "rows_touched": met.rows_touched,
+            "cache_misses": met.cache_misses,
+            "d2d_bytes": met.d2d_bytes,
+            "migrations": met.migrations,
+            "batch_occupancy": met.batch_occupancy,
+            "per_device": met.per_device,
+        })
+    return out
+
+
 def repeat_sweep_h2d(repeats: int = 5, n_txn: int = 400,
                      n_buckets: int = 24, n_exts: int = 16) -> List[Dict]:
     """Repeated-sweep H2D contrast, the tentpole's whole point.
@@ -164,6 +212,10 @@ def main(argv=None) -> None:
     ap.add_argument("--max-k", type=int, default=5)
     ap.add_argument("--repeats", type=int, default=1,
                     help="best-of-N wall-clock per granularity")
+    ap.add_argument("--mesh", type=int, default=2,
+                    help="device shards for the mesh_granularity rows "
+                         "(real jax devices when available, logical "
+                         "shards otherwise)")
     ap.add_argument("--out", default="BENCH_granularity.json")
     args = ap.parse_args(argv)
 
@@ -173,6 +225,11 @@ def main(argv=None) -> None:
                flush_us=args.flush_us, smoke=args.smoke,
                repeats=args.repeats)
     h2d_rows = repeat_sweep_h2d()
+    # --mesh 0/1 follows the launcher/quickstart convention: no mesh
+    # rows, shared-memory results only
+    mesh_rows = (mesh_granularity(args.mesh, n_workers=args.n_workers,
+                                  smoke=args.smoke)
+                 if args.mesh > 1 else [])
     payload = {
         "bench": "fpm_granularity",
         "smoke": args.smoke,
@@ -180,6 +237,7 @@ def main(argv=None) -> None:
         "arena": args.arena,
         "results": rows,
         "repeat_sweep_h2d": h2d_rows,
+        "mesh_granularity": mesh_rows,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -198,6 +256,13 @@ def main(argv=None) -> None:
               f"h2d={h['h2d_bytes']}B;naive={h['naive_h2d_bytes']}B;"
               f"arena={h['arena_bytes']}B;"
               f"occ={h['batch_occupancy']:.2f}")
+    for m in mesh_rows:
+        occ = "/".join(f"{d['batch_occupancy']:.2f}"
+                       for d in m["per_device"])
+        print(f"mesh_{m['granularity']}_{m['n_devices']}dev"
+              f"({m['mesh_kind']}),{m['wall_s'] * 1e6:.0f},"
+              f"d2d={m['d2d_bytes']}B;migrations={m['migrations']};"
+              f"dev_occ={occ};cache_misses={m['cache_misses']}")
     if args.smoke:
         # the dispatcher must actually coalesce: mean occupancy of the
         # batched granularities stays above one request per launch
@@ -216,6 +281,16 @@ def main(argv=None) -> None:
         print("# smoke h2d check passed: "
               f"{dev['h2d_bytes']}B ~= one arena upload "
               f"({dev['arena_bytes']}B) vs naive {dev['naive_h2d_bytes']}B")
+        if mesh_rows:
+            # the mesh path keeps depth-first's structural invariant:
+            # the handoff replaces the prefix cache even across shards
+            df = next(m for m in mesh_rows
+                      if m["granularity"] == "depth-first")
+            assert df["cache_misses"] == 0, df
+            assert len(df["per_device"]) == df["n_devices"] >= 2, df
+            print(f"# smoke mesh check passed: depth-first on "
+                  f"{df['n_devices']} shards, cache_misses=0, "
+                  f"d2d={df['d2d_bytes']}B")
     print(f"# wrote {os.path.abspath(args.out)}")
 
 

@@ -21,7 +21,7 @@ import argparse
 import sys
 sys.path.insert(0, "src")
 
-from repro.core.fpm import mine, mine_serial
+from repro.core.fpm import mesh_over_devices, mine, mine_serial
 from repro.core.tidlist import pack_database
 from repro.data.transactions import load
 
@@ -39,9 +39,13 @@ def main():
     ap.add_argument("--flush-us", type=float, default=200.0,
                     help="sweep dispatcher: straggler wait before a "
                          "partial flush")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the run over N devices (logical shards "
+                         "on a 1-device host); 0 = shared-memory")
     args = ap.parse_args()
     knobs = dict(backend=args.backend, arena=args.arena,
-                 max_batch=args.max_batch, flush_us=args.flush_us)
+                 max_batch=args.max_batch, flush_us=args.flush_us,
+                 mesh=mesh_over_devices(args.mesh))
 
     db, prof = load("chess", seed=0)
     bitmaps = pack_database(db, prof.n_dense_items)

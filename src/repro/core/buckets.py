@@ -1,13 +1,19 @@
-"""Prefix-bucket planning, shared by the shared-memory and distributed
-engines.
+"""Prefix-bucket planning + the shared rows-touched cost model.
 
 The paper's clustered policy groups level-k candidate tasks by their
-(k-1)-prefix (§4). Both mining engines need exactly that grouping —
-``repro.core.fpm`` to make the *bucket* the unit of task execution
-(prefix intersection computed once, extensions swept vectorized) and
-``repro.core.distributed_fpm`` to place whole buckets on devices. This
-module is the single definition of that structure plus the locality
-accounting (rows-touched / bytes-swept) both engines report.
+(k-1)-prefix (§4). ``repro.core.fpm`` makes the *bucket* the unit of
+task execution (prefix intersection computed once, extensions swept
+vectorized) — and since the engine went mesh-aware, bucket placement
+on workers IS bucket placement on devices, so this grouping also
+defines what a cross-device bucket steal migrates.
+
+Cost model: the engine MEASURES rows-touched per task (cache hits
+reduce it) and converts via :func:`rows_to_bytes`;
+:func:`class_rows_touched` is the depth-first task's accounting.
+:func:`bucket_rows_touched` / :func:`candidate_rows_touched` are the
+corresponding ANALYTIC models — the (k-1)+E vs k·E contrast the paper
+argues from — kept as the documented reference the measurements are
+read against (and pinned by tests), not called on the hot path.
 """
 from __future__ import annotations
 

@@ -1,248 +1,87 @@
-"""Distributed (multi-device) Apriori under shard_map — the paper's
-clustered scheduling transposed to a TPU mesh (DESIGN.md §3, layer 2).
+"""Compatibility wrapper: multi-device mining IS the task engine now.
 
-Level-synchronous mining. Item TID-bitmaps are sharded over devices
-(owner = item % n_devices). Candidates for level k are partitioned into
-per-device work lists under one of two assignment policies:
+The bespoke level-synchronous ``shard_map`` driver that used to live
+here (per-device planners, ``_kernel_clustered`` / ``_kernel_round_robin``
+bodies, per-level jit rebuilds) bypassed the scheduler, the
+``BitmapArena``, and the ``SweepDispatcher`` entirely — none of the
+engine's wins (barrier-free depth-first, handle-based batched sweeps,
+device-resident bitmaps) existed beyond one device, and every level
+re-wrapped the kernel in a fresh ``functools.partial``/``jax.jit``,
+defeating the jit cache.
 
-  clustered    whole prefix-buckets are placed together (owner = the
-               bucket's first item's owner, with cluster-granularity
-               rebalancing — the paper's bucket steal). The device
-               computes each bucket's (k-1)-prefix intersection ONCE and
-               sweeps the bucket's extensions against it while the prefix
-               stays register/VMEM-resident (the bitmap_join kernel's
-               tiling on TPU). Per-candidate HBM traffic: ~1 bitmap row.
-  round_robin  the Cilk-style analogue: candidates scattered with no
-               locality; every candidate performs its full k-way join
-               (prefix recomputed per task). Per-candidate HBM traffic:
-               ~k bitmap rows + no reuse across neighbours.
+All of that is deleted. ``repro.core.fpm.mine(mesh=...)`` runs every
+granularity distributed: the arena shards one mirror per mesh device
+(pinned item rows replicated, materialized rows owned by the creating
+shard, cross-shard fetches in ``d2d_bytes``), one ``SweepDispatcher``
+per device flushes ``bitmap_join_many`` on its own shard, and the
+scheduler's clustered placement is device placement (cross-device
+bucket steals migrate the bucket's retained bitmaps explicitly).
+Kernel compilation is cached at module level (``repro.kernels``), so
+there is nothing per-level left to rebuild.
 
-Both policies return identical supports. The locality difference shows up
-in (a) rows-touched stats here, (b) HLO FLOPs/bytes of the per-level
-kernel in the dry-run (benchmarks/fpm_distributed.py).
+``mine_distributed`` survives as a thin shim mapping the old two-policy
+API onto the unified engine:
+
+  clustered    → clustered placement at bucket granularity (the prefix
+                 join computed once per bucket, extensions swept
+                 batched — the owner-computes locality path).
+  round_robin  → scattered FIFO placement at candidate granularity
+                 with the prefix cache disabled (every candidate pays
+                 its full k-way join — the no-locality baseline).
+
+Both return identical supports; the locality difference shows up in the
+measured rows-touched counters (shared cost model in
+``repro.core.buckets``).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core import tidlist
-from repro.core.buckets import (bucket_rows_touched, candidate_rows_touched,
-                                group_by_prefix, rows_to_bytes)
-from repro.core.itemsets import Itemset, gen_candidates
+from repro.core.fpm import mine
+from repro.core.itemsets import Itemset
 
-
-# ---------------------------------------------------------------------------
-# Planning
-# ---------------------------------------------------------------------------
+#                  fpm policy, granularity, cache_size
+_POLICY_MAP = {
+    "clustered":   ("clustered", "bucket", 32),
+    "round_robin": ("fifo", "candidate", 0),
+}
 
 
-@dataclasses.dataclass
-class ClusteredPlan:
-    prefixes: np.ndarray     # [n_dev, max_b, k-1] int32, -1 padded
-    exts: np.ndarray         # [n_dev, max_b, max_e] int32, -1 padded
-    order: List[List[Itemset]]   # per-device candidate order (b-major)
-    rows_touched: int = 0
-
-
-@dataclasses.dataclass
-class RoundRobinPlan:
-    cand_items: np.ndarray   # [n_dev, max_c, k] int32, -1 padded
-    order: List[List[Itemset]]
-    rows_touched: int = 0
-
-
-def plan_clustered(cands: Sequence[Itemset], n_dev: int,
-                   items_per_dev: int = 0) -> ClusteredPlan:
-    """Place whole prefix-buckets on devices (bucket grouping shared
-    with the shared-memory engine via repro.core.buckets)."""
-    buckets = group_by_prefix(cands)
-    loads = np.zeros(n_dev, np.int64)
-    per_dev: List[List[Tuple[Itemset, Tuple[int, ...]]]] = [
-        [] for _ in range(n_dev)]
-    for b in sorted(buckets, key=lambda b: (-len(b), b.key)):
-        pref, ext = b.prefix, b.exts
-        owner = (min(pref[0] // items_per_dev, n_dev - 1)
-                 if items_per_dev else pref[0] % n_dev)
-        tgt = int(np.argmin(loads))
-        if loads[owner] > 2 * loads[tgt] + len(ext):
-            owner = tgt                       # steal the whole bucket
-        per_dev[owner].append((pref, ext))
-        loads[owner] += len(ext)
-    k = len(cands[0])
-    max_b = max(1, max(len(v) for v in per_dev))
-    max_e = max(1, max((len(e) for v in per_dev for _, e in v), default=1))
-    prefixes = np.full((n_dev, max_b, k - 1), -1, np.int32)
-    exts = np.full((n_dev, max_b, max_e), -1, np.int32)
-    order: List[List[Itemset]] = [[] for _ in range(n_dev)]
-    rows = 0
-    for d, lst in enumerate(per_dev):
-        for b, (pref, ext) in enumerate(lst):
-            prefixes[d, b] = pref
-            exts[d, b, :len(ext)] = ext
-            order[d].extend(pref + (e,) for e in ext)
-            rows += bucket_rows_touched(k - 1, len(ext))
-    return ClusteredPlan(prefixes, exts, order, rows)
-
-
-def plan_round_robin(cands: Sequence[Itemset], n_dev: int) -> RoundRobinPlan:
-    per_dev: List[List[Itemset]] = [[] for _ in range(n_dev)]
-    for i, c in enumerate(cands):
-        per_dev[i % n_dev].append(c)
-    k = len(cands[0])
-    max_c = max(1, max(len(v) for v in per_dev))
-    arr = np.full((n_dev, max_c, k), -1, np.int32)
-    for d, lst in enumerate(per_dev):
-        for j, c in enumerate(lst):
-            arr[d, j] = c
-    rows = sum(candidate_rows_touched(k, len(lst)) for lst in per_dev)
-    return RoundRobinPlan(arr, per_dev, rows)
-
-
-# ---------------------------------------------------------------------------
-# Per-device kernels (shard_map bodies)
-# ---------------------------------------------------------------------------
-
-
-def _kernel_clustered(bitmaps_local, prefixes, exts, axis_name: str,
-                      k: int):
-    """prefixes: [max_b, k-1]; exts: [max_b, max_e] -> counts [max_b*max_e].
-
-    One prefix join per bucket; extensions swept against the resident
-    prefix (vmapped bitmap_join shape)."""
-    full = jax.lax.all_gather(bitmaps_local, axis_name, axis=0, tiled=True)
-
-    def bucket(pref, ext):
-        rows = full[jnp.maximum(pref, 0)]          # [k-1, W]
-        pbm = rows[0]
-        for j in range(1, k - 1):
-            pbm = jnp.bitwise_and(pbm, rows[j])    # prefix AND — once
-        erows = full[jnp.maximum(ext, 0)]          # [max_e, W]
-        joined = jnp.bitwise_and(erows, pbm[None, :])
-        cnt = jax.lax.population_count(joined).astype(jnp.int32).sum(-1)
-        return jnp.where((ext >= 0) & (pref[0] >= 0), cnt, -1)
-
-    counts = jax.vmap(bucket)(prefixes, exts)      # [max_b, max_e]
-    return counts.reshape(-1)
-
-
-def _kernel_round_robin(bitmaps_local, cand_items, axis_name: str, k: int):
-    """cand_items: [max_c, k] -> counts [max_c]; full k-way join each."""
-    full = jax.lax.all_gather(bitmaps_local, axis_name, axis=0, tiled=True)
-    rows = full[jnp.maximum(cand_items, 0)]        # [max_c, k, W]
-    joined = rows[:, 0]
-    for j in range(1, k):
-        joined = jnp.bitwise_and(joined, rows[:, j])
-    counts = jax.lax.population_count(joined).astype(jnp.int32).sum(-1)
-    return jnp.where(cand_items[:, 0] >= 0, counts, -1)
-
-
-def shard_bitmaps(bitmaps: np.ndarray, n_dev: int) -> np.ndarray:
-    """Contiguous-block owner layout: item i lives on device
-    i // items_per_dev, so a tiled all_gather restores item order."""
-    n_items, w = bitmaps.shape
-    pad = (-n_items) % n_dev
-    return np.pad(bitmaps, ((0, pad), (0, 0)))   # [I_padded, W]
-
-
-# ---------------------------------------------------------------------------
-# Driver
-# ---------------------------------------------------------------------------
-
-
-def mine_distributed(bitmaps: np.ndarray, min_support: int, mesh: Mesh,
+def mine_distributed(bitmaps: np.ndarray, min_support: int, mesh,
                      *, policy: str = "clustered", max_k: int = 6,
-                     axis_name: Optional[str] = None
+                     axis_name: str | None = None, n_workers: int = 8,
+                     backend: str = "auto",
                      ) -> Tuple[Dict[Itemset, int], Dict[str, int]]:
-    """Level-synchronous distributed Apriori. Returns (supports, stats)."""
-    axis_name = axis_name or mesh.axis_names[0]
-    n_dev = mesh.shape[axis_name]
-    n_items = bitmaps.shape[0]
-    sharded = shard_bitmaps(bitmaps, n_dev)      # [I_padded, W]
-    items_per_dev = sharded.shape[0] // n_dev
-    bm_dev = jax.device_put(jnp.asarray(sharded),
-                            NamedSharding(mesh, P(axis_name)))
-
-    supports = tidlist.popcount32(bitmaps).sum(axis=1)
-    result: Dict[Itemset, int] = {
-        (i,): int(supports[i]) for i in range(n_items)
-        if supports[i] >= min_support}
-    frequent = sorted(result)
-    stats = {"levels": 0, "candidates": 0, "rows_touched": 0,
-             "bytes_swept": 0}
-
-    k = 2
-    while frequent and k <= max_k:
-        cands = gen_candidates(frequent)
-        if not cands:
-            break
-        stats["levels"] += 1
-        stats["candidates"] += len(cands)
-
-        if policy == "clustered":
-            plan = plan_clustered(cands, n_dev, items_per_dev)
-            fn = shard_map(
-                functools.partial(_kernel_clustered, axis_name=axis_name,
-                                  k=k),
-                mesh=mesh,
-                in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-                out_specs=P(axis_name))
-            counts = np.asarray(jax.jit(fn)(
-                bm_dev,
-                jax.device_put(jnp.asarray(plan.prefixes.reshape(
-                    -1, plan.prefixes.shape[2])),
-                    NamedSharding(mesh, P(axis_name))),
-                jax.device_put(jnp.asarray(plan.exts.reshape(
-                    -1, plan.exts.shape[2])),
-                    NamedSharding(mesh, P(axis_name)))))
-            counts = counts.reshape(n_dev, -1)
-        elif policy == "round_robin":
-            plan = plan_round_robin(cands, n_dev)
-            fn = shard_map(
-                functools.partial(_kernel_round_robin,
-                                  axis_name=axis_name, k=k),
-                mesh=mesh,
-                in_specs=(P(axis_name), P(axis_name)),
-                out_specs=P(axis_name))
-            counts = np.asarray(jax.jit(fn)(
-                bm_dev,
-                jax.device_put(jnp.asarray(plan.cand_items.reshape(
-                    -1, plan.cand_items.shape[2])),
-                    NamedSharding(mesh, P(axis_name)))))
-            counts = counts.reshape(n_dev, -1)
-        else:
-            raise ValueError(policy)
-        stats["rows_touched"] += plan.rows_touched
-        stats["bytes_swept"] += rows_to_bytes(plan.rows_touched,
-                                              bitmaps.shape[1])
-
-        frequent = []
-        for d in range(n_dev):
-            dev_counts = counts[d]
-            if policy == "clustered":
-                # counts are bucket-major with -1 padding; valid entries
-                # appear in exactly the order the planner emitted order[d]
-                it = iter(plan.order[d])
-                for v in dev_counts:
-                    if v < 0:
-                        continue
-                    c = next(it)
-                    if v >= min_support:
-                        result[c] = int(v)
-                        frequent.append(c)
-            else:
-                for j, c in enumerate(plan.order[d]):
-                    v = int(dev_counts[j])
-                    if v >= min_support:
-                        result[c] = v
-                        frequent.append(c)
-        frequent.sort()
-        k += 1
+    """Level-synchronous distributed Apriori (compat shim over
+    ``fpm.mine(mesh=...)``). Returns (supports, stats) with the
+    historical stats keys plus the mesh gauges (``d2d_bytes``,
+    ``migrations``, ``n_devices``, ``per_device``)."""
+    if policy not in _POLICY_MAP:
+        raise ValueError(policy)
+    axes = getattr(mesh, "axis_names", ())
+    if len(axes) > 1:
+        # the old driver sharded over ONE axis of a possibly-wider
+        # mesh; the unified engine shards over every mesh device.
+        # Refuse rather than silently change the caller's placement.
+        raise ValueError(
+            f"mine_distributed shards over all devices of a 1-axis "
+            f"mesh; got axes {tuple(axes)} — pass a sub-mesh of the "
+            f"axis to shard over (was: axis_name={axis_name!r})")
+    fpm_policy, granularity, cache_size = _POLICY_MAP[policy]
+    result, met = mine(bitmaps, min_support, mesh=mesh,
+                       policy=fpm_policy, granularity=granularity,
+                       cache_size=cache_size, max_k=max_k,
+                       n_workers=n_workers, backend=backend)
+    stats = {
+        "levels": met.levels,
+        "candidates": met.candidates,
+        "rows_touched": met.rows_touched,
+        "bytes_swept": met.bytes_swept,
+        "n_devices": met.n_devices,
+        "d2d_bytes": met.d2d_bytes,
+        "migrations": met.migrations,
+        "per_device": met.per_device,
+    }
     return result, stats

@@ -33,11 +33,22 @@ arena's device mirror is synced incrementally — repeated sweeps cost
 ~one initial upload (``MiningMetrics.h2d_bytes``) instead of one
 upload per sweep.
 
-All granularities return identical supports under every policy. The
-cache hit-rate (candidate), rows-touched/bytes-swept counters (all,
-shared with repro.core.distributed_fpm), batch-occupancy/flush gauges
-(dispatcher), and peak-retained-bitmap gauge (arena) are this
-reproduction's analogue of the paper's dTLB/IPC counters.
+``mine(mesh=...)`` runs the SAME engine — every granularity, every
+policy — across a device mesh: the arena shards one mirror per device
+(item rows replicated, materialized rows owned by the creating shard),
+one dispatcher per device flushes batched joins on its own shard,
+workers carry a device affinity so clustered bucket placement is device
+placement, and a cross-device bucket steal migrates the bucket's
+retained handoff bitmaps explicitly. ``repro.core.distributed_fpm`` is
+now only a compatibility shim over this path.
+
+All granularities return identical supports under every policy (and
+under every mesh shape). The cache hit-rate (candidate),
+rows-touched/bytes-swept counters (shared cost model in
+repro.core.buckets), batch-occupancy/flush gauges (per-device
+dispatchers), peak-retained-bitmap gauge (arena), and cross-device
+``d2d_bytes``/``migrations`` gauges are this reproduction's analogue
+of the paper's dTLB/IPC counters.
 """
 from __future__ import annotations
 
@@ -45,7 +56,7 @@ import collections
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -84,6 +95,14 @@ class MiningMetrics:
     # (sweep requests per flush; >1 means coalescing actually happened)
     flushes: int = 0
     batch_occupancy: float = 0.0
+    # mesh gauges: shards in the run, modeled cross-device row traffic
+    # (on-demand foreign fetches + explicit steal migrations), rows
+    # re-owned by migration, and one stats dict per device dispatcher
+    # (flushes / batch_occupancy / sweep_requests per shard)
+    n_devices: int = 1
+    d2d_bytes: int = 0
+    migrations: int = 0
+    per_device: List[Dict[str, float]] = field(default_factory=list)
     scheduler: Dict[str, float] = field(default_factory=dict)
 
     @property
@@ -117,9 +136,12 @@ class _PrefixCache:
     handle handoff makes it vestigial on that path (cache_misses == 0
     structurally)."""
 
-    def __init__(self, arena: BitmapArena, maxsize: int = 32):
+    def __init__(self, arena: BitmapArena, maxsize: int = 32,
+                 shard: int = 0):
         self.arena = arena
         self.maxsize = maxsize
+        self.shard = shard        # rows this cache pushes are owned by
+                                  # the caching worker's device shard
         self.d: "collections.OrderedDict[Itemset, int]" = \
             collections.OrderedDict()
         self.hits = 0
@@ -160,7 +182,7 @@ class _PrefixCache:
             for item in prefix[1:]:
                 bm &= arena.row(item)
             rows_read = len(prefix)
-        h = arena.push(bm)
+        h = arena.push(bm, shard=self.shard)
         arena.retain(h)           # the caller's reference, BEFORE _put:
         self._put(prefix, h)      # maxsize=0 evicts-and-releases at once
         return h, rows_read
@@ -198,12 +220,47 @@ def _cluster_fn(granularity: str, policy: str):
             else (lambda a: a[0]))
 
 
+def _resolve_mesh(mesh) -> Tuple[int, Optional[list]]:
+    """``mesh=`` accepts None (shared-memory run), an int (N logical
+    shards — ownership/affinity/d2d accounting without jax devices, so
+    the CPU tier exercises the mesh path), or a ``jax.sharding.Mesh``
+    (one shard per mesh device, mirrors placed on those devices).
+    Returns (n_shards, devices-or-None)."""
+    if mesh is None:
+        return 1, None
+    if isinstance(mesh, int):
+        if mesh < 1:
+            raise ValueError(f"mesh must be >= 1 shards, got {mesh}")
+        return mesh, None
+    devs = list(np.asarray(mesh.devices).reshape(-1))
+    return len(devs), devs
+
+
+def mesh_over_devices(n: int):
+    """CLI ``--mesh N`` semantics, shared by the launcher, quickstart,
+    and benchmarks: a jax ``Mesh`` over the first N devices when the
+    host exposes at least N, else N logical shards (the int form of
+    ``mine``'s ``mesh=``). Returns None for ``n <= 1`` — a plain
+    shared-memory run."""
+    if n <= 1:
+        return None
+    try:
+        import jax
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if len(devs) >= n:
+            return Mesh(np.array(devs[:n]), ("data",))
+    except Exception:       # pragma: no cover - jax always present here
+        pass
+    return n
+
+
 def mine(bitmaps: np.ndarray, min_support: int, *,
          policy: str = "clustered", n_workers: int = 8,
          max_k: int = 8, cache_size: int = 32,
          granularity: str = "bucket", backend: str = "auto",
          arena: str = "auto", max_batch: int = MAX_BATCH,
-         flush_us: float = FLUSH_US,
+         flush_us: float = FLUSH_US, mesh=None,
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
@@ -219,16 +276,31 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     backends then re-upload per batch, the old transfer-bound
     behaviour). ``max_batch``/``flush_us`` tune the sweep dispatcher's
     coalescing (requests per launch / straggler wait).
+    ``mesh`` makes the SAME engine multi-device: a ``jax.sharding.Mesh``
+    (or an int for logical shards) shards the arena one mirror per
+    device, splits the dispatcher one-per-device, and pins workers to
+    shards — every granularity and policy then runs distributed through
+    this one code path, with cross-shard traffic in
+    ``MiningMetrics.d2d_bytes`` and per-device dispatcher gauges in
+    ``MiningMetrics.per_device``.
     """
     if granularity not in GRANULARITIES:
         raise ValueError(
             f"granularity must be one of {GRANULARITIES}, "
             f"got {granularity!r}")
+    n_shards, devices = _resolve_mesh(mesh)
+    if n_shards > 1:
+        n_workers = max(n_workers, n_shards)   # ≥1 worker per shard
     backend_obj = resolve_backend(backend)
-    store = BitmapArena.from_bitmaps(bitmaps, backing=arena)
-    dispatcher = SweepDispatcher(store, backend_obj, n_clients=n_workers,
-                                 max_batch=max_batch, flush_us=flush_us)
-    metrics = MiningMetrics()
+    store = BitmapArena.from_bitmaps(bitmaps, backing=arena,
+                                     n_shards=n_shards, devices=devices)
+    device_of = [i % n_shards for i in range(n_workers)]
+    dispatchers = [
+        SweepDispatcher(store, backend_obj,
+                        n_clients=device_of.count(s),
+                        max_batch=max_batch, flush_us=flush_us, shard=s)
+        for s in range(n_shards)]
+    metrics = MiningMetrics(n_devices=n_shards)
     t0 = time.time()
 
     result, frequent = _level1(bitmaps, min_support)
@@ -236,19 +308,24 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
 
     sched = TaskScheduler(n_workers,
                           make_policy(policy, n_workers,
-                                      _cluster_fn(granularity, policy)))
+                                      _cluster_fn(granularity, policy)),
+                          device_of=device_of,
+                          migrate_cb=lambda hs, src, dst:
+                              store.migrate(hs, dst))
     caches: Dict[int, _PrefixCache] = {}        # thread ident -> cache
     try:
         if granularity == "depth-first":
-            _mine_depth_first(store, dispatcher, min_support, max_k,
+            _mine_depth_first(store, dispatchers, min_support, max_k,
                               sched, metrics, result, frequent)
         else:
-            _mine_levelwise(store, dispatcher, min_support, max_k,
+            _mine_levelwise(store, dispatchers, min_support, max_k,
                             sched, metrics, result, frequent,
-                            granularity, cache_size, caches)
+                            granularity, cache_size, caches,
+                            sweep_joins=n_shards > 1)
     finally:
         sched.shutdown()
-        dispatcher.stop()
+        for dispatcher in dispatchers:
+            dispatcher.stop()
 
     metrics.wall_s = time.time() - t0
     metrics.scheduler = sched.merged_stats()
@@ -258,18 +335,29 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     metrics.cache_misses = sum(c.misses for c in caches.values())
     metrics.cache_partial_hits = sum(c.partial_hits
                                      for c in caches.values())
-    metrics.flushes = dispatcher.flushes
-    metrics.batch_occupancy = dispatcher.batch_occupancy
+    metrics.flushes = sum(d.flushes for d in dispatchers)
+    total_requests = sum(d.requests for d in dispatchers)
+    metrics.batch_occupancy = (total_requests / metrics.flushes
+                               if metrics.flushes else 0.0)
+    metrics.per_device = [d.stats() for d in dispatchers]
     metrics.h2d_bytes = store.h2d_bytes
+    metrics.d2d_bytes = store.d2d_bytes
+    metrics.migrations = store.migrations
     metrics.peak_retained_bitmaps = store.peak_live_extra
     metrics.peak_bytes_retained = store.peak_bytes_extra
     return result, metrics
 
 
-def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
-                    result, frequent, granularity, cache_size, caches):
+def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
+                    metrics, result, frequent, granularity, cache_size,
+                    caches, sweep_joins=False):
     """Level-synchronous engines: plan level k, spawn, barrier, plan
-    level k+1 (the paper's §2 shape, at candidate or bucket grain)."""
+    level k+1 (the paper's §2 shape, at candidate or bucket grain).
+    ``sweep_joins`` routes even candidate-granularity scalar joins
+    through the (per-device) dispatchers — multi-shard runs need every
+    row access on the owning shard's path for d2d accounting;
+    single-shard runs (shared-memory or a 1-device mesh) keep the
+    direct host join as the scalar baseline."""
     n_w = store.n_words
     lock = threading.Lock()
 
@@ -278,7 +366,9 @@ def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
         c = caches.get(tid)
         if c is None:
             with lock:
-                c = caches.setdefault(tid, _PrefixCache(store, cache_size))
+                c = caches.setdefault(
+                    tid, _PrefixCache(store, cache_size,
+                                      shard=sched.worker_device()))
         return c
 
     def _prefix_handle(cache: _PrefixCache, prefix: Itemset
@@ -299,6 +389,11 @@ def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
         ph, prows = _prefix_handle(cache, cand[:-1])
         try:
             _account(prows + 1)
+            if sweep_joins:
+                st = sched.worker_stats()
+                st.sweeps_submitted += 1
+                disp = dispatchers[sched.worker_device()]
+                return int(disp.sweep(ph, (cand[-1],))[0])
             return int(tidlist.popcount32(store.row(ph)
                                           & store.row(cand[-1])).sum())
         finally:
@@ -306,15 +401,17 @@ def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
 
     def sweep_task(bucket: Bucket) -> np.ndarray:
         """Bucket-granularity body: resolve the prefix handle once,
-        then one handle-based request on the dispatcher (which batches
-        it with other workers' buckets). Returns [E] counts."""
+        then one handle-based request on the worker's device-affine
+        dispatcher (which batches it with other workers' buckets on
+        the same shard). Returns [E] counts."""
         cache = _thread_cache()
         ph, prows = _prefix_handle(cache, bucket.prefix)
         try:
             _account(prows + len(bucket.exts))
             st = sched.worker_stats()
             st.sweeps_submitted += 1
-            return dispatcher.sweep(ph, bucket.exts)
+            disp = dispatchers[sched.worker_device()]
+            return disp.sweep(ph, bucket.exts)
         finally:
             store.release(ph)
 
@@ -356,7 +453,7 @@ def _mine_levelwise(store, dispatcher, min_support, max_k, sched, metrics,
         k += 1
 
 
-def _mine_depth_first(store, dispatcher, min_support, max_k, sched,
+def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                       metrics, result, frequent):
     """Barrier-free engine: tasks spawn child equivalence classes.
 
@@ -389,16 +486,18 @@ def _mine_depth_first(store, dispatcher, min_support, max_k, sched,
         children: List[Tuple[Itemset, int, Tuple[int, ...]]] = []
         try:
             k = len(prefix) + 1                 # size of swept itemsets
+            shard = sched.worker_device()
             st = sched.worker_stats()
             st.sweeps_submitted += 1
-            counts = dispatcher.sweep(ph, exts)
+            counts = dispatchers[shard].sweep(ph, exts)
             freq = [(e, int(s)) for e, s in zip(exts, counts)
                     if s >= min_support]
             sibs = [e for e, _ in freq]         # ascending (exts sorted)
             if k < max_k and len(freq) > 1:
                 for i, e in enumerate(sibs[:-1]):
                     children.append((prefix + (e,),
-                                     store.materialize(ph, e),
+                                     store.materialize(ph, e,
+                                                       shard=shard),
                                      tuple(sibs[i + 1:])))
             rows = class_rows_touched(len(exts), len(children))
             st.rows_touched += rows
@@ -416,7 +515,7 @@ def _mine_depth_first(store, dispatcher, min_support, max_k, sched,
                 spawned.append(
                     sched.spawn(class_task, cprefix, ch, csibs, True,
                                 attr=(itemset_hash(cprefix), cprefix),
-                                depth=len(cprefix)))
+                                depth=len(cprefix), handles=(ch,)))
                 children.pop(0)       # ownership moved to the child task
             if spawned:
                 with lock:

@@ -54,9 +54,14 @@ FLUSH_US = 200.0
 
 @dataclass
 class SweepRequest:
-    """One bucket sweep, by handle: counts[i] = |row(prefix) ∧ row(ext_i)|."""
+    """One bucket sweep, by handle: counts[i] = |row(prefix) ∧ row(ext_i)|.
+
+    ``shard`` is the device shard the request executes on — stamped by
+    the (per-device) dispatcher that accepted it, so backends know
+    which arena mirror to gather from."""
     prefix_handle: int
     ext_handles: Tuple[int, ...]
+    shard: int = 0
     future: Future = field(default_factory=Future)
 
 
@@ -79,11 +84,20 @@ class NumpyBackend(JoinBackend):
     """Zero-copy arena row views into the fused AND+popcount ufunc
     pass. Runs per-request (no padding copies), but through the same
     dispatcher path as the kernels so CPU tier-1 tests exercise the
-    identical request/batch/flush machinery."""
+    identical request/batch/flush machinery. In sharded mode the
+    batch's row accesses are booked against the requests' shard first
+    (cross-shard reads land in the arena's ``d2d_bytes`` gauge)."""
 
     name = "numpy"
 
     def sweep_many(self, arena, requests):
+        if arena.n_shards > 1:
+            # booked per request: batches are shard-homogeneous today
+            # (each dispatcher stamps its own shard), but a mixed batch
+            # must not misattribute traffic to requests[0]'s shard
+            for r in requests:
+                arena.note_access(r.shard,
+                                  (r.prefix_handle, *r.ext_handles))
         rows = arena.rows_view()
         return [tidlist.support_counts(rows[r.prefix_handle],
                                        arena.gather(r.ext_handles))
@@ -129,7 +143,12 @@ class _PallasBackend(JoinBackend):
             n = len(r.ext_handles)
             eidx[i, :n] = r.ext_handles
             mask[i, :n] = True
-        dev = arena.device_rows()
+        shard = requests[0].shard if requests else 0
+        needed = None
+        if arena.n_shards > 1:
+            needed = [h for r in requests
+                      for h in (r.prefix_handle, *r.ext_handles)]
+        dev = arena.device_rows(shard, needed=needed)
         if dev is not None:
             # arena-gather path: bitmaps are already device-resident,
             # only the (tiny) index arrays cross host→device
@@ -220,6 +239,12 @@ def resolve_backend(spec: str = "auto") -> JoinBackend:
 class SweepDispatcher:
     """Coalesces many workers' sweep requests into batched launches.
 
+    In mesh runs there is ONE dispatcher per device shard: workers
+    submit to the dispatcher matching their device affinity, requests
+    are stamped with that shard, and each dispatcher flushes
+    ``bitmap_join_many`` against its own arena mirror — per-device
+    batching, per-device occupancy gauges.
+
     Workers call :meth:`sweep` (or :meth:`submit` + ``future.result()``)
     and block; the dedicated dispatcher thread gathers pending requests
     and flushes a batch when either
@@ -242,25 +267,27 @@ class SweepDispatcher:
 
     def __init__(self, arena: BitmapArena, backend: JoinBackend,
                  n_clients: int, max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US):
+                 flush_us: float = FLUSH_US, shard: int = 0):
         self.arena = arena
         self.backend = backend
         self.n_clients = max(1, n_clients)
         self.max_batch = max(1, max_batch)
         self.flush_s = max(0.0, flush_us) * 1e-6
+        self.shard = shard
         self._pending: List[SweepRequest] = []
         self._cv = threading.Condition()
         self._stop = False
         self.flushes = 0
         self.requests = 0
         self._thread = threading.Thread(target=self._loop, daemon=True,
-                                        name="sweep-dispatcher")
+                                        name=f"sweep-dispatcher-{shard}")
         self._thread.start()
 
     # ------------------------------------------------------------ client --
     def submit(self, prefix_handle: int,
                ext_handles: Sequence[int]) -> Future:
-        req = SweepRequest(int(prefix_handle), tuple(ext_handles))
+        req = SweepRequest(int(prefix_handle), tuple(ext_handles),
+                           shard=self.shard)
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
@@ -278,9 +305,12 @@ class SweepDispatcher:
         return self.requests / self.flushes if self.flushes else 0.0
 
     def stats(self) -> Dict[str, float]:
-        return {"flushes": self.flushes, "sweep_requests": self.requests,
-                "batch_occupancy": self.batch_occupancy,
-                "h2d_bytes": self.arena.h2d_bytes}
+        """This dispatcher's gauges — the per-device rows of
+        ``MiningMetrics.per_device`` (arena-global h2d/d2d gauges live
+        on the arena, not here)."""
+        return {"device": self.shard, "flushes": self.flushes,
+                "sweep_requests": self.requests,
+                "batch_occupancy": self.batch_occupancy}
 
     # -------------------------------------------------------------- loop --
     def _loop(self):

@@ -35,6 +35,8 @@ class Task:
     args: Tuple
     attr: Any = None          # task attribute (paper: the itemset ref)
     depth: int = 0            # prefix depth: deeper tasks drain first
+    handles: Tuple[int, ...] = ()   # arena handles the task retains —
+                                    # a cross-device steal migrates them
     result: Any = None
     error: Optional[BaseException] = None   # set if the body raised
 
@@ -45,7 +47,12 @@ class WorkerStats:
     steals: int = 0           # successful steal operations
     tasks_stolen: int = 0     # tasks acquired via steals
     steal_attempts: int = 0   # victim probes (incl. empty)
-    bucket_switches: int = 0  # clustered: times the drain bucket changed
+    steal_migrations: int = 0  # cross-device bucket-steal EVENTS this
+                               # worker won (the arena's `migrations`
+                               # gauge counts ROWS re-owned instead).
+                               # Drain-bucket switches live on the
+                               # clustered policies (`.switches`, per
+                               # worker), not here.
     # locality traffic counters, shared with the distributed engine's
     # plan accounting (repro.core.buckets): task bodies add the bitmap
     # rows/bytes they swept via TaskScheduler.worker_stats()
@@ -136,6 +143,8 @@ class ClusteredPolicy(SchedulingPolicy):
         self._drain: List[Optional[int]] = [None] * n_workers
         self.sizes = [0] * n_workers
         self._deep = [0] * n_workers   # queued tasks with depth > 0
+        self.switches = [0] * n_workers  # drain-bucket selections (the
+                                         # paper's bucket-switch count)
 
     def put(self, worker, task):
         key = self.cluster_of(task.attr)
@@ -175,6 +184,7 @@ class ClusteredPolicy(SchedulingPolicy):
             if key is None or key not in tab:
                 key = self._pick_drain(worker, tab)
                 self._drain[worker] = key
+                self.switches[worker] += 1
             q = tab[key]
             task = q.popleft()
             if not q:
@@ -250,6 +260,7 @@ class NearestNeighborPolicy(ClusteredPolicy):
                             best, best_ov, best_d = cand, ov, d
                     key = best
                 self._drain[worker] = key
+                self.switches[worker] += 1
             q = tab[key]
             task = q.popleft()
             if not q:
@@ -264,11 +275,26 @@ class NearestNeighborPolicy(ClusteredPolicy):
 
 
 class TaskScheduler:
-    """Spawn tasks, run them on N worker threads under a policy, wait."""
+    """Spawn tasks, run them on N worker threads under a policy, wait.
+
+    ``device_of`` pins each worker to a device shard (the mesh-aware
+    engine's affinity map; defaults to one shared shard). Because the
+    clustered policy places tasks on workers by bucket hash, bucket
+    placement *is* device placement. ``migrate_cb(handles, src, dst)``
+    fires when a steal crosses device shards — the thief's explicit
+    migration of the stolen bucket's retained arena bitmaps."""
 
     def __init__(self, n_workers: int, policy: SchedulingPolicy,
-                 seed: int = 0):
+                 seed: int = 0,
+                 device_of: Optional[Sequence[int]] = None,
+                 migrate_cb: Optional[
+                     Callable[[List[int], int, int], Any]] = None):
         self.n = n_workers
+        self.device_of = (list(device_of) if device_of is not None
+                          else [0] * n_workers)
+        if len(self.device_of) != n_workers:
+            raise ValueError("device_of must have one entry per worker")
+        self._migrate_cb = migrate_cb
         self.policy = policy
         self.stats = [WorkerStats() for _ in range(n_workers)]
         self._tls = threading.local()
@@ -290,14 +316,17 @@ class TaskScheduler:
 
     # ------------------------------------------------------------ spawn --
     def spawn(self, fn, *args, attr=None, depth: int = 0,
+              handles: Tuple[int, ...] = (),
               worker: Optional[int] = None):
         """Enqueue a task. When called from inside a task body, the child
         defaults onto the *spawning worker's* queue — the paper's runtime
         semantics: locality by construction, and a stolen bucket carries
         its whole subtree because descendants spawn on the thief. From
         the driver thread, placement is the bucket hash (ClusteredPolicy)
-        or round-robin (approximates even initial placement)."""
-        task = Task(fn, args, attr, depth)
+        or round-robin (approximates even initial placement).
+        ``handles`` names arena rows the task retains (the depth-first
+        handoff bitmaps); a cross-device steal migrates them."""
+        task = Task(fn, args, attr, depth, handles)
         if worker is None:
             worker = getattr(self._tls, "worker_id", None)
         if worker is None:
@@ -345,6 +374,12 @@ class TaskScheduler:
         merged_stats() still includes."""
         return getattr(self._tls, "stats", self._external_stats)
 
+    def worker_device(self) -> int:
+        """The calling worker's device shard (0 for non-worker
+        threads, e.g. the driver spawning root tasks)."""
+        wid = getattr(self._tls, "worker_id", None)
+        return 0 if wid is None else self.device_of[wid]
+
     def shutdown(self):
         with self._cv:
             self._stop = True
@@ -368,6 +403,16 @@ class TaskScheduler:
             if got:
                 st.steals += 1
                 st.tasks_stolen += len(got)
+                src, dst = self.device_of[victim], self.device_of[i]
+                if src != dst:
+                    # cross-device steal = explicit migration: the
+                    # stolen bucket's retained handoff bitmaps move
+                    # (and are accounted) before any task runs here
+                    st.steal_migrations += 1
+                    if self._migrate_cb is not None:
+                        moved = [h for t in got for h in t.handles]
+                        if moved:
+                            self._migrate_cb(moved, src, dst)
                 if len(got) > 1:
                     for t in got[1:]:
                         self.policy.put(i, t)
@@ -439,6 +484,11 @@ class TaskScheduler:
             "steal_attempts": sum(w.steal_attempts for w in s),
             "tasks_per_steal": (sum(w.tasks_stolen for w in s)
                                 / max(steals, 1)),
+            # drain-bucket switches are counted at the queue by the
+            # clustered policies; non-bucket policies report 0
+            "bucket_switches": sum(getattr(self.policy, "switches",
+                                           ())),
+            "steal_migrations": sum(w.steal_migrations for w in s),
             "rows_touched": sum(w.rows_touched for w in s),
             "bytes_swept": sum(w.bytes_swept for w in s),
             "sweeps_submitted": sum(w.sweeps_submitted for w in s),

@@ -10,7 +10,7 @@ re-expressed; DESIGN.md §3).
 from __future__ import annotations
 
 import threading
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -154,24 +154,53 @@ class BitmapArena:
                transfer-bound behaviour, kept as the A/B baseline for
                the h2d benchmark).
 
-    Thread-safe: workers push/release concurrently; the single
-    dispatcher thread syncs the device mirror. Growth reallocates the
-    backing store, but handed-out row views keep the old buffer alive
-    and live rows are never mutated, so views stay content-correct.
+    Sharded mode (``n_shards`` > 1, optionally with a ``devices`` list
+    from a jax mesh): one mirror per shard. Pinned item rows are
+    *replicated* into every shard's mirror; a materialized row is
+    *owned* by the shard that created it (``push``/``materialize``
+    take a ``shard=`` argument) and lives only in its owner's mirror.
+    When a sweep on shard *s* references a row owned by shard *t*, the
+    row is fetched into *s*'s mirror on demand and the payload is
+    counted in the ``d2d_bytes`` gauge — the modeled cross-device
+    traffic (on this container's virtual devices the bits physically
+    route through the host, but the gauge records what a real mesh
+    would ship device-to-device). :meth:`migrate` re-owners rows
+    explicitly (the scheduler's cross-device bucket steal) and counts
+    the same gauge. Host-only ("numpy") backings keep the identical
+    ownership/residency bookkeeping via :meth:`note_access`, so the
+    tier-1 CPU suite exercises the same d2d accounting without a
+    device in sight.
+
+    Thread-safe: workers push/release concurrently; each shard's
+    mirror is touched only by that shard's dispatcher thread. Growth
+    reallocates the backing store, but handed-out row views keep the
+    old buffer alive and live rows are never mutated, so views stay
+    content-correct.
     """
 
     GROW = 2                      # capacity doubling factor
 
     def __init__(self, n_words_: int, backing: str = "auto",
-                 capacity: int = 64):
+                 capacity: int = 64, n_shards: int = 1,
+                 devices: Optional[Sequence] = None):
         if backing not in ARENA_BACKINGS:
             raise ValueError(
                 f"arena backing must be one of {ARENA_BACKINGS}, "
                 f"got {backing!r}")
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if devices is not None and len(devices) != n_shards:
+            raise ValueError(
+                f"devices list ({len(devices)}) must match n_shards "
+                f"({n_shards})")
         self.n_words = n_words_
         self.backing = backing
+        self.n_shards = n_shards
+        self.devices = list(devices) if devices is not None else None
         self._rows = np.zeros((max(capacity, 1), n_words_), np.uint32)
         self._refs = np.zeros(max(capacity, 1), np.int32)
+        # owning shard per row; -1 = replicated (pinned base rows)
+        self._owner = np.full(max(capacity, 1), -1, np.int32)
         self.n_rows = 0               # high-water mark (rows ever used)
         self.n_base = 0               # pinned item rows [0, n_base)
         self._free: List[int] = []
@@ -180,26 +209,38 @@ class BitmapArena:
         # retained-bitmap memory bound)
         self.live_extra = 0
         self.peak_live_extra = 0
-        # device mirror state
-        self._dev = None              # jax array [_dev_n, W] or None
-        self._dev_n = 0               # rows synced to the device
-        self._dirty: set = set()      # recycled rows < _dev_n rewritten
+        # per-shard mirror state. A handle h < _dev_n[s] is resident in
+        # shard s's mirror iff h not in _invalid[s]; _invalid holds
+        # foreign rows never fetched plus recycled slots whose mirror
+        # content went stale.
+        self._dev: List = [None] * n_shards
+        self._dev_n = [0] * n_shards
+        self._invalid: List[set] = [set() for _ in range(n_shards)]
+        # rows whose transfer to this shard was already billed as d2d
+        # (by migrate) but whose payload has not physically landed in
+        # the mirror yet — their eventual placement is free
+        self._migrated_in: List[set] = [set() for _ in range(n_shards)]
         self.h2d_bytes = 0            # bitmap payload uploaded, total
+        self.d2d_bytes = 0            # modeled cross-shard row traffic
+        self.migrations = 0           # rows re-owned by migrate()
 
     # ------------------------------------------------------------- load --
     @classmethod
-    def from_bitmaps(cls, bitmaps: np.ndarray, backing: str = "auto"
+    def from_bitmaps(cls, bitmaps: np.ndarray, backing: str = "auto",
+                     n_shards: int = 1, devices: Optional[Sequence] = None
                      ) -> "BitmapArena":
         """Load packed item bitmaps as the pinned base rows (handle ==
         item id). One copy, once — every later sweep references rows by
         handle instead of re-marshalling them."""
         n, w = bitmaps.shape
-        arena = cls(w, backing, capacity=max(64, 2 * n))
+        arena = cls(w, backing, capacity=max(64, 2 * n),
+                    n_shards=n_shards, devices=devices)
         arena._rows[:n] = bitmaps
         arena._refs[:n] = 1
         arena.n_rows = arena.n_base = n
         if backing == "jax":
-            arena.device_rows()       # eager initial upload
+            for s in range(arena.n_shards):
+                arena.device_rows(s)  # eager initial (replicated) upload
         return arena
 
     @classmethod
@@ -213,8 +254,10 @@ class BitmapArena:
         # caller holds self._lock
         if self._free:
             slot = self._free.pop()
-            if slot < self._dev_n:
-                self._dirty.add(slot)     # mirror holds stale content
+            for s in range(self.n_shards):
+                if slot < self._dev_n[s]:
+                    self._invalid[s].add(slot)  # mirror content stale
+                self._migrated_in[s].discard(slot)  # old row is gone
             return slot
         if self.n_rows == self._rows.shape[0]:
             cap = self.GROW * self._rows.shape[0]
@@ -222,7 +265,9 @@ class BitmapArena:
             rows[:self.n_rows] = self._rows[:self.n_rows]
             refs = np.zeros(cap, np.int32)
             refs[:self.n_rows] = self._refs[:self.n_rows]
-            self._rows, self._refs = rows, refs
+            owner = np.full(cap, -1, np.int32)
+            owner[:self.n_rows] = self._owner[:self.n_rows]
+            self._rows, self._refs, self._owner = rows, refs, owner
         slot = self.n_rows
         self.n_rows += 1
         return slot
@@ -231,26 +276,64 @@ class BitmapArena:
         self.live_extra += 1
         self.peak_live_extra = max(self.peak_live_extra, self.live_extra)
 
-    def push(self, row: np.ndarray) -> int:
-        """Append (or recycle a slot for) one bitmap row; refcount 1."""
+    def push(self, row: np.ndarray, shard: int = 0) -> int:
+        """Append (or recycle a slot for) one bitmap row; refcount 1.
+        ``shard`` records the owning shard in sharded mode."""
         with self._lock:
             slot = self._alloc_slot()
             self._rows[slot] = row
             self._refs[slot] = 1
+            self._owner[slot] = shard
             self._bump_live()
             return slot
 
-    def materialize(self, prefix_handle: int, ext_handle: int) -> int:
+    def materialize(self, prefix_handle: int, ext_handle: int,
+                    shard: int = 0) -> int:
         """``row(prefix) ∧ row(ext)`` appended in place — the depth-first
-        parent→child handoff, with no floating temporary."""
+        parent→child handoff, with no floating temporary. The new row is
+        owned by ``shard`` (the materializing worker's device)."""
         with self._lock:
             slot = self._alloc_slot()
             np.bitwise_and(self._rows[prefix_handle],
                            self._rows[ext_handle],
                            out=self._rows[slot])
             self._refs[slot] = 1
+            self._owner[slot] = shard
             self._bump_live()
             return slot
+
+    def owner_of(self, handle: int) -> int:
+        """Owning shard of a row; -1 for replicated (pinned base) rows."""
+        if handle < self.n_base:
+            return -1
+        return int(self._owner[handle])
+
+    def migrate(self, handles: Sequence[int], dst: int) -> int:
+        """Re-owner rows onto shard ``dst`` — the explicit transfer
+        behind a cross-device bucket steal. A row's payload is billed
+        to ``d2d_bytes`` exactly once per crossing: a row the
+        destination already fetched (resident in its mirror) flips
+        owner for free, and a billed-here row's later physical landing
+        in the destination mirror costs no additional h2d/d2d. Pinned
+        base rows are replicated everywhere and never migrate. Returns
+        the number of rows moved."""
+        moved = 0
+        row_bytes = self.n_words * 4
+        with self._lock:
+            for h in handles:
+                if h < self.n_base:
+                    continue
+                if int(self._owner[h]) == dst:
+                    continue
+                self._owner[h] = dst
+                resident = (h < self._dev_n[dst]
+                            and h not in self._invalid[dst])
+                if not resident:
+                    self.d2d_bytes += row_bytes
+                    self._migrated_in[dst].add(h)
+                self.migrations += 1
+                moved += 1
+        return moved
 
     def retain(self, handle: int) -> None:
         if handle < self.n_base:
@@ -309,10 +392,89 @@ class BitmapArena:
     def device_enabled(self) -> bool:
         return self.backing != "numpy"
 
-    def device_rows(self):
-        """jax mirror of ``rows_view()``, synced incrementally (only
-        the dispatcher thread calls this). Returns None for host-only
-        ("numpy") backing.
+    def _sync_plan(self, shard: int, needed: Optional[Sequence[int]]
+                   ) -> Tuple[int, int, List[int], int,
+                              List[int], List[int]]:
+        """Advance shard bookkeeping to ``n_rows`` and classify work.
+
+        Caller holds the lock. Returns ``(lo, n, fresh_owned, fresh_h2d,
+        reupload, fetch)``: rows [lo, n) are new to this shard's mirror
+        (of which ``fresh_owned`` — owned-by-shard or replicated base —
+        carry payload, ``fresh_h2d`` of them at h2d cost; the rest
+        enter ``_invalid`` as unfetched foreign rows); ``reupload`` are
+        owned rows whose mirror content went stale (recycled slots),
+        billed h2d; ``fetch`` are rows placed without an h2d bill —
+        foreign rows ``needed`` now (their payload is counted in
+        ``d2d_bytes`` here, once per residency; a later recycle
+        invalidates and recounts) and migrated-in rows whose d2d was
+        prepaid by :meth:`migrate`."""
+        n = self.n_rows
+        lo = self._dev_n[shard]
+        inv = self._invalid[shard]
+        mig = self._migrated_in[shard]
+        fresh_owned: List[int] = []
+        fresh_h2d = 0
+        for h in range(lo, n):
+            if h < self.n_base or int(self._owner[h]) in (-1, shard):
+                fresh_owned.append(h)
+                if h in mig:          # transfer billed at migrate time
+                    mig.discard(h)
+                else:
+                    fresh_h2d += 1
+            else:
+                inv.add(h)
+        self._dev_n[shard] = n
+        reupload: List[int] = []
+        fetch: List[int] = []
+        row_bytes = self.n_words * 4
+
+        def _classify(h: int) -> None:
+            inv.discard(h)
+            if h < self.n_base or int(self._owner[h]) in (-1, shard):
+                if h in mig:          # prepaid migration landing
+                    mig.discard(h)
+                    fetch.append(h)
+                else:
+                    reupload.append(h)
+            else:
+                fetch.append(h)
+                self.d2d_bytes += row_bytes
+
+        if needed is not None:
+            for h in set(needed):
+                if h in inv:
+                    _classify(h)
+        else:
+            # no access set: refresh every stale owned row (the
+            # pre-sharding "dirty" semantics); foreign rows wait for a
+            # needed-based sync
+            for h in sorted(inv):
+                if h < self.n_base or int(self._owner[h]) in (-1, shard):
+                    _classify(h)
+        return lo, n, fresh_owned, fresh_h2d, reupload, fetch
+
+    def note_access(self, shard: int, handles: Sequence[int]) -> None:
+        """Residency/d2d bookkeeping for host-only sweeps: a sweep on
+        ``shard`` reading a row owned elsewhere counts one cross-shard
+        fetch (``d2d_bytes``), after which the row is resident there
+        until its slot recycles. Device-backed arenas get the same
+        accounting (plus the physical mirror ops) via
+        :meth:`device_rows`."""
+        if self.n_shards == 1:
+            return
+        with self._lock:
+            self._sync_plan(shard, handles)
+
+    def device_rows(self, shard: int = 0,
+                    needed: Optional[Sequence[int]] = None):
+        """jax mirror of ``rows_view()`` for one shard, synced
+        incrementally (only that shard's dispatcher thread calls
+        this). Returns None for host-only ("numpy") backing.
+
+        ``needed`` lists the handles the caller is about to gather:
+        foreign rows among them are fetched into this shard's mirror
+        and counted in ``d2d_bytes``. Without ``needed`` (single-shard
+        callers), every stale owned row is refreshed.
 
         "Incremental" bounds host→device PAYLOAD (the ``h2d_bytes``
         gauge): only changed rows cross the bus. The functional update
@@ -322,37 +484,63 @@ class BitmapArena:
         preallocated buffer would remove it when arenas reach device
         memory scale."""
         if not self.device_enabled:
+            if needed is not None:
+                self.note_access(shard, needed)
             return None
         with self._lock:
-            n = self.n_rows
-            lo = self._dev_n
-            fresh = self._rows[lo:n].copy() if n > lo else None
-            dirty = sorted(d for d in self._dirty if d < lo)
-            dirty_rows = self._rows[dirty].copy() if dirty else None
-            self._dirty.clear()
-            self._dev_n = n
+            lo, n, fresh_owned, fresh_h2d, reupload, fetch = \
+                self._sync_plan(shard, needed)
+            fresh = None
+            if n > lo:
+                fresh = self._rows[lo:n].copy()
+                owned = set(fresh_owned)
+                for j, h in enumerate(range(lo, n)):
+                    if h not in owned:
+                        fresh[j] = 0          # unfetched foreign row
+            re_rows = self._rows[reupload].copy() if reupload else None
+            fe_rows = self._rows[fetch].copy() if fetch else None
         import jax.numpy as jnp
+
+        def _place(arr):
+            a = jnp.asarray(arr)
+            if self.devices is not None:
+                import jax
+                a = jax.device_put(a, self.devices[shard])
+            return a
+
         row_bytes = self.n_words * 4
-        dev = self._dev
+        h2d_delta = 0
+        dev = self._dev[shard]
         if dev is None:
-            dev = jnp.asarray(self._rows[:n])
-            self.h2d_bytes += n * row_bytes
-        else:
-            if fresh is not None:
-                dev = jnp.concatenate([dev, jnp.asarray(fresh)])
-                self.h2d_bytes += fresh.shape[0] * row_bytes
-            if dirty_rows is not None:
-                dev = dev.at[jnp.asarray(dirty, dtype=jnp.int32)
-                             ].set(jnp.asarray(dirty_rows))
-                self.h2d_bytes += dirty_rows.shape[0] * row_bytes
-        self._dev = dev
+            dev = _place(fresh if fresh is not None
+                         else self._rows[:0])
+            h2d_delta += fresh_h2d * row_bytes
+        elif fresh is not None:
+            dev = jnp.concatenate([dev, _place(fresh)])
+            h2d_delta += fresh_h2d * row_bytes
+        if re_rows is not None:
+            dev = dev.at[_place(np.asarray(reupload, np.int32))
+                         ].set(_place(re_rows))
+            h2d_delta += len(reupload) * row_bytes
+        if fe_rows is not None:
+            # payload already billed (d2d at fetch/migrate time); on
+            # this container's virtual devices the bits physically
+            # route through the host
+            dev = dev.at[_place(np.asarray(fetch, np.int32))
+                         ].set(_place(fe_rows))
+        self._dev[shard] = dev
+        if h2d_delta:
+            self.count_h2d(h2d_delta)
         return dev
 
     def count_h2d(self, nbytes: int) -> None:
         """Backends add per-batch host→device payload here (the
-        host-gather fallback path)."""
-        self.h2d_bytes += nbytes
+        host-gather fallback path). Locked: with one dispatcher thread
+        per shard, concurrent flushes update the shared gauge."""
+        with self._lock:
+            self.h2d_bytes += nbytes
 
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
         return (f"<BitmapArena rows={self.n_rows} base={self.n_base} "
-                f"live_extra={self.live_extra} backing={self.backing}>")
+                f"live_extra={self.live_extra} backing={self.backing} "
+                f"shards={self.n_shards}>")

@@ -1,5 +1,16 @@
-"""jit'd public wrapper: Pallas on TPU, interpret-mode or jnp on CPU."""
+"""jit'd public wrapper: Pallas on TPU, interpret-mode or jnp on CPU.
+
+Compiled-function caching: the Pallas kernels are jitted once at module
+level (``kernel.py``), and the jnp reference paths go through
+:func:`_jitted`, an lru-cached factory — so a wrapper is built once per
+function and jax's own shape-keyed cache handles the rest. The old
+pattern of calling ``jax.jit(fn)`` inline created a FRESH wrapper per
+call, which re-traced every level of a mining run (the per-level
+recompilation bug the distributed driver used to have with its
+``functools.partial``-wrapped ``shard_map`` bodies)."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +21,14 @@ from repro.kernels.bitmap_join.ref import (bitmap_join_many_ref,
                                            bitmap_join_ref)
 
 MODES = ("auto", "ref", "pallas-interpret", "pallas-jit")
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(fn):
+    """One persistent jit wrapper per reference function. jax keys its
+    compile cache on the wrapper object, so re-wrapping per call would
+    re-trace on every invocation."""
+    return jax.jit(fn)
 
 
 def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
@@ -29,7 +48,7 @@ def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if mode == "ref":
-        return jax.jit(bitmap_join_ref)(prefix, exts)
+        return _jitted(bitmap_join_ref)(prefix, exts)
     if mode == "pallas-interpret":
         return bitmap_join_kernel(prefix, exts, interpret=True)
     if mode == "pallas-jit":
@@ -38,7 +57,7 @@ def bitmap_join(prefix: jnp.ndarray, exts: jnp.ndarray,
     if use_pallas is None:
         use_pallas = on_tpu
     if not use_pallas:
-        return jax.jit(bitmap_join_ref)(prefix, exts)
+        return _jitted(bitmap_join_ref)(prefix, exts)
     return bitmap_join_kernel(prefix, exts,
                               interpret=bool(interpret if interpret
                                              is not None else not on_tpu))
@@ -57,7 +76,7 @@ def bitmap_join_many(prefixes: jnp.ndarray, exts: jnp.ndarray,
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if mode == "ref":
-        counts = jax.jit(bitmap_join_many_ref)(prefixes, exts)
+        counts = _jitted(bitmap_join_many_ref)(prefixes, exts)
     elif mode == "pallas-interpret":
         counts = bitmap_join_many_kernel(prefixes, exts, interpret=True)
     elif mode == "pallas-jit":
@@ -67,7 +86,7 @@ def bitmap_join_many(prefixes: jnp.ndarray, exts: jnp.ndarray,
             counts = bitmap_join_many_kernel(prefixes, exts,
                                              interpret=False)
         else:
-            counts = jax.jit(bitmap_join_many_ref)(prefixes, exts)
+            counts = _jitted(bitmap_join_many_ref)(prefixes, exts)
     if mask is not None:
         counts = jnp.where(mask, counts, 0)
     return counts

@@ -9,7 +9,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from repro.core.fpm import GRANULARITIES, mine, mine_serial
+from repro.core.fpm import (GRANULARITIES, mesh_over_devices, mine,
+                            mine_serial)
 from repro.core.tidlist import pack_database
 from repro.data.transactions import PROFILES, load, min_support_count
 
@@ -40,6 +41,12 @@ def main():
     ap.add_argument("--flush-us", type=float, default=200.0,
                     help="sweep dispatcher: µs to wait for straggler "
                          "requests before flushing a partial batch")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="run the engine mesh-aware over N device "
+                         "shards (sharded arena, one dispatcher per "
+                         "device, device-affine workers). Uses the "
+                         "first N jax devices when available, logical "
+                         "shards otherwise; 0 = shared-memory run")
     ap.add_argument("--support", type=float, default=None,
                     help="override the profile's min-support fraction")
     ap.add_argument("--max-k", type=int, default=6)
@@ -55,6 +62,11 @@ def main():
     print(f"dataset=synth:{args.dataset} |D|={len(db)} items={n_items} "
           f"min_support={ms} ({frac:.4f})")
 
+    mesh = mesh_over_devices(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {args.mesh} device shards "
+              f"({'logical' if isinstance(mesh, int) else 'jax devices'})")
+
     t0 = time.time()
     ref = mine_serial(bitmaps, ms, max_k=args.max_k)
     t_serial = time.time() - t0
@@ -65,17 +77,25 @@ def main():
                         n_workers=args.workers, max_k=args.max_k,
                         granularity=args.granularity,
                         backend=args.backend, arena=args.arena,
-                        max_batch=args.max_batch, flush_us=args.flush_us)
+                        max_batch=args.max_batch, flush_us=args.flush_us,
+                        mesh=mesh)
         assert res == ref, f"{policy} result mismatch!"
         s = met.scheduler
         line = (f"{policy:10s} wall={met.wall_s:6.2f}s "
                 f"speedup={t_serial / met.wall_s:5.2f}x "
                 f"cache_hit={met.cache_hit_rate:5.1%} "
                 f"steals={int(s['steals']):6d} "
-                f"tasks/steal={s['tasks_per_steal']:5.2f}")
+                f"tasks/steal={s['tasks_per_steal']:5.2f} "
+                f"bucket_switches={int(s['bucket_switches']):5d}")
         if met.flushes:
             line += (f" batch_occ={met.batch_occupancy:4.2f} "
                      f"flushes={met.flushes} h2d={met.h2d_bytes}B")
+        if met.n_devices > 1:
+            occ = "/".join(f"{d['batch_occupancy']:.2f}"
+                           for d in met.per_device)
+            line += (f" d2d={met.d2d_bytes}B "
+                     f"migrations={met.migrations} "
+                     f"dev_occ={occ}")
         if args.granularity == "depth-first":
             line += (f" peak_retained={met.peak_retained_bitmaps}"
                      f" ({met.peak_bytes_retained} B)")

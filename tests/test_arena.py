@@ -121,6 +121,113 @@ def test_jax_backing_uploads_eagerly():
     assert arena.h2d_bytes == 5 * 3 * 4
 
 
+# ------------------------------------------------------- sharded mode
+def sharded_arena(n=6, w=4, backing="numpy", n_shards=2):
+    rows = RNG.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    return BitmapArena.from_bitmaps(rows, backing=backing,
+                                    n_shards=n_shards), rows
+
+
+def test_sharded_ownership_and_base_replication():
+    arena, _ = sharded_arena()
+    assert arena.n_shards == 2
+    for i in range(arena.n_base):
+        assert arena.owner_of(i) == -1       # replicated, never owned
+    h0 = arena.materialize(0, 1, shard=0)
+    h1 = arena.materialize(2, 3, shard=1)
+    assert arena.owner_of(h0) == 0 and arena.owner_of(h1) == 1
+
+
+def test_foreign_fetch_counts_d2d_once_per_residency():
+    arena, _ = sharded_arena(w=8)
+    row_bytes = 8 * 4
+    h = arena.materialize(0, 1, shard=0)
+    arena.note_access(0, [h, 0, 1])          # owner reads: free
+    assert arena.d2d_bytes == 0
+    arena.note_access(1, [h, 0])             # shard 1 fetches h
+    assert arena.d2d_bytes == row_bytes
+    arena.note_access(1, [h])                # cached: no recount
+    assert arena.d2d_bytes == row_bytes
+    # recycling the slot invalidates residency everywhere
+    arena.release(h)
+    h2 = arena.materialize(2, 3, shard=0)
+    assert h2 == h
+    arena.note_access(1, [h2])               # re-fetch after recycle
+    assert arena.d2d_bytes == 2 * row_bytes
+
+
+def test_migrate_reowners_and_accounts():
+    arena, _ = sharded_arena(w=4)
+    row_bytes = 4 * 4
+    h = arena.materialize(0, 1, shard=0)
+    moved = arena.migrate([h, 0, h], dst=1)  # base row 0 never moves;
+    assert moved == 1                        # second h already at dst
+    assert arena.owner_of(h) == 1
+    assert arena.migrations == 1
+    assert arena.d2d_bytes == row_bytes
+    # after migration the new owner reads it for free
+    arena.note_access(1, [h])
+    assert arena.d2d_bytes == row_bytes
+
+
+def test_migrate_after_fetch_is_free():
+    """A row the destination already fetched (resident in its mirror)
+    crossed the link once — migrating it flips ownership without a
+    second d2d bill."""
+    arena, _ = sharded_arena(w=8)
+    row_bytes = 8 * 4
+    h = arena.materialize(0, 1, shard=0)
+    arena.note_access(1, [h])                # fetch: billed once
+    assert arena.d2d_bytes == row_bytes
+    moved = arena.migrate([h], dst=1)
+    assert moved == 1 and arena.migrations == 1
+    assert arena.d2d_bytes == row_bytes      # no double count
+
+
+def test_migrated_row_lands_on_dst_mirror_without_h2d():
+    """Device-backed shards: a migrated row's physical landing in the
+    destination mirror is the d2d transfer already billed by migrate()
+    — it must not also be billed as a host upload."""
+    arena, rows = sharded_arena(n=4, w=8, backing="auto")
+    row_bytes = 8 * 4
+    h = arena.materialize(0, 1, shard=0)
+    arena.device_rows(0, needed=[h])         # shard 0: base + own row
+    h2d_before = arena.h2d_bytes
+    arena.migrate([h], dst=1)
+    assert arena.d2d_bytes == row_bytes
+    d1 = arena.device_rows(1, needed=[h])
+    np.testing.assert_array_equal(np.asarray(d1[h]), rows[0] & rows[1])
+    # shard 1's first sync uploads only the replicated base rows; the
+    # migrated row rides its prepaid d2d transfer
+    assert arena.h2d_bytes == h2d_before + arena.n_base * row_bytes
+    assert arena.d2d_bytes == row_bytes      # still billed exactly once
+
+
+def test_sharded_device_mirrors_fetch_foreign_rows():
+    """Device-backed shards: each mirror holds base rows + its own
+    rows; a foreign row is fetched on demand (content-correct, counted
+    as d2d) and zero-filled until then."""
+    arena, rows = sharded_arena(n=4, w=8, backing="auto")
+    h = arena.materialize(0, 1, shard=0)
+    d0 = arena.device_rows(0, needed=[h, 0])
+    np.testing.assert_array_equal(np.asarray(d0[h]), rows[0] & rows[1])
+    assert arena.d2d_bytes == 0
+    d1 = arena.device_rows(1, needed=[0, 2])  # base rows only: no d2d
+    np.testing.assert_array_equal(np.asarray(d1[:4]), rows)
+    assert (np.asarray(d1[h]) == 0).all()     # unfetched foreign row
+    assert arena.d2d_bytes == 0
+    d1 = arena.device_rows(1, needed=[h])     # now fetch it
+    np.testing.assert_array_equal(np.asarray(d1[h]), rows[0] & rows[1])
+    assert arena.d2d_bytes == 8 * 4
+
+
+def test_sharded_ctor_validation():
+    with pytest.raises(ValueError, match="n_shards"):
+        BitmapArena(4, n_shards=0)
+    with pytest.raises(ValueError, match="devices"):
+        BitmapArena(4, n_shards=2, devices=[object()])
+
+
 # --------------------------------------------- engine refcount hygiene
 @pytest.fixture()
 def capture_arena(monkeypatch):
@@ -131,8 +238,8 @@ def capture_arena(monkeypatch):
 
     class Spy(BitmapArena):
         @classmethod
-        def from_bitmaps(cls, bitmaps, backing="auto"):
-            arena = orig(cls, bitmaps, backing)
+        def from_bitmaps(cls, bitmaps, backing="auto", **kw):
+            arena = orig(cls, bitmaps, backing, **kw)
             captured.append(arena)
             return arena
 

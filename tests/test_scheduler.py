@@ -76,6 +76,28 @@ def test_stats_tracked():
     s = sched.merged_stats()
     assert s["tasks_run"] == 500
     assert s["tasks_per_steal"] >= 0
+    # non-bucket policies never switch drain buckets or migrate
+    assert s["bucket_switches"] == 0
+    assert s["steal_migrations"] == 0
+
+
+def test_bucket_switches_counted_and_merged():
+    """The clustered policy counts drain-bucket switches per worker at
+    the queue; merged_stats must aggregate them (they were dropped
+    before) and they must match the policy's own counters."""
+    pol = ClusteredPolicy(1, cluster_of=lambda a: a)
+    from repro.core.scheduler import Task
+    for attr in [1, 2, 1, 2, 1, 3]:
+        pol.put(0, Task(lambda: None, (), attr=attr))
+    while pol.get(0) is not None:
+        pass
+    # buckets drain whole: 1,1,1 then 2,2 then 3 -> three selections
+    assert pol.switches[0] == 3
+
+    sched, _, _ = run_tasks(ClusteredPolicy(2, cluster_of=lambda a: a % 5),
+                            n_workers=2, n_tasks=100)
+    s = sched.merged_stats()
+    assert s["bucket_switches"] == sum(sched.policy.switches) > 0
 
 
 def test_make_policy_names():
