@@ -11,10 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.bitmap_join.ref import bitmap_join_ref
-from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.masked_gram.ref import masked_gram_ref
 
-PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
 
@@ -42,24 +39,6 @@ def run() -> List[Dict]:
     rows.append({"name": "bitmap_join_4096x4096", "wall_s": dt,
                  "tpu_mem_bound_s": bytes_moved / HBM_BW})
 
-    # masked_gram: 512 items x 8192 transactions
-    a = jnp.asarray((rng.random((512, 8192)) < 0.4), jnp.bfloat16)
-    mask = jnp.asarray((rng.random(8192) < 0.5), jnp.bfloat16)
-    f = jax.jit(masked_gram_ref)
-    dt = timeit(f, a, mask)
-    flops = 2 * 512 * 512 * 8192
-    rows.append({"name": "masked_gram_512x8192", "wall_s": dt,
-                 "tpu_compute_bound_s": flops / PEAK_FLOPS})
-
-    # flash attention: BH=8, S=2048, D=128
-    q = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
-    k = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
-    v = jnp.asarray(rng.standard_normal((8, 2048, 128)), jnp.bfloat16)
-    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
-    dt = timeit(f, q, k, v, repeats=3)
-    flops = 4 * 8 * 2048 * 2048 * 128
-    rows.append({"name": "flash_attention_8x2048x128", "wall_s": dt,
-                 "tpu_compute_bound_s": flops / PEAK_FLOPS})
     return rows
 
 

@@ -1,14 +1,13 @@
-"""Benchmark harness — one module per paper table/figure + framework
-benches. Prints ``name,us_per_call,derived`` CSV rows.
+"""Benchmark harness — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
 
   fpm_policies     Fig. 1  (normalized runtimes, Cilk vs Clustered)
   fpm_granularity  bucket-sweep vs per-candidate tasks (smoke sizes)
   fpm_locality     Table 1 (locality metrics)
   fpm_scaling      worker scaling
   fpm_distributed  clustered vs round-robin placement on an 8-dev mesh
-  moe_dispatch     framework-level clustered vs one-hot dispatch
+  fpm_streaming    ingest / incremental-refresh / serving latencies
   kernels_bench    kernel micro-benches + analytic TPU bounds
-  roofline         aggregates results/dryrun into results/roofline.md
 """
 from __future__ import annotations
 
@@ -16,8 +15,8 @@ import sys
 import traceback
 
 from benchmarks import (fpm_distributed, fpm_granularity, fpm_locality,
-                        fpm_policies, fpm_scaling, kernels_bench,
-                        moe_dispatch, roofline, serve_bench)
+                        fpm_policies, fpm_scaling, fpm_streaming,
+                        kernels_bench)
 
 ALL = [
     ("fpm_policies", fpm_policies.main),
@@ -25,10 +24,8 @@ ALL = [
     ("fpm_locality", fpm_locality.main),
     ("fpm_scaling", fpm_scaling.main),
     ("fpm_distributed", fpm_distributed.main),
-    ("moe_dispatch", moe_dispatch.main),
+    ("fpm_streaming", lambda: fpm_streaming.main(["--smoke"])),
     ("kernels_bench", kernels_bench.main),
-    ("serve_bench", serve_bench.main),
-    ("roofline", roofline.main),
 ]
 
 

@@ -56,7 +56,7 @@ import collections
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -187,6 +187,16 @@ class _PrefixCache:
         self._put(prefix, h)      # maxsize=0 evicts-and-releases at once
         return h, rows_read
 
+    def drain(self) -> None:
+        """Release every cached handle. A one-shot ``mine`` discards
+        the arena with the run, but a streaming arena persists across
+        refreshes — rows a dead cache pins would never recycle, and
+        worse, they would survive a later ``ingest`` WITHOUT the new
+        segment's words, so the runtime drains caches at close."""
+        while self.d:
+            _, h = self.d.popitem(last=False)
+            self.arena.release(h)
+
 
 def _raise_task_errors(tasks) -> None:
     """Surface the first task-body exception on the driver thread (the
@@ -255,6 +265,106 @@ def mesh_over_devices(n: int):
     return n
 
 
+@dataclass
+class DeltaPlan:
+    """Incremental re-mine instructions threaded through the engine
+    cores by ``StreamingMiner.refresh`` (None on a batch ``mine``).
+
+    ``known`` maps every candidate ever swept (frequent AND negative
+    border) to its exact support over the segments refreshed so far —
+    the engines update it in place (under ``lock`` on the depth-first
+    path, where class tasks merge concurrently). ``is_dirty(c)`` says
+    whether c's support may have changed (every item of c occurs in the
+    pending segments); ``segments`` are the pending segment ids a
+    dirty candidate's delta sweep reads. ``priority_of(prefix)`` is the
+    staleness-hotness carried on spawned tasks — the clustered
+    policies drain stale-hot buckets first. Clean known candidates are
+    never swept at all: that is the whole point."""
+    known: Dict[Itemset, int]
+    is_dirty: Callable[[Itemset], bool]
+    segments: Tuple[int, ...]
+    priority_of: Callable[[Itemset], float]
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    # refresh-side counters (how much re-mining the plan avoided)
+    swept_full: int = 0
+    swept_delta: int = 0
+    reused: int = 0
+
+
+class MiningRun:
+    """The engine runtime shared by batch ``mine`` and streaming
+    ``refresh``: one scheduler with device-affine workers, one sweep
+    dispatcher per arena shard, per-worker prefix caches, and the
+    metrics plumbing — built around an arena the caller owns (a batch
+    run discards it; a streaming run keeps it across refreshes)."""
+
+    def __init__(self, store: BitmapArena, *, policy: str,
+                 n_workers: int, granularity: str, cache_size: int,
+                 backend: str = "auto", max_batch: int = MAX_BATCH,
+                 flush_us: float = FLUSH_US):
+        if granularity not in GRANULARITIES:
+            raise ValueError(
+                f"granularity must be one of {GRANULARITIES}, "
+                f"got {granularity!r}")
+        backend_obj = resolve_backend(backend)
+        n_shards = store.n_shards
+        if n_shards > 1:
+            n_workers = max(n_workers, n_shards)  # ≥1 worker per shard
+        self.store = store
+        self.granularity = granularity
+        self.cache_size = cache_size
+        self.device_of = [i % n_shards for i in range(n_workers)]
+        self.dispatchers = [
+            SweepDispatcher(store, backend_obj,
+                            n_clients=self.device_of.count(s),
+                            max_batch=max_batch, flush_us=flush_us,
+                            shard=s)
+            for s in range(n_shards)]
+        self.metrics = MiningMetrics(n_devices=n_shards)
+        self.sched = TaskScheduler(
+            n_workers,
+            make_policy(policy, n_workers,
+                        _cluster_fn(granularity, policy)),
+            device_of=self.device_of,
+            migrate_cb=lambda hs, src, dst: store.migrate(hs, dst))
+        self.caches: Dict[int, _PrefixCache] = {}   # thread ident -> cache
+        self.sweep_joins = n_shards > 1
+
+    def close(self) -> None:
+        self.sched.shutdown()
+        for dispatcher in self.dispatchers:
+            dispatcher.stop()
+        for cache in self.caches.values():
+            cache.drain()
+
+    def finalize(self, t0: float) -> MiningMetrics:
+        """Fill the metrics from scheduler/dispatcher/arena gauges.
+        Arena gauges are cumulative over the arena's life — ``mine``
+        owns a fresh arena so they equal the run; ``refresh`` snapshots
+        them before/after to report per-refresh deltas."""
+        metrics, store = self.metrics, self.store
+        metrics.wall_s = time.time() - t0
+        metrics.scheduler = self.sched.merged_stats()
+        metrics.rows_touched = int(metrics.scheduler["rows_touched"])
+        metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
+        metrics.cache_hits = sum(c.hits for c in self.caches.values())
+        metrics.cache_misses = sum(c.misses
+                                   for c in self.caches.values())
+        metrics.cache_partial_hits = sum(c.partial_hits
+                                         for c in self.caches.values())
+        metrics.flushes = sum(d.flushes for d in self.dispatchers)
+        total_requests = sum(d.requests for d in self.dispatchers)
+        metrics.batch_occupancy = (total_requests / metrics.flushes
+                                   if metrics.flushes else 0.0)
+        metrics.per_device = [d.stats() for d in self.dispatchers]
+        metrics.h2d_bytes = store.h2d_bytes
+        metrics.d2d_bytes = store.d2d_bytes
+        metrics.migrations = store.migrations
+        metrics.peak_retained_bitmaps = store.peak_live_extra
+        metrics.peak_bytes_retained = store.peak_bytes_extra
+        return metrics
+
+
 def mine(bitmaps: np.ndarray, min_support: int, *,
          policy: str = "clustered", n_workers: int = 8,
          max_k: int = 8, cache_size: int = 32,
@@ -284,80 +394,61 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     ``MiningMetrics.d2d_bytes`` and per-device dispatcher gauges in
     ``MiningMetrics.per_device``.
     """
-    if granularity not in GRANULARITIES:
-        raise ValueError(
-            f"granularity must be one of {GRANULARITIES}, "
-            f"got {granularity!r}")
     n_shards, devices = _resolve_mesh(mesh)
-    if n_shards > 1:
-        n_workers = max(n_workers, n_shards)   # ≥1 worker per shard
-    backend_obj = resolve_backend(backend)
     store = BitmapArena.from_bitmaps(bitmaps, backing=arena,
                                      n_shards=n_shards, devices=devices)
-    device_of = [i % n_shards for i in range(n_workers)]
-    dispatchers = [
-        SweepDispatcher(store, backend_obj,
-                        n_clients=device_of.count(s),
-                        max_batch=max_batch, flush_us=flush_us, shard=s)
-        for s in range(n_shards)]
-    metrics = MiningMetrics(n_devices=n_shards)
     t0 = time.time()
-
+    # level 1 before the runtime spins up worker/dispatcher threads:
+    # if it raises there is nothing to tear down
     result, frequent = _level1(bitmaps, min_support)
-    metrics.frequent += len(frequent)
-
-    sched = TaskScheduler(n_workers,
-                          make_policy(policy, n_workers,
-                                      _cluster_fn(granularity, policy)),
-                          device_of=device_of,
-                          migrate_cb=lambda hs, src, dst:
-                              store.migrate(hs, dst))
-    caches: Dict[int, _PrefixCache] = {}        # thread ident -> cache
+    run = MiningRun(store, policy=policy, n_workers=n_workers,
+                    granularity=granularity, cache_size=cache_size,
+                    backend=backend, max_batch=max_batch,
+                    flush_us=flush_us)
+    run.metrics.frequent += len(frequent)
     try:
-        if granularity == "depth-first":
-            _mine_depth_first(store, dispatchers, min_support, max_k,
-                              sched, metrics, result, frequent)
-        else:
-            _mine_levelwise(store, dispatchers, min_support, max_k,
-                            sched, metrics, result, frequent,
-                            granularity, cache_size, caches,
-                            sweep_joins=n_shards > 1)
+        mine_more(run, min_support, max_k, result, frequent)
     finally:
-        sched.shutdown()
-        for dispatcher in dispatchers:
-            dispatcher.stop()
+        run.close()
+    return result, run.finalize(t0)
 
-    metrics.wall_s = time.time() - t0
-    metrics.scheduler = sched.merged_stats()
-    metrics.rows_touched = int(metrics.scheduler["rows_touched"])
-    metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
-    metrics.cache_hits = sum(c.hits for c in caches.values())
-    metrics.cache_misses = sum(c.misses for c in caches.values())
-    metrics.cache_partial_hits = sum(c.partial_hits
-                                     for c in caches.values())
-    metrics.flushes = sum(d.flushes for d in dispatchers)
-    total_requests = sum(d.requests for d in dispatchers)
-    metrics.batch_occupancy = (total_requests / metrics.flushes
-                               if metrics.flushes else 0.0)
-    metrics.per_device = [d.stats() for d in dispatchers]
-    metrics.h2d_bytes = store.h2d_bytes
-    metrics.d2d_bytes = store.d2d_bytes
-    metrics.migrations = store.migrations
-    metrics.peak_retained_bitmaps = store.peak_live_extra
-    metrics.peak_bytes_retained = store.peak_bytes_extra
-    return result, metrics
+
+def mine_more(run: MiningRun, min_support: int, max_k: int,
+              result: Dict[Itemset, int], frequent: List[Itemset],
+              delta: Optional[DeltaPlan] = None) -> None:
+    """Mine levels ≥ 2 on an existing runtime, starting from the
+    level-1 ``frequent`` itemsets — the shared entry point under
+    ``mine`` (delta=None: sweep everything) and the streaming refresh
+    (delta: reuse known supports, delta-sweep dirty candidates over the
+    pending segments only, carry staleness priorities)."""
+    if run.granularity == "depth-first":
+        _mine_depth_first(run.store, run.dispatchers, min_support,
+                          max_k, run.sched, run.metrics, result,
+                          frequent, delta=delta)
+    else:
+        _mine_levelwise(run.store, run.dispatchers, min_support, max_k,
+                        run.sched, run.metrics, result, frequent,
+                        run.granularity, run.cache_size, run.caches,
+                        sweep_joins=run.sweep_joins, delta=delta)
 
 
 def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                     metrics, result, frequent, granularity, cache_size,
-                    caches, sweep_joins=False):
+                    caches, sweep_joins=False, delta=None):
     """Level-synchronous engines: plan level k, spawn, barrier, plan
     level k+1 (the paper's §2 shape, at candidate or bucket grain).
     ``sweep_joins`` routes even candidate-granularity scalar joins
     through the (per-device) dispatchers — multi-shard runs need every
     row access on the owning shard's path for d2d accounting;
     single-shard runs (shared-memory or a 1-device mesh) keep the
-    direct host join as the scalar baseline."""
+    direct host join as the scalar baseline.
+
+    With a ``delta`` plan the level's candidates split three ways:
+    *clean known* (support unchanged — zero rows touched), *dirty
+    known* (delta-swept over only the pending segments, support
+    accumulated into ``delta.known``), and *fresh* (never swept —
+    full-width sweep). Tasks carry ``delta.priority_of`` so the
+    clustered policies drain stale-hot prefixes first."""
     n_w = store.n_words
     lock = threading.Lock()
 
@@ -379,41 +470,96 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             return prefix[0], 1                 # base row; no reuse at k=2
         return cache.get(prefix)
 
-    def _account(rows: int) -> None:
-        st = sched.worker_stats()
-        st.rows_touched += rows
-        st.bytes_swept += rows_to_bytes(rows, n_w)
+    def _seg_w(segments) -> int:
+        """Words per row a sweep actually reads: the full width, or
+        only the pending segments' words on a delta sweep."""
+        if segments is None:
+            return n_w
+        return sum(store.seg_words(g) for g in segments)
 
-    def count_task(cand: Itemset) -> int:
+    def _account(prows: int, erows: int, segments) -> None:
+        """prows prefix-build rows are read full-width; erows extension
+        rows only over the swept segments."""
+        st = sched.worker_stats()
+        st.rows_touched += prows + erows
+        st.bytes_swept += (rows_to_bytes(prows, n_w)
+                           + rows_to_bytes(erows, _seg_w(segments)))
+
+    def count_task(cand: Itemset, segments=None) -> int:
         cache = _thread_cache()
         ph, prows = _prefix_handle(cache, cand[:-1])
         try:
-            _account(prows + 1)
-            if sweep_joins:
+            _account(prows, 1, segments)
+            if sweep_joins or segments is not None:
                 st = sched.worker_stats()
                 st.sweeps_submitted += 1
                 disp = dispatchers[sched.worker_device()]
-                return int(disp.sweep(ph, (cand[-1],))[0])
+                return int(disp.sweep(ph, (cand[-1],),
+                                      segments=segments)[0])
             return int(tidlist.popcount32(store.row(ph)
                                           & store.row(cand[-1])).sum())
         finally:
             store.release(ph)
 
-    def sweep_task(bucket: Bucket) -> np.ndarray:
+    def sweep_task(bucket: Bucket, segments=None) -> np.ndarray:
         """Bucket-granularity body: resolve the prefix handle once,
         then one handle-based request on the worker's device-affine
         dispatcher (which batches it with other workers' buckets on
-        the same shard). Returns [E] counts."""
+        the same shard). ``segments`` restricts a delta sweep to the
+        pending segments. Returns [E] counts."""
         cache = _thread_cache()
         ph, prows = _prefix_handle(cache, bucket.prefix)
         try:
-            _account(prows + len(bucket.exts))
+            _account(prows, len(bucket.exts), segments)
             st = sched.worker_stats()
             st.sweeps_submitted += 1
             disp = dispatchers[sched.worker_device()]
-            return disp.sweep(ph, bucket.exts)
+            return disp.sweep(ph, bucket.exts, segments=segments)
         finally:
             store.release(ph)
+
+    def _spawn_buckets(cands, segments):
+        plan = group_by_prefix(cands)
+        metrics.buckets += len(plan)
+        prio = delta.priority_of if delta is not None else None
+        tasks = [sched.spawn(sweep_task, b, segments,
+                             attr=(b.key, b.prefix),
+                             priority=prio(b.prefix) if prio else 0.0)
+                 for b in plan]
+        return plan, tasks
+
+    def _spawn_candidates(cands, segments):
+        prio = delta.priority_of if delta is not None else None
+        return [sched.spawn(count_task, c, segments,
+                            attr=(prefix_hash(c), c),
+                            priority=prio(c[:-1]) if prio else 0.0)
+                for c in cands]
+
+    def _spawn_sweeps(cands, segments) -> Callable[
+            [], List[Tuple[Itemset, int]]]:
+        """Spawn sweeps for ``cands`` (bucket- or candidate-grained)
+        and return a collector to call AFTER ``wait_all`` — fresh and
+        dirty sweep sets share one level barrier. The collected counts
+        cover ``segments`` only when restricted (the caller adds them
+        to the known supports)."""
+        if not cands:
+            return lambda: []
+        if granularity == "bucket":
+            plan, tasks = _spawn_buckets(cands, segments)
+
+            def collect():
+                _raise_task_errors(tasks)
+                return [(b.prefix + (e,), int(s))
+                        for b, t in zip(plan, tasks)
+                        for e, s in zip(b.exts, t.result)]
+        else:
+            tasks = _spawn_candidates(cands, segments)
+
+            def collect():
+                _raise_task_errors(tasks)
+                return [(c, int(t.result))
+                        for c, t in zip(cands, tasks)]
+        return collect
 
     k = 2
     while frequent and k <= max_k:
@@ -423,38 +569,45 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         metrics.levels += 1
         metrics.candidates += len(cands)
         frequent = []
-        if granularity == "bucket":
-            plan = group_by_prefix(cands)
-            metrics.buckets += len(plan)
-            tasks = [sched.spawn(sweep_task, b,
-                                 attr=(b.key, b.prefix))
-                     for b in plan]
+        level: List[Tuple[Itemset, int]] = []
+        if delta is None:
+            collect = _spawn_sweeps(cands, None)
             sched.wait_all()
-            _raise_task_errors(tasks)
-            for b, t in zip(plan, tasks):
-                counts = t.result
-                for e, s in zip(b.exts, counts):
-                    if s >= min_support:
-                        c = b.prefix + (e,)
-                        result[c] = int(s)
-                        frequent.append(c)
+            level = collect()
         else:
-            tasks = [sched.spawn(count_task, c,
-                                 attr=(prefix_hash(c), c))
-                     for c in cands]
+            fresh, dirty = [], []
+            for c in cands:
+                ks = delta.known.get(c)
+                if ks is None:
+                    fresh.append(c)
+                elif delta.is_dirty(c):
+                    dirty.append(c)
+                else:
+                    level.append((c, ks))       # clean: zero rows read
+            delta.reused += len(level)
+            delta.swept_full += len(fresh)
+            delta.swept_delta += len(dirty)
+            collect_fresh = _spawn_sweeps(fresh, None)
+            collect_dirty = _spawn_sweeps(dirty, delta.segments)
             sched.wait_all()
-            _raise_task_errors(tasks)
-            for c, t in zip(cands, tasks):
-                if t.result >= min_support:
-                    result[c] = t.result
-                    frequent.append(c)
+            for c, s in collect_fresh():
+                delta.known[c] = s
+                level.append((c, s))
+            for c, d in collect_dirty():
+                s = delta.known[c] + d          # delta over pending segs
+                delta.known[c] = s
+                level.append((c, s))
+        for c, s in level:
+            if s >= min_support:
+                result[c] = s
+                frequent.append(c)
         frequent.sort()
         metrics.frequent += len(frequent)
         k += 1
 
 
 def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
-                      metrics, result, frequent):
+                      metrics, result, frequent, delta=None):
     """Barrier-free engine: tasks spawn child equivalence classes.
 
     A task = one equivalence class (P, E) owning an arena handle for
@@ -476,10 +629,29 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
     of a whole level's worth; the peak is measured by the arena and
     reported as ``metrics.peak_retained_bitmaps`` /
     ``peak_bytes_retained``.
-    """
+
+    With a ``delta`` plan each class splits its extensions into clean
+    known (support looked up, zero rows), dirty known (delta sweep over
+    the pending segments only) and fresh (full sweep), and a child
+    subtree is recursed into ONLY when some candidate in it is fresh or
+    dirty — a clean subtree's results are already exact in
+    ``delta.known``, so whole equivalence classes are skipped without
+    touching a row (the invalidated-classes-only re-mine)."""
     n_w = store.n_words
     lock = threading.Lock()
     all_tasks: List = []
+
+    def _needs_visit(cprefix: Itemset, csibs) -> bool:
+        """A class subtree can contain changed or never-swept itemsets
+        only if one of ITS OWN candidates is fresh or dirty: deeper
+        dirt implies a dirty candidate here (X ⊆ dirty-items ⇒ every
+        sub-candidate too), and deeper freshness implies a frequency
+        status change here (supports only change where dirt is)."""
+        for e in csibs:
+            c = cprefix + (e,)
+            if delta.known.get(c) is None or delta.is_dirty(c):
+                return True
+        return False
 
     def class_task(prefix: Itemset, ph: int,
                    exts: Tuple[int, ...], owned: bool) -> None:
@@ -488,20 +660,80 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
             k = len(prefix) + 1                 # size of swept itemsets
             shard = sched.worker_device()
             st = sched.worker_stats()
-            st.sweeps_submitted += 1
-            counts = dispatchers[shard].sweep(ph, exts)
-            freq = [(e, int(s)) for e, s in zip(exts, counts)
-                    if s >= min_support]
+            disp = dispatchers[shard]
+            supports: List[Tuple[int, int]] = []     # (ext, support)
+            if delta is None:
+                st.sweeps_submitted += 1
+                counts = disp.sweep(ph, exts)
+                supports = [(e, int(s)) for e, s in zip(exts, counts)]
+                swept = len(exts)
+            else:
+                fresh_e, dirty_e = [], []
+                for e in exts:
+                    c = prefix + (e,)
+                    ks = delta.known.get(c)
+                    if ks is None:
+                        fresh_e.append(e)
+                    elif delta.is_dirty(c):
+                        dirty_e.append(e)
+                    else:
+                        supports.append((e, ks))    # clean: zero rows
+                n_clean = len(supports)
+                # both sweeps go out before either result is awaited,
+                # so they share a dispatcher flush
+                ffut = (disp.submit(ph, tuple(fresh_e))
+                        if fresh_e else None)
+                dfut = (disp.submit(ph, tuple(dirty_e),
+                                    segments=delta.segments)
+                        if dirty_e else None)
+                updates: Dict[Itemset, int] = {}
+                if ffut is not None:
+                    st.sweeps_submitted += 1
+                    for e, s in zip(fresh_e, ffut.result()):
+                        updates[prefix + (e,)] = int(s)
+                        supports.append((e, int(s)))
+                if dfut is not None:
+                    st.sweeps_submitted += 1
+                    for e, d in zip(dirty_e, dfut.result()):
+                        c = prefix + (e,)
+                        s = delta.known[c] + int(d)
+                        updates[c] = s
+                        supports.append((e, s))
+                with delta.lock:
+                    delta.known.update(updates)
+                    delta.swept_full += len(fresh_e)
+                    delta.swept_delta += len(dirty_e)
+                    delta.reused += n_clean
+                supports.sort()       # merged lists back to ext order
+                swept = len(fresh_e) + len(dirty_e)
+            freq = [(e, s) for e, s in supports if s >= min_support]
             sibs = [e for e, _ in freq]         # ascending (exts sorted)
             if k < max_k and len(freq) > 1:
                 for i, e in enumerate(sibs[:-1]):
-                    children.append((prefix + (e,),
+                    cprefix = prefix + (e,)
+                    csibs = tuple(sibs[i + 1:])
+                    if delta is not None and not _needs_visit(cprefix,
+                                                              csibs):
+                        continue      # clean subtree: known is exact
+                    children.append((cprefix,
                                      store.materialize(ph, e,
                                                        shard=shard),
-                                     tuple(sibs[i + 1:])))
-            rows = class_rows_touched(len(exts), len(children))
-            st.rows_touched += rows
-            st.bytes_swept += rows_to_bytes(rows, n_w)
+                                     csibs))
+            if delta is None:
+                rows = class_rows_touched(len(exts), len(children))
+                st.rows_touched += rows
+                st.bytes_swept += rows_to_bytes(rows, n_w)
+            else:
+                # only what was actually read: the parent-handed prefix
+                # row (when any sweep ran), swept extension rows (dirty
+                # ones only over the pending segments' words), and
+                # materialized child handoffs
+                seg_w = sum(store.seg_words(g) for g in delta.segments)
+                full_rows = ((1 if swept else 0) + len(fresh_e)
+                             + len(children))
+                st.rows_touched += full_rows + len(dirty_e)
+                st.bytes_swept += (rows_to_bytes(full_rows, n_w)
+                                   + rows_to_bytes(len(dirty_e), seg_w))
             with lock:
                 metrics.buckets += 1
                 metrics.candidates += len(exts)
@@ -515,7 +747,10 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                 spawned.append(
                     sched.spawn(class_task, cprefix, ch, csibs, True,
                                 attr=(itemset_hash(cprefix), cprefix),
-                                depth=len(cprefix), handles=(ch,)))
+                                depth=len(cprefix),
+                                priority=(delta.priority_of(cprefix)
+                                          if delta is not None else 0.0),
+                                handles=(ch,)))
                 children.pop(0)       # ownership moved to the child task
             if spawned:
                 with lock:
@@ -534,12 +769,16 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
     if max_k >= 2 and len(frequent) > 1:
         items = [p[0] for p in frequent]        # sorted singleton items
         for i, it in enumerate(items[:-1]):
+            sibs = tuple(items[i + 1:])
+            if delta is not None and not _needs_visit((it,), sibs):
+                continue              # clean root class: skip entirely
             # root classes hand the pinned base row's handle (== item
             # id — nothing materialized, nothing retained)
-            t = sched.spawn(class_task, (it,), it,
-                            tuple(items[i + 1:]), False,
+            t = sched.spawn(class_task, (it,), it, sibs, False,
                             attr=(itemset_hash((it,)), (it,)),
-                            depth=1)
+                            depth=1,
+                            priority=(delta.priority_of((it,))
+                                      if delta is not None else 0.0))
             with lock:    # already-running roots append concurrently
                 all_tasks.append(t)
     sched.wait_all()                            # the ONLY wait

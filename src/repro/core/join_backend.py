@@ -38,7 +38,7 @@ import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,11 +58,20 @@ class SweepRequest:
 
     ``shard`` is the device shard the request executes on — stamped by
     the (per-device) dispatcher that accepted it, so backends know
-    which arena mirror to gather from."""
+    which arena mirror to gather from. ``segments`` restricts the join
+    to a subset of the arena's transaction segments (None = all): the
+    streaming engine's support-delta sweeps read ONLY the freshly
+    ingested segments, so a small ingest costs a small sweep."""
     prefix_handle: int
     ext_handles: Tuple[int, ...]
     shard: int = 0
+    segments: Optional[Tuple[int, ...]] = None
     future: Future = field(default_factory=Future)
+
+    def segment_ids(self, arena: BitmapArena) -> Tuple[int, ...]:
+        if self.segments is not None:
+            return self.segments
+        return tuple(range(arena.n_segments))
 
 
 class JoinBackend:
@@ -94,14 +103,27 @@ class NumpyBackend(JoinBackend):
         if arena.n_shards > 1:
             # booked per request: batches are shard-homogeneous today
             # (each dispatcher stamps its own shard), but a mixed batch
-            # must not misattribute traffic to requests[0]'s shard
+            # must not misattribute traffic to requests[0]'s shard —
+            # and a delta sweep bills only the segments it reads
             for r in requests:
                 arena.note_access(r.shard,
-                                  (r.prefix_handle, *r.ext_handles))
-        rows = arena.rows_view()
-        return [tidlist.support_counts(rows[r.prefix_handle],
-                                       arena.gather(r.ext_handles))
-                for r in requests]
+                                  (r.prefix_handle, *r.ext_handles),
+                                  segments=r.segments)
+        out = []
+        for r in requests:
+            total = None
+            for g in r.segment_ids(arena):
+                if not arena.seg_words(g):
+                    continue          # zero-width segment (empty batch)
+                rows = arena.seg_view(g)
+                c = tidlist.support_counts(rows[r.prefix_handle],
+                                           arena.seg_gather(
+                                               g, r.ext_handles))
+                total = c if total is None else total + c
+            if total is None:
+                total = np.zeros(len(r.ext_handles), np.int64)
+            out.append(total)
+        return out
 
 
 def _pow2(n: int, lo: int = 1) -> int:
@@ -121,13 +143,35 @@ E_PAD_FLOOR = 64
 class _PallasBackend(JoinBackend):
     """Shared plumbing for the kernel modes: pad the ragged batch to
     [B', E', W], gather rows (on device when the arena has a mirror,
-    host-side otherwise), launch one ``bitmap_join_many``, slice each
-    request's counts back out. B and E pad to powers of two so the jit
-    cache stays bounded (~log × log shapes per run)."""
+    host-side otherwise), launch one ``bitmap_join_many`` per
+    transaction segment the batch touches, slice each request's counts
+    back out and sum them across segments. B and E pad to powers of
+    two so the jit cache stays bounded (~log × log shapes per run);
+    single-segment arenas (every non-streaming run) keep the one-launch
+    behaviour."""
 
     mode = "pallas-interpret"
 
     def sweep_many(self, arena, requests):
+        totals = [np.zeros(len(r.ext_handles), np.int64)
+                  for r in requests]
+        # sub-batch per segment: full sweeps touch every segment, delta
+        # sweeps only the fresh ones — a mixed batch still coalesces
+        # per segment
+        by_seg: Dict[int, List[int]] = {}
+        for i, r in enumerate(requests):
+            for g in r.segment_ids(arena):
+                if arena.seg_words(g):
+                    by_seg.setdefault(g, []).append(i)
+        for g, idxs in sorted(by_seg.items()):
+            counts = self._sweep_segment(arena, g,
+                                         [requests[i] for i in idxs])
+            for j, i in enumerate(idxs):
+                totals[i] += counts[j, :len(requests[i].ext_handles)
+                                    ].astype(np.int64)
+        return totals
+
+    def _sweep_segment(self, arena, seg, requests):
         import jax.numpy as jnp
 
         from repro.kernels.bitmap_join.ops import bitmap_join_many
@@ -135,6 +179,7 @@ class _PallasBackend(JoinBackend):
         emax = max(len(r.ext_handles) for r in requests)
         bp = _pow2(b)
         ep = _pow2(emax, lo=E_PAD_FLOOR)
+        w = arena.seg_words(seg)
         pidx = np.zeros(bp, np.int32)
         eidx = np.zeros((bp, ep), np.int32)
         mask = np.zeros((bp, ep), bool)
@@ -148,28 +193,25 @@ class _PallasBackend(JoinBackend):
         if arena.n_shards > 1:
             needed = [h for r in requests
                       for h in (r.prefix_handle, *r.ext_handles)]
-        dev = arena.device_rows(shard, needed=needed)
+        dev = arena.device_rows(shard, needed=needed, segment=seg)
         if dev is not None:
             # arena-gather path: bitmaps are already device-resident,
             # only the (tiny) index arrays cross host→device
             prefixes = dev[jnp.asarray(pidx)]
-            exts = dev[jnp.asarray(eidx.reshape(-1))].reshape(
-                bp, ep, arena.n_words)
+            exts = dev[jnp.asarray(eidx.reshape(-1))].reshape(bp, ep, w)
         else:
             # host-gather baseline (arena backing "numpy"): the old
             # transfer-bound behaviour — every batch re-uploads its
             # bitmap payload, and the gauge records it
-            rows = arena.rows_view()
+            rows = arena.seg_view(seg)
             ph = rows[pidx]
-            eh = rows[eidx.reshape(-1)].reshape(bp, ep, arena.n_words)
+            eh = rows[eidx.reshape(-1)].reshape(bp, ep, w)
             arena.count_h2d(ph.nbytes + eh.nbytes)
             prefixes = jnp.asarray(ph)
             exts = jnp.asarray(eh)
-        counts = np.asarray(bitmap_join_many(prefixes, exts,
-                                             jnp.asarray(mask),
-                                             mode=self.mode))
-        return [counts[i, :len(r.ext_handles)].astype(np.int64)
-                for i, r in enumerate(requests)]
+        return np.asarray(bitmap_join_many(prefixes, exts,
+                                           jnp.asarray(mask),
+                                           mode=self.mode))
 
 
 class PallasInterpretBackend(_PallasBackend):
@@ -285,9 +327,12 @@ class SweepDispatcher:
 
     # ------------------------------------------------------------ client --
     def submit(self, prefix_handle: int,
-               ext_handles: Sequence[int]) -> Future:
+               ext_handles: Sequence[int],
+               segments: Optional[Sequence[int]] = None) -> Future:
         req = SweepRequest(int(prefix_handle), tuple(ext_handles),
-                           shard=self.shard)
+                           shard=self.shard,
+                           segments=(tuple(segments)
+                                     if segments is not None else None))
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
@@ -296,9 +341,13 @@ class SweepDispatcher:
         return req.future
 
     def sweep(self, prefix_handle: int,
-              ext_handles: Sequence[int]) -> np.ndarray:
-        """Blocking convenience: enqueue and wait for the counts."""
-        return self.submit(prefix_handle, ext_handles).result()
+              ext_handles: Sequence[int],
+              segments: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Blocking convenience: enqueue and wait for the counts.
+        ``segments`` restricts the join to a segment subset (a
+        streaming delta sweep)."""
+        return self.submit(prefix_handle, ext_handles,
+                           segments=segments).result()
 
     @property
     def batch_occupancy(self) -> float:

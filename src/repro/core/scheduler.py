@@ -25,8 +25,21 @@ from __future__ import annotations
 import collections
 import random
 import threading
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+def stable_hash(key: Any) -> int:
+    """Process-stable hash for worker placement: CRC32 of a canonical
+    repr. Python's built-in ``hash`` is salted per process for str (and
+    anything containing one), so ``hash(cluster_key) % n_workers``
+    placed externally-spawned tasks on DIFFERENT workers from one run
+    to the next — placement (and therefore device affinity, steal
+    traffic, and locality metrics) was irreproducible across
+    processes. ``repr`` of the int/tuple/str cluster keys used here is
+    canonical, so this hash is not."""
+    return zlib.crc32(repr(key).encode("utf-8"))
 
 
 @dataclass
@@ -35,6 +48,8 @@ class Task:
     args: Tuple
     attr: Any = None          # task attribute (paper: the itemset ref)
     depth: int = 0            # prefix depth: deeper tasks drain first
+    priority: float = 0.0     # staleness priority: stale-hot buckets
+                              # drain first (streaming re-mine)
     handles: Tuple[int, ...] = ()   # arena handles the task retains —
                                     # a cross-device steal migrates them
     result: Any = None
@@ -123,13 +138,16 @@ class ClusteredPolicy(SchedulingPolicy):
     ``cluster_of(attr)`` maps a task attribute to its bucket key (for FPM:
     XOR of item hashes over the (k-1)-prefix).
 
-    Drain-bucket selection is *depth-first*: when the current drain
-    bucket empties, the deepest waiting bucket (by ``Task.depth``) is
-    picked next, scanning at most ``DRAIN_SCAN_CAP`` buckets. For the
-    level-synchronous engine every task has depth 0 and this degenerates
-    to the paper's first-non-empty rule; for the barrier-free engine it
-    drains each subtree before starting the next, bounding the number of
-    retained parent-handed bitmaps.
+    Drain-bucket selection is *priority-then-depth-first*: when the
+    current drain bucket empties, the bucket whose head task has the
+    highest ``Task.priority`` (staleness-hotness, set by the streaming
+    re-mine so popular stale prefixes converge first), tie-broken by
+    the deepest ``Task.depth``, is picked next, scanning at most
+    ``DRAIN_SCAN_CAP`` buckets. For the level-synchronous batch engine
+    every task has priority 0 and depth 0 and this degenerates to the
+    paper's first-non-empty rule; for the barrier-free engine the depth
+    tiebreak drains each subtree before starting the next, bounding the
+    number of retained parent-handed bitmaps.
     """
 
     DRAIN_SCAN_CAP = 64   # bound the deepest-bucket scan per switch
@@ -143,6 +161,7 @@ class ClusteredPolicy(SchedulingPolicy):
         self._drain: List[Optional[int]] = [None] * n_workers
         self.sizes = [0] * n_workers
         self._deep = [0] * n_workers   # queued tasks with depth > 0
+        self._hot = [0] * n_workers    # queued tasks with priority > 0
         self.switches = [0] * n_workers  # drain-bucket selections (the
                                          # paper's bucket-switch count)
 
@@ -154,25 +173,29 @@ class ClusteredPolicy(SchedulingPolicy):
             self.sizes[worker] += 1
             if task.depth > 0:
                 self._deep[worker] += 1
+            if task.priority > 0:
+                self._hot[worker] += 1
 
     def _pick_drain(self, worker: int,
                     tab: Dict[Any, collections.deque]) -> Any:
-        """Deepest-head bucket among the NEWEST DRAIN_SCAN_CAP (dict
-        order is insertion order, so the just-spawned deep children sit
-        at the tail — scanning oldest-first would leave them beyond the
-        cap whenever >CAP classes queue up, inverting the drain order
-        and unbounding the retained-bitmap peak). With no deep task
-        queued (the level-synchronous engines: every depth is 0) this
-        is the paper's O(1) first-non-empty rule."""
-        if not self._deep[worker]:
+        """Highest-(priority, depth) head bucket among the NEWEST
+        DRAIN_SCAN_CAP (dict order is insertion order, so the
+        just-spawned deep children sit at the tail — scanning
+        oldest-first would leave them beyond the cap whenever >CAP
+        classes queue up, inverting the drain order and unbounding the
+        retained-bitmap peak). With no deep or hot task queued (the
+        level-synchronous batch engines: every depth and priority is 0)
+        this is the paper's O(1) first-non-empty rule."""
+        if not self._deep[worker] and not self._hot[worker]:
             return next(iter(tab))
-        best, best_depth = None, -1
+        best, best_rank = None, (-1.0, -1)
         for i, key in enumerate(reversed(tab)):
             if i >= self.DRAIN_SCAN_CAP:
                 break
-            d = tab[key][0].depth
-            if d > best_depth:
-                best, best_depth = key, d
+            head = tab[key][0]
+            rank = (head.priority, head.depth)
+            if rank > best_rank:
+                best, best_rank = key, rank
         return best
 
     def get(self, worker):
@@ -193,6 +216,8 @@ class ClusteredPolicy(SchedulingPolicy):
             self.sizes[worker] -= 1
             if task.depth > 0:
                 self._deep[worker] -= 1
+            if task.priority > 0:
+                self._hot[worker] -= 1
             return task
 
     def steal(self, thief, victim):
@@ -215,6 +240,7 @@ class ClusteredPolicy(SchedulingPolicy):
     def _unaccount(self, victim: int, q: collections.deque) -> None:
         self.sizes[victim] -= len(q)
         self._deep[victim] -= sum(1 for t in q if t.depth > 0)
+        self._hot[victim] -= sum(1 for t in q if t.priority > 0)
 
     def approx_len(self, worker):
         return self.sizes[worker]
@@ -248,16 +274,22 @@ class NearestNeighborPolicy(ClusteredPolicy):
                     key = self._pick_drain(worker, tab)
                 else:
                     # newest-first, like _pick_drain: fresh deep
-                    # children live at the dict tail
-                    best, best_ov, best_d = None, -1, -1
+                    # children live at the dict tail. Staleness
+                    # priority dominates the nearest-neighbour rule —
+                    # a stale-hot bucket is served before a merely
+                    # nearby one, so the serving layer converges on
+                    # popular prefixes first — then item overlap, then
+                    # the depth-first tiebreak.
+                    best, best_rank = None, (-1.0, -1, -1)
                     for i, cand in enumerate(reversed(tab)):
                         if i >= self.SCAN_CAP:
                             break
                         ov = len(set(cand) & set(last)) \
                             if isinstance(cand, tuple) else 0
-                        d = tab[cand][0].depth   # depth-first tiebreak
-                        if ov > best_ov or (ov == best_ov and d > best_d):
-                            best, best_ov, best_d = cand, ov, d
+                        head = tab[cand][0]
+                        rank = (head.priority, ov, head.depth)
+                        if rank > best_rank:
+                            best, best_rank = cand, rank
                     key = best
                 self._drain[worker] = key
                 self.switches[worker] += 1
@@ -271,6 +303,8 @@ class NearestNeighborPolicy(ClusteredPolicy):
             self.sizes[worker] -= 1
             if task.depth > 0:
                 self._deep[worker] -= 1
+            if task.priority > 0:
+                self._hot[worker] -= 1
             return task
 
 
@@ -316,22 +350,26 @@ class TaskScheduler:
 
     # ------------------------------------------------------------ spawn --
     def spawn(self, fn, *args, attr=None, depth: int = 0,
+              priority: float = 0.0,
               handles: Tuple[int, ...] = (),
               worker: Optional[int] = None):
         """Enqueue a task. When called from inside a task body, the child
         defaults onto the *spawning worker's* queue — the paper's runtime
         semantics: locality by construction, and a stolen bucket carries
         its whole subtree because descendants spawn on the thief. From
-        the driver thread, placement is the bucket hash (ClusteredPolicy)
-        or round-robin (approximates even initial placement).
-        ``handles`` names arena rows the task retains (the depth-first
-        handoff bitmaps); a cross-device steal migrates them."""
-        task = Task(fn, args, attr, depth, handles)
+        the driver thread, placement is the bucket hash (ClusteredPolicy,
+        via :func:`stable_hash` so placement reproduces across
+        processes) or round-robin (approximates even initial placement).
+        ``priority`` is the staleness-hotness the clustered policies'
+        drain selection prefers; ``handles`` names arena rows the task
+        retains (the depth-first handoff bitmaps); a cross-device steal
+        migrates them."""
+        task = Task(fn, args, attr, depth, priority, handles)
         if worker is None:
             worker = getattr(self._tls, "worker_id", None)
         if worker is None:
             if isinstance(self.policy, ClusteredPolicy):
-                worker = hash(self.policy.cluster_of(attr)) % self.n
+                worker = stable_hash(self.policy.cluster_of(attr)) % self.n
             else:
                 worker = self._spawn_rr = (self._spawn_rr + 1) % self.n
         with self._cv:

@@ -1,0 +1,400 @@
+"""Streaming ingestion + incremental re-mining + pattern serving.
+
+The batch engine (``repro.core.fpm``) answers "what is frequent in this
+database" once; a deployed miner faces a database that never stops
+growing and queries that cannot wait for a re-mine. This module closes
+that gap with three pieces on top of the existing arena/scheduler/
+dispatcher stack:
+
+``StreamingMiner.ingest(batch)``
+    packs the new transactions into a FRESH arena segment
+    (``BitmapArena.add_segment``): per-item word-columns for the new
+    transactions only. Existing segments are never repacked, and a
+    device-backed arena uploads exactly the new segment's payload
+    (``seg_nbytes``) — ingest cost is proportional to the batch, not
+    the database.
+
+``StreamingMiner.refresh()``
+    folds the pending segments in incrementally. Per-item support
+    deltas over ONLY the fresh segments classify the *dirty items* (an
+    itemset's support can change only if every one of its items occurs
+    in the new batch); the border of the previous generation then
+    splits into stayed-frequent / newly-frequent / died. The engine
+    cores re-mine ONLY invalidated equivalence classes (``DeltaPlan``):
+    clean known candidates are looked up (zero rows), dirty ones are
+    delta-swept over the pending segments, and never-seen candidates
+    get full sweeps. Re-mine tasks carry a *staleness priority* (the
+    stale prefix's popularity) in ``Task.priority`` — the clustered /
+    nearest-neighbour drain rules serve stale-HOT buckets first, so
+    the published patterns converge on popular prefixes earliest:
+    the paper's task-attribute machinery doing live scheduling work.
+
+``PatternServer``
+    answers ``support`` / ``top_k`` / ``frequent`` queries from the
+    last PUBLISHED generation: every refresh builds an immutable
+    ``PatternSnapshot`` and swaps it in atomically (one reference
+    assignment), so queries never block on mining and never observe a
+    half-updated result.
+
+Correctness anchor: after ANY ingest sequence, ``refresh()`` yields
+exactly the frequent itemsets (and supports) of a from-scratch
+``fpm.mine`` on the concatenated database — for every granularity,
+policy, and mesh shape. ``_known`` keeps the support of every
+candidate ever swept (frequent and negative border); it grows with the
+pattern space, not the transaction count, and is what makes clean
+subtrees skippable without a sweep.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from types import MappingProxyType
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import tidlist
+from repro.core.fpm import (DeltaPlan, MiningMetrics, MiningRun,
+                            _resolve_mesh, mine_more)
+from repro.core.itemsets import Itemset
+from repro.core.join_backend import FLUSH_US, MAX_BATCH
+from repro.core.tidlist import BitmapArena, pack_database
+
+
+# ---------------------------------------------------------------------------
+# snapshots + serving
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PatternSnapshot:
+    """One published generation of mining results — immutable, so a
+    reader holding it can answer any number of queries consistently
+    while newer generations are mined and swapped in behind it.
+
+    ``supports`` maps every frequent itemset (singletons included) to
+    its exact support over the ``n_transactions`` the generation
+    covers. A prefix index for ``top_k`` is built once at publish
+    time."""
+    generation: int
+    n_transactions: int
+    min_support: int
+    supports: Mapping[Itemset, int]
+    _by_prefix: Mapping[Itemset, tuple] = field(init=False, repr=False,
+                                                compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "supports",
+                           MappingProxyType(dict(self.supports)))
+        idx: Dict[Itemset, List[Tuple[int, Itemset]]] = {}
+        for x, s in self.supports.items():
+            for cut in range(len(x)):
+                idx.setdefault(x[:cut], []).append((-s, x))
+        by_prefix = {p: tuple((x, -ns) for ns, x in sorted(v))
+                     for p, v in idx.items()}
+        object.__setattr__(self, "_by_prefix",
+                           MappingProxyType(by_prefix))
+
+    def support(self, itemset: Sequence[int]) -> Optional[int]:
+        """Exact support of a FREQUENT itemset; None if it was not
+        frequent at this generation (its true support is below
+        ``min_support`` — or it was never counted)."""
+        return self.supports.get(tuple(sorted(itemset)))
+
+    def top_k(self, prefix: Sequence[int] = (), k: int = 10
+              ) -> List[Tuple[Itemset, int]]:
+        """The k highest-support frequent itemsets strictly extending
+        ``prefix`` (itemsets whose leading items equal it), best
+        first. ``prefix=()`` ranks everything."""
+        return list(self._by_prefix.get(tuple(sorted(prefix)), ())[:k])
+
+    def frequent(self, min_support: Optional[int] = None
+                 ) -> Dict[Itemset, int]:
+        """All frequent itemsets, optionally re-thresholded UPWARD
+        (supports below this generation's mining threshold were never
+        published, so a lower one cannot be answered)."""
+        if min_support is None or min_support <= self.min_support:
+            return dict(self.supports)
+        return {x: s for x, s in self.supports.items()
+                if s >= min_support}
+
+
+class PatternServer:
+    """Query layer over a :class:`StreamingMiner`: every query reads
+    the miner's current snapshot ONCE (one atomic reference load) and
+    answers from it — no lock is shared with mining, so a refresh in
+    flight never blocks a query and a query never sees generation
+    N+1's itemsets with generation N's supports."""
+
+    def __init__(self, miner: "StreamingMiner"):
+        self._miner = miner
+        self.queries = 0          # served-query gauge (approximate
+                                  # under concurrency; serving metric,
+                                  # not an invariant)
+
+    @property
+    def snapshot(self) -> PatternSnapshot:
+        return self._miner.snapshot
+
+    def support(self, itemset: Sequence[int]) -> Optional[int]:
+        self.queries += 1
+        return self.snapshot.support(itemset)
+
+    def top_k(self, prefix: Sequence[int] = (), k: int = 10
+              ) -> List[Tuple[Itemset, int]]:
+        self.queries += 1
+        return self.snapshot.top_k(prefix, k)
+
+    def frequent(self, min_support: Optional[int] = None
+                 ) -> Dict[Itemset, int]:
+        self.queries += 1
+        return self.snapshot.frequent(min_support)
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+@dataclass
+class IngestReport:
+    segment: int              # arena segment id the batch landed in
+    n_transactions: int       # transactions in the batch
+    words: int                # packed words per item row (W_seg)
+    payload_bytes: int        # the segment's base-bitmap payload
+    h2d_bytes: int            # device upload billed by the ingest
+                              # (== payload_bytes with eager backing,
+                              # 0 when mirrors sync lazily at refresh)
+    wall_s: float = 0.0
+
+
+@dataclass
+class RefreshReport:
+    generation: int           # the generation this refresh published
+    n_transactions: int
+    min_support: int
+    frequent: int             # published frequent itemsets
+    segments_refreshed: Tuple[int, ...]
+    dirty_items: int          # items occurring in the fresh segments
+    # border classification vs the previous generation
+    stayed: int
+    born: int
+    died: int
+    # how much re-mining the delta plan avoided
+    reused: int               # candidates answered from known supports
+    swept_delta: int          # candidates delta-swept (fresh segments)
+    swept_full: int           # candidates fully swept (never seen)
+    rows_touched: int
+    bytes_swept: int
+    h2d_bytes: int            # arena gauge deltas for THIS refresh
+    d2d_bytes: int
+    wall_s: float = 0.0
+    metrics: Optional[MiningMetrics] = None
+
+
+# ---------------------------------------------------------------------------
+# the streaming miner
+# ---------------------------------------------------------------------------
+
+class StreamingMiner:
+    """Owns one growing, segmented :class:`BitmapArena` and publishes
+    mining generations over it.
+
+    ``min_support`` is either an absolute count (held fixed as the
+    database grows — supports only grow under ingest, so nothing ever
+    dies) or a float fraction of the current transaction count
+    (re-resolved at every refresh — it rises with the database, so
+    border itemsets can die). ``mesh`` accepts the same values as
+    ``fpm.mine``: None, an int (logical shards), or a jax Mesh.
+
+    ``ingest`` and ``refresh`` serialize on one lock (a segment append
+    mid-mine would leave in-flight rows without the new words);
+    queries via :attr:`snapshot` / :class:`PatternServer` are
+    lock-free. Until the first ``refresh`` the published snapshot is
+    the empty generation 0."""
+
+    def __init__(self, n_items: int, min_support, *,
+                 initial_db: Sequence[Sequence[int]] = (),
+                 policy: str = "clustered", n_workers: int = 4,
+                 max_k: int = 6, granularity: str = "bucket",
+                 backend: str = "auto", arena: str = "auto",
+                 cache_size: int = 32, max_batch: int = MAX_BATCH,
+                 flush_us: float = FLUSH_US, mesh=None):
+        if n_items < 1:
+            raise ValueError(f"n_items must be >= 1, got {n_items}")
+        self.n_items = n_items
+        self.max_k = max_k
+        self._ms_spec = min_support
+        self._run_kw = dict(policy=policy, n_workers=n_workers,
+                            granularity=granularity, backend=backend,
+                            cache_size=cache_size, max_batch=max_batch,
+                            flush_us=flush_us)
+        n_shards, devices = _resolve_mesh(mesh)
+        initial_db = [list(t) for t in initial_db]
+        self._check_items(initial_db)
+        bitmaps = pack_database(initial_db, n_items)
+        self.arena = BitmapArena.from_bitmaps(
+            bitmaps, backing=arena, n_shards=n_shards, devices=devices)
+        self.n_transactions = len(initial_db)
+        self._item_support = tidlist.popcount32(bitmaps).sum(axis=1)
+        # support of every candidate ever swept (|X| >= 2; frequent AND
+        # negative border), exact over the refreshed segments — the
+        # reuse store that lets clean classes skip their sweeps
+        self._known: Dict[Itemset, int] = {}
+        self._refreshed_segments = self.arena.n_segments
+        self.generation = 0
+        self._lock = threading.RLock()
+        self._snapshot = PatternSnapshot(
+            0, self.n_transactions, self._resolve_ms(), {})
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def snapshot(self) -> PatternSnapshot:
+        """The last published generation (atomic reference read)."""
+        return self._snapshot
+
+    @property
+    def needs_refresh(self) -> bool:
+        return self.arena.n_segments > self._refreshed_segments
+
+    def _resolve_ms(self) -> int:
+        if isinstance(self._ms_spec, float):
+            return max(1, int(self._ms_spec * self.n_transactions))
+        return int(self._ms_spec)
+
+    def _check_items(self, db) -> None:
+        for txn in db:
+            for i in txn:
+                if not 0 <= i < self.n_items:
+                    raise ValueError(
+                        f"item id {i} outside [0, {self.n_items})")
+
+    # ------------------------------------------------------------- ingest --
+    def ingest(self, batch: Sequence[Sequence[int]]) -> IngestReport:
+        """Append a batch of transactions as one fresh arena segment.
+        O(batch) work and — with eager ("jax") arena backing — exactly
+        the new segment's payload in device upload; the mined results
+        are stale until the next :meth:`refresh` (queries keep serving
+        the published generation)."""
+        batch = [list(t) for t in batch]
+        self._check_items(batch)
+        with self._lock:
+            t0 = time.time()
+            h0 = self.arena.h2d_bytes
+            seg_bm = pack_database(batch, self.n_items)
+            seg = self.arena.add_segment(seg_bm)
+            self.n_transactions += len(batch)
+            return IngestReport(
+                segment=seg, n_transactions=len(batch),
+                words=seg_bm.shape[1],
+                payload_bytes=self.arena.seg_nbytes(seg),
+                h2d_bytes=self.arena.h2d_bytes - h0,
+                wall_s=time.time() - t0)
+
+    # ------------------------------------------------------------ refresh --
+    def refresh(self, before_publish=None) -> RefreshReport:
+        """Fold every pending segment into a new published generation,
+        re-mining only invalidated equivalence classes. Returns the
+        refresh report; the new :class:`PatternSnapshot` is swapped in
+        atomically at the end (``before_publish(snapshot)``, if given,
+        runs just before the swap — tests use it to observe the
+        serving layer mid-refresh)."""
+        with self._lock:
+            t0 = time.time()
+            arena = self.arena
+            pending = tuple(range(self._refreshed_segments,
+                                  arena.n_segments))
+            deltas = np.zeros(self.n_items, np.int64)
+            for g in pending:
+                seg = arena.seg_view(g)[:self.n_items]
+                deltas += tidlist.popcount32(seg).sum(axis=1)
+            dirty = frozenset(int(i) for i in np.nonzero(deltas)[0])
+            # all-or-nothing: mine against WORKING copies and commit
+            # only at publish, so a failed refresh (task error mid-
+            # mine) leaves the miner's state untouched and a retry
+            # cannot double-add the pending segments' deltas. The
+            # shallow _known copy is cheap next to the mining it
+            # fronts.
+            item_support = self._item_support + deltas
+            known = dict(self._known)
+            ms = self._resolve_ms()
+            prev = self._snapshot.supports
+
+            def hotness(prefix: Itemset) -> float:
+                """Staleness priority of a re-mine task: the stale
+                prefix's popularity (its last known support), so drain
+                selection serves hot prefixes first and the snapshot
+                converges where queries concentrate."""
+                if len(prefix) == 1:
+                    return float(item_support[prefix[0]])
+                return float(known.get(prefix, 0))
+
+            plan = DeltaPlan(
+                known=known,
+                is_dirty=lambda c: all(i in dirty for i in c),
+                segments=pending,
+                priority_of=hotness)
+            singles: Dict[Itemset, int] = {
+                (i,): int(s) for i, s in enumerate(item_support)
+                if s >= ms}
+            result = dict(singles)
+            frequent = sorted(result)
+            h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
+            run = MiningRun(arena, **self._run_kw)
+            run.metrics.frequent += len(frequent)
+            try:
+                mine_more(run, ms, self.max_k, result, frequent,
+                          delta=plan)
+            finally:
+                run.close()
+            metrics = run.finalize(t0)
+            metrics.h2d_bytes = arena.h2d_bytes - h2d0
+            metrics.d2d_bytes = arena.d2d_bytes - d2d0
+
+            # exact assembly from the reuse store: skipped (clean)
+            # subtrees never touched `result`, but their supports are
+            # in the known store — and downward closure makes the
+            # filter exact
+            final = dict(singles)
+            for x, s in known.items():
+                if len(x) <= self.max_k and s >= ms:
+                    final[x] = s
+
+            new_keys = set(final)
+            prev_keys = set(prev)
+            # commit point: everything below is plain assignment
+            self._item_support = item_support
+            self._known = known
+            self._refreshed_segments = arena.n_segments
+            snapshot = PatternSnapshot(self.generation + 1,
+                                       self.n_transactions, ms, final)
+            report = RefreshReport(
+                generation=snapshot.generation,
+                n_transactions=self.n_transactions,
+                min_support=ms,
+                frequent=len(final),
+                segments_refreshed=pending,
+                dirty_items=len(dirty),
+                stayed=len(new_keys & prev_keys),
+                born=len(new_keys - prev_keys),
+                died=len(prev_keys - new_keys),
+                reused=plan.reused,
+                swept_delta=plan.swept_delta,
+                swept_full=plan.swept_full,
+                rows_touched=metrics.rows_touched,
+                bytes_swept=metrics.bytes_swept,
+                h2d_bytes=metrics.h2d_bytes,
+                d2d_bytes=metrics.d2d_bytes,
+                wall_s=time.time() - t0,
+                metrics=metrics)
+            if before_publish is not None:
+                before_publish(snapshot)
+            self._snapshot = snapshot       # the atomic swap
+            self.generation = snapshot.generation
+            return report
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        return (f"<StreamingMiner gen={self.generation} "
+                f"tx={self.n_transactions} "
+                f"segments={self.arena.n_segments} "
+                f"pending={self.arena.n_segments - self._refreshed_segments} "
+                f"known={len(self._known)}>")

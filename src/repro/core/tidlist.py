@@ -171,6 +171,20 @@ class BitmapArena:
     tier-1 CPU suite exercises the same d2d accounting without a
     device in sight.
 
+    Segmented transaction axis (streaming ingest): the store is a list
+    of per-segment ``[cap, W_seg]`` word-column blocks sharing one slot
+    space. :meth:`add_segment` appends a FRESH block holding the new
+    transactions' packed item bitmaps — the existing segments are never
+    repacked or re-uploaded, so an ingest's device cost is exactly the
+    new segment's payload. A row's logical bitmap is the concatenation
+    of its per-segment words; ``cover[h]`` records how many leading
+    segments a row has real data in (base item rows are extended by
+    every ``add_segment`` and always cover all segments; pushed /
+    materialized rows cover the segments that existed when they were
+    created, and read as zeros beyond). Sweeps may restrict themselves
+    to a segment subset — the streaming engine's support-delta pass
+    reads ONLY the freshly ingested segments.
+
     Thread-safe: workers push/release concurrently; each shard's
     mirror is touched only by that shard's dispatcher thread. Growth
     reallocates the backing store, but handed-out row views keep the
@@ -193,14 +207,20 @@ class BitmapArena:
             raise ValueError(
                 f"devices list ({len(devices)}) must match n_shards "
                 f"({n_shards})")
-        self.n_words = n_words_
         self.backing = backing
         self.n_shards = n_shards
         self.devices = list(devices) if devices is not None else None
-        self._rows = np.zeros((max(capacity, 1), n_words_), np.uint32)
-        self._refs = np.zeros(max(capacity, 1), np.int32)
+        cap = max(capacity, 1)
+        # per-segment word-column stores sharing one slot space;
+        # segment 0 is the load-time database
+        self._seg_words: List[int] = [n_words_]
+        self._stores: List[np.ndarray] = [np.zeros((cap, n_words_),
+                                                   np.uint32)]
+        self._refs = np.zeros(cap, np.int32)
         # owning shard per row; -1 = replicated (pinned base rows)
-        self._owner = np.full(max(capacity, 1), -1, np.int32)
+        self._owner = np.full(cap, -1, np.int32)
+        # leading segments a row has data in (see class docstring)
+        self._cover = np.zeros(cap, np.int32)
         self.n_rows = 0               # high-water mark (rows ever used)
         self.n_base = 0               # pinned item rows [0, n_base)
         self._free: List[int] = []
@@ -209,20 +229,72 @@ class BitmapArena:
         # retained-bitmap memory bound)
         self.live_extra = 0
         self.peak_live_extra = 0
-        # per-shard mirror state. A handle h < _dev_n[s] is resident in
-        # shard s's mirror iff h not in _invalid[s]; _invalid holds
-        # foreign rows never fetched plus recycled slots whose mirror
-        # content went stale.
-        self._dev: List = [None] * n_shards
-        self._dev_n = [0] * n_shards
-        self._invalid: List[set] = [set() for _ in range(n_shards)]
+        # per-(shard, segment) mirror state, all dicts keyed by segment
+        # id so freshly added segments default to "nothing synced". A
+        # handle h < _dev_n[s][g] is resident in mirror (s, g) iff
+        # h not in _invalid[s][g]; _invalid holds foreign rows never
+        # fetched plus recycled slots whose mirror content went stale.
+        self._dev: List[dict] = [dict() for _ in range(n_shards)]
+        self._dev_n: List[dict] = [dict() for _ in range(n_shards)]
+        self._invalid: List[dict] = [dict() for _ in range(n_shards)]
         # rows whose transfer to this shard was already billed as d2d
         # (by migrate) but whose payload has not physically landed in
         # the mirror yet — their eventual placement is free
-        self._migrated_in: List[set] = [set() for _ in range(n_shards)]
+        self._migrated_in: List[dict] = [dict() for _ in range(n_shards)]
         self.h2d_bytes = 0            # bitmap payload uploaded, total
         self.d2d_bytes = 0            # modeled cross-shard row traffic
         self.migrations = 0           # rows re-owned by migrate()
+
+    # ---------------------------------------------------------- segments --
+    @property
+    def n_words(self) -> int:
+        """Total logical row width (words) across all segments."""
+        return sum(self._seg_words)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._seg_words)
+
+    def seg_words(self, seg: int) -> int:
+        return self._seg_words[seg]
+
+    def seg_nbytes(self, seg: int) -> int:
+        """Payload bytes of one segment's pinned base rows — what an
+        ingest must upload to a device mirror (and nothing more)."""
+        return self.n_base * self._seg_words[seg] * 4
+
+    def _covered(self, handle: int, seg: int) -> bool:
+        return seg < int(self._cover[handle])
+
+    def add_segment(self, base_bitmaps: np.ndarray) -> int:
+        """Append a fresh transaction segment: ``base_bitmaps`` is the
+        ``[n_base, W_seg]`` packed item bitmaps of the NEW transactions
+        only. Existing segments are untouched — no repack, no
+        re-upload; with eager ("jax") backing the new segment's base
+        payload is mirrored immediately and its bytes (exactly
+        :meth:`seg_nbytes`) are the entire h2d bill. Returns the new
+        segment id."""
+        bm = np.ascontiguousarray(base_bitmaps, dtype=np.uint32)
+        if bm.ndim != 2 or bm.shape[0] != self.n_base:
+            raise ValueError(
+                f"segment bitmaps must be [n_base={self.n_base}, W_seg], "
+                f"got {bm.shape}")
+        with self._lock:
+            w = bm.shape[1]
+            seg = len(self._seg_words)
+            cap = self._refs.shape[0]
+            store = np.zeros((cap, w), np.uint32)
+            store[:self.n_base] = bm
+            self._seg_words.append(w)
+            self._stores.append(store)
+            # base item rows now extend into the new segment; live
+            # non-base rows keep their creation-time coverage and read
+            # as zeros there
+            self._cover[:self.n_base] = seg + 1
+        if self.backing == "jax":
+            for s in range(self.n_shards):
+                self.device_rows(s, segment=seg)   # eager, W_seg only
+        return seg
 
     # ------------------------------------------------------------- load --
     @classmethod
@@ -235,8 +307,9 @@ class BitmapArena:
         n, w = bitmaps.shape
         arena = cls(w, backing, capacity=max(64, 2 * n),
                     n_shards=n_shards, devices=devices)
-        arena._rows[:n] = bitmaps
+        arena._stores[0][:n] = bitmaps
         arena._refs[:n] = 1
+        arena._cover[:n] = 1
         arena.n_rows = arena.n_base = n
         if backing == "jax":
             for s in range(arena.n_shards):
@@ -255,19 +328,28 @@ class BitmapArena:
         if self._free:
             slot = self._free.pop()
             for s in range(self.n_shards):
-                if slot < self._dev_n[s]:
-                    self._invalid[s].add(slot)  # mirror content stale
-                self._migrated_in[s].discard(slot)  # old row is gone
+                dn = self._dev_n[s]
+                for g in range(len(self._seg_words)):
+                    if slot < dn.get(g, 0):
+                        # mirror content stale in every segment block
+                        self._invalid[s].setdefault(g, set()).add(slot)
+                    mig = self._migrated_in[s].get(g)
+                    if mig:
+                        mig.discard(slot)  # old row is gone
             return slot
-        if self.n_rows == self._rows.shape[0]:
-            cap = self.GROW * self._rows.shape[0]
-            rows = np.zeros((cap, self.n_words), np.uint32)
-            rows[:self.n_rows] = self._rows[:self.n_rows]
+        if self.n_rows == self._refs.shape[0]:
+            cap = self.GROW * self._refs.shape[0]
+            for g, old in enumerate(self._stores):
+                store = np.zeros((cap, self._seg_words[g]), np.uint32)
+                store[:self.n_rows] = old[:self.n_rows]
+                self._stores[g] = store
             refs = np.zeros(cap, np.int32)
             refs[:self.n_rows] = self._refs[:self.n_rows]
             owner = np.full(cap, -1, np.int32)
             owner[:self.n_rows] = self._owner[:self.n_rows]
-            self._rows, self._refs, self._owner = rows, refs, owner
+            cover = np.zeros(cap, np.int32)
+            cover[:self.n_rows] = self._cover[:self.n_rows]
+            self._refs, self._owner, self._cover = refs, owner, cover
         slot = self.n_rows
         self.n_rows += 1
         return slot
@@ -277,13 +359,18 @@ class BitmapArena:
         self.peak_live_extra = max(self.peak_live_extra, self.live_extra)
 
     def push(self, row: np.ndarray, shard: int = 0) -> int:
-        """Append (or recycle a slot for) one bitmap row; refcount 1.
+        """Append (or recycle a slot for) one full-width bitmap row
+        (``[n_words]``, the concatenation over segments); refcount 1.
         ``shard`` records the owning shard in sharded mode."""
         with self._lock:
             slot = self._alloc_slot()
-            self._rows[slot] = row
+            off = 0
+            for g, w in enumerate(self._seg_words):
+                self._stores[g][slot] = row[off:off + w]
+                off += w
             self._refs[slot] = 1
             self._owner[slot] = shard
+            self._cover[slot] = len(self._seg_words)
             self._bump_live()
             return slot
 
@@ -291,14 +378,23 @@ class BitmapArena:
                     shard: int = 0) -> int:
         """``row(prefix) ∧ row(ext)`` appended in place — the depth-first
         parent→child handoff, with no floating temporary. The new row is
-        owned by ``shard`` (the materializing worker's device)."""
+        owned by ``shard`` (the materializing worker's device) and
+        covers the segments both parents cover (beyond that it is
+        zeroed, so recycled-slot garbage can never leak into a read)."""
         with self._lock:
             slot = self._alloc_slot()
-            np.bitwise_and(self._rows[prefix_handle],
-                           self._rows[ext_handle],
-                           out=self._rows[slot])
+            cov = min(int(self._cover[prefix_handle]),
+                      int(self._cover[ext_handle]))
+            for g, store in enumerate(self._stores):
+                if g < cov:
+                    np.bitwise_and(store[prefix_handle],
+                                   store[ext_handle],
+                                   out=store[slot])
+                else:
+                    store[slot] = 0
             self._refs[slot] = 1
             self._owner[slot] = shard
+            self._cover[slot] = cov
             self._bump_live()
             return slot
 
@@ -318,19 +414,25 @@ class BitmapArena:
         base rows are replicated everywhere and never migrate. Returns
         the number of rows moved."""
         moved = 0
-        row_bytes = self.n_words * 4
         with self._lock:
+            dn = self._dev_n[dst]
+            inv = self._invalid[dst]
+            mig = self._migrated_in[dst]
             for h in handles:
                 if h < self.n_base:
                     continue
                 if int(self._owner[h]) == dst:
                     continue
                 self._owner[h] = dst
-                resident = (h < self._dev_n[dst]
-                            and h not in self._invalid[dst])
-                if not resident:
-                    self.d2d_bytes += row_bytes
-                    self._migrated_in[dst].add(h)
+                for g in range(int(self._cover[h])):
+                    wb = self._seg_words[g] * 4
+                    if not wb:
+                        continue
+                    resident = (h < dn.get(g, 0)
+                                and h not in inv.get(g, ()))
+                    if not resident:
+                        self.d2d_bytes += wb
+                        mig.setdefault(g, set()).add(h)
                 self.migrations += 1
                 moved += 1
         return moved
@@ -357,23 +459,52 @@ class BitmapArena:
 
     # ------------------------------------------------------------ access --
     def row(self, handle: int) -> np.ndarray:
-        """Zero-copy [W] view of one live row."""
-        return self._rows[handle]
+        """[n_words] view of one live row. Zero-copy for single-segment
+        arenas (the non-streaming hot path); for segmented arenas this
+        is a concatenated copy, zero-filled past the row's coverage."""
+        if len(self._stores) == 1:
+            return self._stores[0][handle]
+        cov = int(self._cover[handle])
+        return np.concatenate(
+            [store[handle] if g < cov
+             else np.zeros(self._seg_words[g], np.uint32)
+             for g, store in enumerate(self._stores)])
+
+    def seg_row(self, seg: int, handle: int) -> np.ndarray:
+        """Zero-copy [W_seg] view of one row's words in one segment."""
+        return self._stores[seg][handle]
+
+    def seg_view(self, seg: int) -> np.ndarray:
+        """Zero-copy [n_rows, W_seg] view of one segment's store (numpy
+        backend sweeps index this directly)."""
+        return self._stores[seg][:self.n_rows]
 
     def rows_view(self) -> np.ndarray:
-        """Zero-copy [n_rows, W] view of the whole store (numpy backend
-        sweeps index this directly)."""
-        return self._rows[:self.n_rows]
+        """[n_rows, n_words] view of the whole store — zero-copy for
+        single-segment arenas, a concatenated copy otherwise."""
+        if len(self._stores) == 1:
+            return self._stores[0][:self.n_rows]
+        return np.concatenate([s[:self.n_rows] for s in self._stores],
+                              axis=1)
 
-    def gather(self, handles: Sequence[int]) -> np.ndarray:
-        """Rows for ``handles`` — a zero-copy slice view when the
-        handles are contiguous (item ranges often are), a fancy-index
-        copy otherwise."""
+    def seg_gather(self, seg: int, handles: Sequence[int]) -> np.ndarray:
+        """One segment's rows for ``handles`` — a zero-copy slice view
+        when the handles are contiguous (item ranges often are), a
+        fancy-index copy otherwise."""
+        store = self._stores[seg]
         h0 = handles[0]
         n = len(handles)
         if all(handles[i] == h0 + i for i in range(1, n)):
-            return self._rows[h0:h0 + n]
-        return self._rows[list(handles)]
+            return store[h0:h0 + n]
+        return store[list(handles)]
+
+    def gather(self, handles: Sequence[int]) -> np.ndarray:
+        """Full-width rows for ``handles`` (see :meth:`seg_gather`)."""
+        if len(self._stores) == 1:
+            return self.seg_gather(0, handles)
+        return np.concatenate(
+            [self.seg_gather(g, handles)
+             for g in range(len(self._stores))], axis=1)
 
     @property
     def live_bytes_extra(self) -> int:
@@ -392,30 +523,40 @@ class BitmapArena:
     def device_enabled(self) -> bool:
         return self.backing != "numpy"
 
-    def _sync_plan(self, shard: int, needed: Optional[Sequence[int]]
+    def _sync_plan(self, shard: int, seg: int,
+                   needed: Optional[Sequence[int]]
                    ) -> Tuple[int, int, List[int], int,
                               List[int], List[int]]:
-        """Advance shard bookkeeping to ``n_rows`` and classify work.
+        """Advance mirror (shard, seg) bookkeeping to ``n_rows`` and
+        classify work.
 
         Caller holds the lock. Returns ``(lo, n, fresh_owned, fresh_h2d,
-        reupload, fetch)``: rows [lo, n) are new to this shard's mirror
-        (of which ``fresh_owned`` — owned-by-shard or replicated base —
-        carry payload, ``fresh_h2d`` of them at h2d cost; the rest
-        enter ``_invalid`` as unfetched foreign rows); ``reupload`` are
-        owned rows whose mirror content went stale (recycled slots),
-        billed h2d; ``fetch`` are rows placed without an h2d bill —
-        foreign rows ``needed`` now (their payload is counted in
-        ``d2d_bytes`` here, once per residency; a later recycle
-        invalidates and recounts) and migrated-in rows whose d2d was
-        prepaid by :meth:`migrate`."""
+        reupload, fetch)``: rows [lo, n) are new to this mirror (of
+        which ``fresh_owned`` — owned-by-shard or replicated base, live,
+        and covering this segment — carry payload, ``fresh_h2d`` of
+        them at h2d cost; the rest enter ``_invalid`` as unfetched
+        foreign/stale rows); ``reupload`` are owned rows whose mirror
+        content went stale (recycled slots), billed h2d; ``fetch`` are
+        rows placed without an h2d bill — foreign rows ``needed`` now
+        (their payload is counted in ``d2d_bytes`` here, once per
+        residency; a later recycle invalidates and recounts),
+        migrated-in rows whose d2d was prepaid by :meth:`migrate`, and
+        dead/uncovered rows whose placement carries no real payload."""
         n = self.n_rows
-        lo = self._dev_n[shard]
-        inv = self._invalid[shard]
-        mig = self._migrated_in[shard]
+        lo = self._dev_n[shard].get(seg, 0)
+        inv = self._invalid[shard].setdefault(seg, set())
+        mig = self._migrated_in[shard].setdefault(seg, set())
         fresh_owned: List[int] = []
         fresh_h2d = 0
+
+        def _live(h: int) -> bool:
+            return h < self.n_base or int(self._refs[h]) > 0
+
+        def _owned(h: int) -> bool:
+            return h < self.n_base or int(self._owner[h]) in (-1, shard)
+
         for h in range(lo, n):
-            if h < self.n_base or int(self._owner[h]) in (-1, shard):
+            if _owned(h) and _live(h) and self._covered(h, seg):
                 fresh_owned.append(h)
                 if h in mig:          # transfer billed at migrate time
                     mig.discard(h)
@@ -423,14 +564,16 @@ class BitmapArena:
                     fresh_h2d += 1
             else:
                 inv.add(h)
-        self._dev_n[shard] = n
+        self._dev_n[shard][seg] = n
         reupload: List[int] = []
         fetch: List[int] = []
-        row_bytes = self.n_words * 4
+        row_bytes = self._seg_words[seg] * 4
 
         def _classify(h: int) -> None:
             inv.discard(h)
-            if h < self.n_base or int(self._owner[h]) in (-1, shard):
+            if not (_live(h) and self._covered(h, seg)):
+                fetch.append(h)       # no real payload: never billed
+            elif _owned(h):
                 if h in mig:          # prepaid migration landing
                     mig.discard(h)
                     fetch.append(h)
@@ -449,26 +592,33 @@ class BitmapArena:
             # pre-sharding "dirty" semantics); foreign rows wait for a
             # needed-based sync
             for h in sorted(inv):
-                if h < self.n_base or int(self._owner[h]) in (-1, shard):
+                if _owned(h):
                     _classify(h)
         return lo, n, fresh_owned, fresh_h2d, reupload, fetch
 
-    def note_access(self, shard: int, handles: Sequence[int]) -> None:
+    def note_access(self, shard: int, handles: Sequence[int],
+                    segments: Optional[Sequence[int]] = None) -> None:
         """Residency/d2d bookkeeping for host-only sweeps: a sweep on
         ``shard`` reading a row owned elsewhere counts one cross-shard
         fetch (``d2d_bytes``), after which the row is resident there
-        until its slot recycles. Device-backed arenas get the same
-        accounting (plus the physical mirror ops) via
+        until its slot recycles. ``segments`` restricts the bill to the
+        segment subset actually swept (a streaming delta pass reads —
+        and ships — only the fresh segments). Device-backed arenas get
+        the same accounting (plus the physical mirror ops) via
         :meth:`device_rows`."""
         if self.n_shards == 1:
             return
         with self._lock:
-            self._sync_plan(shard, handles)
+            segs = (segments if segments is not None
+                    else range(len(self._seg_words)))
+            for g in segs:
+                self._sync_plan(shard, g, handles)
 
     def device_rows(self, shard: int = 0,
-                    needed: Optional[Sequence[int]] = None):
-        """jax mirror of ``rows_view()`` for one shard, synced
-        incrementally (only that shard's dispatcher thread calls
+                    needed: Optional[Sequence[int]] = None,
+                    segment: int = 0):
+        """jax mirror of one segment's ``seg_view()`` for one shard,
+        synced incrementally (only that shard's dispatcher thread calls
         this). Returns None for host-only ("numpy") backing.
 
         ``needed`` lists the handles the caller is about to gather:
@@ -477,28 +627,31 @@ class BitmapArena:
         callers), every stale owned row is refreshed.
 
         "Incremental" bounds host→device PAYLOAD (the ``h2d_bytes``
-        gauge): only changed rows cross the bus. The functional update
-        (concatenate / ``.at[].set``) still rebuilds the mirror buffer
-        on device, an O(n_rows) device-to-device copy per sync with
-        fresh rows — acceptable while mirrors are MBs; a donated
+        gauge): only changed rows cross the bus, and only this
+        segment's words — an ingest that appended segment g uploads
+        ``seg_nbytes(g)``, never the older segments. The functional
+        update (concatenate / ``.at[].set``) still rebuilds the mirror
+        buffer on device, an O(n_rows) device-to-device copy per sync
+        with fresh rows — acceptable while mirrors are MBs; a donated
         preallocated buffer would remove it when arenas reach device
         memory scale."""
         if not self.device_enabled:
             if needed is not None:
-                self.note_access(shard, needed)
+                self.note_access(shard, needed, segments=(segment,))
             return None
         with self._lock:
             lo, n, fresh_owned, fresh_h2d, reupload, fetch = \
-                self._sync_plan(shard, needed)
+                self._sync_plan(shard, segment, needed)
+            store = self._stores[segment]
             fresh = None
             if n > lo:
-                fresh = self._rows[lo:n].copy()
+                fresh = store[lo:n].copy()
                 owned = set(fresh_owned)
                 for j, h in enumerate(range(lo, n)):
                     if h not in owned:
                         fresh[j] = 0          # unfetched foreign row
-            re_rows = self._rows[reupload].copy() if reupload else None
-            fe_rows = self._rows[fetch].copy() if fetch else None
+            re_rows = store[reupload].copy() if reupload else None
+            fe_rows = store[fetch].copy() if fetch else None
         import jax.numpy as jnp
 
         def _place(arr):
@@ -508,12 +661,12 @@ class BitmapArena:
                 a = jax.device_put(a, self.devices[shard])
             return a
 
-        row_bytes = self.n_words * 4
+        row_bytes = self._seg_words[segment] * 4
         h2d_delta = 0
-        dev = self._dev[shard]
+        dev = self._dev[shard].get(segment)
         if dev is None:
             dev = _place(fresh if fresh is not None
-                         else self._rows[:0])
+                         else store[:0])
             h2d_delta += fresh_h2d * row_bytes
         elif fresh is not None:
             dev = jnp.concatenate([dev, _place(fresh)])
@@ -523,12 +676,13 @@ class BitmapArena:
                          ].set(_place(re_rows))
             h2d_delta += len(reupload) * row_bytes
         if fe_rows is not None:
-            # payload already billed (d2d at fetch/migrate time); on
-            # this container's virtual devices the bits physically
-            # route through the host
+            # payload already billed (d2d at fetch/migrate time) or
+            # dead/uncovered (no real payload); on this container's
+            # virtual devices the bits physically route through the
+            # host
             dev = dev.at[_place(np.asarray(fetch, np.int32))
                          ].set(_place(fe_rows))
-        self._dev[shard] = dev
+        self._dev[shard][segment] = dev
         if h2d_delta:
             self.count_h2d(h2d_delta)
         return dev
@@ -543,4 +697,4 @@ class BitmapArena:
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
         return (f"<BitmapArena rows={self.n_rows} base={self.n_base} "
                 f"live_extra={self.live_extra} backing={self.backing} "
-                f"shards={self.n_shards}>")
+                f"shards={self.n_shards} segments={self.n_segments}>")

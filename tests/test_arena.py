@@ -300,3 +300,144 @@ def test_mine_with_jax_arena_matches_serial():
                     backend="pallas-interpret")
     assert got == ref
     assert met.h2d_bytes >= bm.nbytes        # the eager initial upload
+
+
+# ----------------------------------------------- segmented arena (streaming)
+def test_add_segment_extends_base_rows_only():
+    arena, rows = small_arena(n=4, w=3)
+    seg = RNG.integers(0, 2 ** 32, size=(4, 2), dtype=np.uint32)
+    g = arena.add_segment(seg)
+    assert g == 1 and arena.n_segments == 2
+    assert arena.n_words == 5 and arena.seg_words(1) == 2
+    for i in range(4):
+        np.testing.assert_array_equal(arena.row(i),
+                                      np.concatenate([rows[i], seg[i]]))
+        np.testing.assert_array_equal(arena.seg_row(1, i), seg[i])
+
+
+def test_add_segment_rejects_wrong_row_count():
+    arena, _ = small_arena(n=4, w=3)
+    with pytest.raises(ValueError, match="n_base"):
+        arena.add_segment(np.zeros((3, 2), np.uint32))
+
+
+def test_pre_segment_rows_read_zeros_beyond_their_coverage():
+    """A row materialized BEFORE an ingest covers only the segments
+    that existed then — its words in later segments read as zeros, so
+    a stale retained row can never fabricate support in transactions
+    it never saw."""
+    arena, rows = small_arena(n=4, w=3)
+    h = arena.materialize(0, 1)
+    seg = np.full((4, 2), 0xFFFFFFFF, np.uint32)
+    arena.add_segment(seg)
+    got = arena.row(h)
+    np.testing.assert_array_equal(got[:3], rows[0] & rows[1])
+    assert (got[3:] == 0).all()
+    # a row pushed AFTER the ingest covers both segments
+    h2 = arena.push(arena.row(0))
+    np.testing.assert_array_equal(arena.row(h2), arena.row(0))
+    # and a materialize of base rows post-ingest spans both segments
+    h3 = arena.materialize(2, 3)
+    np.testing.assert_array_equal(
+        arena.row(h3), np.concatenate([rows[2] & rows[3],
+                                       seg[2] & seg[3]]))
+
+
+def test_segment_mirror_sync_bills_only_new_segment_bytes():
+    """Device mirrors are per-segment: after an ingest, syncing the new
+    segment uploads exactly its payload; the old segment's mirror is
+    untouched (no re-upload of the whole arena)."""
+    arena, rows = small_arena(n=4, w=8)
+    arena.device_rows()                          # seg 0: 4 rows x 8 w
+    assert arena.h2d_bytes == 4 * 8 * 4
+    seg = RNG.integers(0, 2 ** 32, size=(4, 2), dtype=np.uint32)
+    arena.add_segment(seg)
+    dev1 = arena.device_rows(segment=1)
+    assert arena.h2d_bytes == 4 * 8 * 4 + arena.seg_nbytes(1)
+    assert arena.seg_nbytes(1) == 4 * 2 * 4
+    np.testing.assert_array_equal(np.asarray(dev1), seg)
+    arena.device_rows()                          # seg 0 unchanged:
+    assert arena.h2d_bytes == 4 * 8 * 4 + 4 * 2 * 4   # no new upload
+
+
+def test_eager_backing_uploads_each_segment_once():
+    arena, _ = small_arena(n=5, w=3, backing="jax")
+    assert arena.h2d_bytes == 5 * 3 * 4
+    arena.add_segment(np.ones((5, 4), np.uint32))
+    # eager: the ingest itself mirrored the new segment — and ONLY it
+    assert arena.h2d_bytes == 5 * 3 * 4 + 5 * 4 * 4
+
+
+def test_slot_recycle_across_segments_invalidates_every_mirror():
+    """A recycled slot's stale words must be invalidated (and resynced
+    on demand) in EVERY segment mirror, not just segment 0."""
+    arena, rows = small_arena(n=4, w=4)
+    seg = RNG.integers(0, 2 ** 32, size=(4, 3), dtype=np.uint32)
+    arena.add_segment(seg)
+    h = arena.materialize(0, 1)
+    arena.device_rows(segment=0)
+    arena.device_rows(segment=1)
+    h2d = arena.h2d_bytes
+    arena.release(h)
+    h2 = arena.materialize(2, 3)
+    assert h2 == h                               # slot recycled
+    d0 = arena.device_rows(segment=0)
+    d1 = arena.device_rows(segment=1)
+    np.testing.assert_array_equal(np.asarray(d0[h2]), rows[2] & rows[3])
+    np.testing.assert_array_equal(np.asarray(d1[h2]), seg[2] & seg[3])
+    # reupload billed per segment at that segment's width
+    assert arena.h2d_bytes == h2d + 4 * 4 + 3 * 4
+
+
+def test_segmented_sweep_restricted_to_segment_subset():
+    """The numpy backend sums per-segment joins; a segments= request
+    reads only those segments (the streaming delta sweep)."""
+    from repro.core.join_backend import NumpyBackend, SweepRequest
+    from repro.core.tidlist import popcount32
+    arena, rows = small_arena(n=4, w=3)
+    seg = RNG.integers(0, 2 ** 32, size=(4, 2), dtype=np.uint32)
+    arena.add_segment(seg)
+    be = NumpyBackend()
+    full = be.sweep_many(arena, [SweepRequest(0, (1, 2))])[0]
+    want_full = [int(popcount32(np.concatenate([rows[0] & rows[e],
+                                                seg[0] & seg[e]])).sum())
+                 for e in (1, 2)]
+    assert list(full) == want_full
+    delta = be.sweep_many(arena,
+                          [SweepRequest(0, (1, 2), segments=(1,))])[0]
+    want_delta = [int(popcount32(seg[0] & seg[e]).sum()) for e in (1, 2)]
+    assert list(delta) == want_delta
+    both = be.sweep_many(arena,
+                         [SweepRequest(0, (1, 2), segments=(0, 1))])[0]
+    assert list(both) == want_full
+
+
+def test_zero_width_segments_are_skipped():
+    """An empty initial database (or empty batch) packs to a
+    zero-width segment; sweeps skip it and counts stay correct."""
+    from repro.core.join_backend import NumpyBackend, SweepRequest
+    from repro.core.tidlist import popcount32
+    arena = BitmapArena.from_bitmaps(np.zeros((3, 0), np.uint32))
+    seg = RNG.integers(0, 2 ** 32, size=(3, 2), dtype=np.uint32)
+    arena.add_segment(seg)
+    arena.add_segment(np.zeros((3, 0), np.uint32))
+    be = NumpyBackend()
+    counts = be.sweep_many(arena, [SweepRequest(0, (1, 2))])[0]
+    want = [int(popcount32(seg[0] & seg[e]).sum()) for e in (1, 2)]
+    assert list(counts) == want
+
+
+def test_pallas_interpret_matches_numpy_on_segmented_arena():
+    from repro.core.join_backend import (NumpyBackend,
+                                         PallasInterpretBackend,
+                                         SweepRequest)
+    arena, rows = small_arena(n=6, w=4)
+    arena.add_segment(RNG.integers(0, 2 ** 32, size=(6, 3),
+                                   dtype=np.uint32))
+    reqs = [SweepRequest(0, (1, 2, 3)),
+            SweepRequest(1, (2, 4), segments=(1,)),
+            SweepRequest(2, (3,), segments=(0,))]
+    a = NumpyBackend().sweep_many(arena, reqs)
+    b = PallasInterpretBackend().sweep_many(arena, reqs)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)

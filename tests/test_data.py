@@ -1,10 +1,9 @@
-"""Data layer tests: transaction generator + length-clustered LM loader."""
+"""Data layer tests: the synthetic transaction generator."""
 import numpy as np
 import pytest
 
 from repro.core.tidlist import pack_database
 from repro.core.fpm import mine_serial
-from repro.data import lm_pipeline as lmp
 from repro.data.transactions import PROFILES, load, min_support_count
 
 
@@ -68,42 +67,3 @@ def test_profiles_yield_multilevel_itemsets():
     bm = pack_database(db[:800], p.n_dense_items)
     res = mine_serial(bm, int(p.support * 800), max_k=4)
     assert any(len(k) >= 3 for k in res)
-
-
-# ------------------------------------------------------------- LM loader
-def test_length_buckets_partition():
-    docs = lmp.synth_corpus(200, vocab=1000, seed=0)
-    buckets = lmp.length_buckets(docs)
-    all_ids = sorted(i for v in buckets.values() for i in v)
-    assert all_ids == list(range(200))
-    for e, idxs in buckets.items():
-        assert all(len(docs[i]) <= e for i in idxs)
-
-
-def test_clustered_loader_pads_less_than_random():
-    docs = lmp.synth_corpus(600, vocab=1000, seed=1, mean_len=300)
-    loader = lmp.ClusteredLoader(docs, batch=8, seq_len=4096, n_shards=1)
-    for _ in loader.batches(0):
-        pass
-    rand_pad = lmp.unclustered_pad_fraction(docs, 8, 4096)
-    assert loader.stats.pad_fraction <= rand_pad
-
-
-def test_bucket_steal_moves_whole_bucket():
-    docs = lmp.synth_corpus(400, vocab=1000, seed=2)
-    loader = lmp.ClusteredLoader(docs, batch=4, seq_len=2048, n_shards=2)
-    before = sum(len(v) for v in loader.shard_buckets[0].values())
-    key = loader.steal(thief=1, victim=0)
-    assert key is not None
-    after = sum(len(v) for v in loader.shard_buckets[0].values())
-    assert after < before
-    assert loader.stats.stolen_buckets == 1
-
-
-def test_batch_iter_shapes():
-    it = lmp.make_batch_iter(vocab=100, batch=4, seq_len=16)
-    b = it(0)
-    assert b["tokens"].shape == (4, 16)
-    assert b["labels"].shape == (4, 16)
-    assert (it(0)["tokens"] == b["tokens"]).all()     # deterministic
-    assert (it(1)["tokens"] != b["tokens"]).any()

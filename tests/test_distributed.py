@@ -155,166 +155,3 @@ def test_mesh_forced_migration_two_devices():
         assert list(got['counts']) == want, (got['counts'], want)
         print('migration ok, d2d', arena.d2d_bytes)
     """, n_dev=2)
-
-
-def test_train_step_sharded_small_mesh():
-    run_py("""
-        import jax, numpy as np, jax.numpy as jnp
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-        from repro.configs.base import OptimizerConfig
-        from repro.configs.registry import get_smoke_config
-        from repro.launch import steps as steps_mod
-        from repro.optim import adamw
-        from repro.parallel import sharding as shd
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 2),
-                    ('data', 'model'))
-        cfg = get_smoke_config('olmo-1b')
-        rules = shd.RULESETS['default']
-        model, train_step, psh, osh = steps_mod.build_train_step(
-            cfg, OptimizerConfig(), mesh, rules)
-        params = model.init(jax.random.PRNGKey(0))
-        opt = adamw.init(params)
-        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
-                                  cfg.vocab_size)
-        batch = {'tokens': toks, 'labels': toks}
-        fn = jax.jit(train_step, in_shardings=(psh, osh, None),
-                     out_shardings=(psh, osh, None))
-        with mesh:
-            p2, o2, metrics = fn(params, opt, batch)
-            p3, o3, m2 = fn(p2, o2, batch)
-        assert float(m2['loss']) < float(metrics['loss']) + 1.0
-        print('loss', float(metrics['loss']), '->', float(m2['loss']))
-    """, n_dev=4)
-
-
-def test_moe_shardmap_agrees_with_single_device():
-    run_py("""
-        import jax, numpy as np, jax.numpy as jnp
-        from jax.sharding import Mesh
-        from repro.configs.base import MoEConfig
-        from repro.configs.registry import get_smoke_config
-        from repro.models import moe as moe_mod
-        from repro.models.registry import build_model
-        from repro.parallel.sharding import RULESETS
-        key = jax.random.PRNGKey(3)
-        cfg = get_smoke_config('dbrx-132b').with_(dtype='float32',
-            moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=8.0))
-        m = build_model(cfg)
-        p = jax.tree.map(lambda a: a[0], m.init(key)['blocks']['moe'])
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 2),
-                    ('data', 'model'))
-        x = jax.random.normal(key, (32, cfg.d_model), jnp.float32)
-        y1, _ = moe_mod.moe_clustered(cfg, p, x, 2)
-        with mesh:
-            y2, _ = jax.jit(lambda p, x: moe_mod.moe_clustered_shmap(
-                cfg, p, x, mesh, RULESETS['default']))(p, x)
-        err = float(jnp.max(jnp.abs(y1 - y2)))
-        assert err < 1e-5, err
-        print('ok', err)
-    """, n_dev=4)
-
-
-def test_pipeline_parallel_matches_sequential():
-    run_py("""
-        import jax, numpy as np, jax.numpy as jnp
-        from jax.sharding import Mesh
-        from repro.parallel.pipeline import pipeline_apply
-        mesh = Mesh(np.array(jax.devices()).reshape(4), ('stage',))
-        n_stages, b, d = 4, 8, 16
-        key = jax.random.PRNGKey(0)
-        ws = jax.random.normal(key, (n_stages, d, d)) * 0.3
-
-        def stage_fn(w, x):
-            return jnp.tanh(x @ w)
-
-        x = jax.random.normal(jax.random.PRNGKey(1), (b, d))
-        want = x
-        for i in range(n_stages):
-            want = stage_fn(ws[i], want)
-        with mesh:
-            got = jax.jit(lambda ws, x: pipeline_apply(
-                stage_fn, ws, x, mesh=mesh, n_micro=4))(ws, x)
-        err = float(jnp.max(jnp.abs(got - want)))
-        assert err < 1e-5, err
-        print('ok', err)
-    """, n_dev=4)
-
-
-def test_elastic_reshard_roundtrip():
-    run_py("""
-        import jax, numpy as np
-        from jax.sharding import Mesh
-        from repro.checkpoint import ckpt
-        from repro.configs.registry import get_smoke_config
-        from repro.models.registry import build_model
-        from repro.parallel import sharding as shd
-        from repro.runtime.elastic import reshard_params
-        import tempfile, os
-        cfg = get_smoke_config('stablelm-3b')
-        m = build_model(cfg)
-        params = m.init(jax.random.PRNGKey(0))
-        d = tempfile.mkdtemp()
-        ckpt.save(d, 1, params)
-        # restore onto a DIFFERENT (wider-model) mesh
-        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
-                    ('data', 'model'))
-        like = m.param_shapes()
-        restored, _ = ckpt.load(d, 1, like)
-        restored = reshard_params(restored, m, mesh,
-                                  shd.RULESETS['default'])
-        ok = jax.tree.all(jax.tree.map(
-            lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
-            params, restored))
-        assert ok
-        print('elastic ok')
-    """, n_dev=8)
-
-
-def test_elastic_scale_down_resume():
-    """Train 4 steps on a 4x2 mesh, checkpoint, resume on a 2x2 mesh:
-    the loss trajectory must continue exactly (global arrays + logical
-    re-sharding = restart-time elasticity)."""
-    import tempfile
-    ckpt_dir = tempfile.mkdtemp()
-    code = """
-        import jax, numpy as np, jax.numpy as jnp
-        from jax.sharding import Mesh
-        from repro.checkpoint import ckpt
-        from repro.configs.base import OptimizerConfig
-        from repro.configs.registry import get_smoke_config
-        from repro.launch import steps as steps_mod
-        from repro.optim import adamw
-        from repro.parallel import sharding as shd
-        mesh = Mesh(np.array(jax.devices()[:%(ndev)d]).reshape(%(shape)s),
-                    ('data', 'model'))
-        cfg = get_smoke_config('olmo-1b')
-        rules = shd.RULESETS['default']
-        model, train_step, psh, osh = steps_mod.build_train_step(
-            cfg, OptimizerConfig(lr=1e-3), mesh, rules)
-        params = model.init(jax.random.PRNGKey(0))
-        opt = adamw.init(params)
-        start = ckpt.latest_step(%(ckpt)r)
-        if start is not None:
-            (params, opt), man = ckpt.load(%(ckpt)r, start, (params, opt))
-        else:
-            start = 0
-        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
-                                  cfg.vocab_size)
-        batch = {'tokens': toks, 'labels': toks}
-        fn = jax.jit(train_step, in_shardings=(psh, osh, None),
-                     out_shardings=(psh, osh, None))
-        with mesh:
-            for step in range(start, start + 4):
-                params, opt, m = fn(params, opt, batch)
-                print('loss', step, float(m['loss']))
-        ckpt.save(%(ckpt)r, start + 4, (params, opt))
-    """
-    out1 = run_py(code % {"ndev": 8, "shape": "(4, 2)",
-                          "ckpt": ckpt_dir}, n_dev=8)
-    out2 = run_py(code % {"ndev": 4, "shape": "(2, 2)",
-                          "ckpt": ckpt_dir}, n_dev=4)
-    losses1 = [float(l.split()[2]) for l in out1.strip().splitlines()]
-    losses2 = [float(l.split()[2]) for l in out2.strip().splitlines()]
-    # run 2 continues where run 1 stopped, on HALF the devices
-    assert losses2[0] < losses1[-1]
-    assert losses2[-1] < losses2[0]

@@ -10,10 +10,6 @@ from repro.kernels.bitmap_join.kernel import (bitmap_join_kernel,
 from repro.kernels.bitmap_join.ops import bitmap_join
 from repro.kernels.bitmap_join.ref import (bitmap_join_many_ref,
                                            bitmap_join_ref)
-from repro.kernels.flash_attention.kernel import flash_attention_kernel
-from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.masked_gram.kernel import masked_gram_kernel
-from repro.kernels.masked_gram.ref import masked_gram_ref
 
 RNG = np.random.default_rng(0)
 
@@ -83,75 +79,3 @@ def test_property_bitmap_join_many_random(b, e, w):
                                     dtype=np.uint32))
     out = bitmap_join_many_kernel(prefixes, exts, interpret=True)
     np.testing.assert_array_equal(out, bitmap_join_many_ref(prefixes, exts))
-
-
-# ------------------------------------------------------------ masked_gram
-@pytest.mark.parametrize("i,t", [(1, 1), (5, 40), (128, 512), (130, 515),
-                                 (200, 900)])
-def test_masked_gram_shapes(i, t):
-    a = jnp.asarray((RNG.random((i, t)) < 0.3).astype(np.float32))
-    m = jnp.asarray((RNG.random(t) < 0.5).astype(np.float32))
-    out = masked_gram_kernel(a, m, interpret=True)
-    np.testing.assert_allclose(out, masked_gram_ref(a, m), atol=1e-3)
-
-
-def test_masked_gram_counts_are_supports():
-    """C[i,j] must equal |prefix ∩ i ∩ j| exactly (integers in f32)."""
-    bits = (RNG.random((9, 200)) < 0.4)
-    mask = (RNG.random(200) < 0.5)
-    a = jnp.asarray(bits.astype(np.float32))
-    m = jnp.asarray(mask.astype(np.float32))
-    out = np.asarray(masked_gram_kernel(a, m, interpret=True))
-    for i in range(9):
-        for j in range(9):
-            want = int(np.sum(bits[i] & bits[j] & mask))
-            assert out[i, j] == want
-
-
-# -------------------------------------------------------- flash_attention
-@pytest.mark.parametrize("s,t,d", [(128, 128, 64), (256, 256, 64),
-                                   (257, 257, 64), (128, 384, 128)])
-@pytest.mark.parametrize("causal", [True, False])
-def test_flash_attention_shapes(s, t, d, causal):
-    if causal and s != t:
-        pytest.skip("causal assumes aligned q/kv")
-    if not causal and (t % 128):
-        pytest.skip("non-causal ragged handled by ops wrapper via ref")
-    q = jnp.asarray(RNG.standard_normal((2, s, d)), jnp.float32)
-    k = jnp.asarray(RNG.standard_normal((2, t, d)), jnp.float32)
-    v = jnp.asarray(RNG.standard_normal((2, t, d)), jnp.float32)
-    out = flash_attention_kernel(q, k, v, causal=causal, interpret=True)
-    ref = flash_attention_ref(q, k, v, causal=causal)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=2e-5, rtol=1e-4)
-
-
-def test_flash_attention_bf16():
-    q = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
-    k = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
-    v = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
-    out = flash_attention_kernel(q, k, v, causal=True, interpret=True)
-    ref = flash_attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(
-        np.asarray(out, np.float32), np.asarray(ref, np.float32),
-        atol=3e-2, rtol=3e-2)
-
-
-def test_flash_attention_matches_model_blockwise_path():
-    """Kernel and models/attention.py q-chunked path agree on one oracle."""
-    from repro.configs.registry import get_smoke_config
-    from repro.models import attention as mattn
-    cfg = get_smoke_config("olmo-1b").with_(
-        dtype="float32", attn_blockwise_threshold=64, attn_block_q=64)
-    b, s, h, d = 2, 256, 4, 16
-    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
-    k = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
-    v = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
-    blockwise = mattn.attention(cfg, q, k, v, causal=True)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kern = flash_attention_kernel(qf, kf, vf, causal=True, interpret=True)
-    kern = kern.reshape(b, h, s, d).transpose(0, 2, 1, 3)
-    np.testing.assert_allclose(np.asarray(blockwise), np.asarray(kern),
-                               atol=2e-5, rtol=1e-4)

@@ -372,3 +372,105 @@ def test_task_exception_does_not_deadlock_wait_all():
     assert all(t.result == i for i, t in enumerate(tasks) if i != 3)
     s = sched.merged_stats()
     assert s["tasks_run"] == s["spawned"] == 6
+
+
+# ------------------------------------------------- staleness priorities
+def test_clustered_drains_stale_hot_bucket_first():
+    """Streaming re-mine: the bucket whose head task carries the
+    highest staleness priority is drained first (depth only breaks
+    ties) — stale-hot prefixes converge before cold ones."""
+    from repro.core.scheduler import Task
+    pol = ClusteredPolicy(1, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr="cold", priority=0.0, depth=5))
+    pol.put(0, Task(lambda: None, (), attr="warm", priority=10.0))
+    pol.put(0, Task(lambda: None, (), attr="hot", priority=90.0))
+    pol.put(0, Task(lambda: None, (), attr="warm", priority=10.0))
+    assert pol.get(0).attr == "hot"
+    assert pol.get(0).attr == "warm"
+    assert pol.get(0).attr == "warm"            # drain before switching
+    assert pol.get(0).attr == "cold"
+
+
+def test_priority_zero_keeps_first_nonempty_rule():
+    """Batch mining spawns everything at priority 0: selection stays
+    the paper's O(1) first-non-empty rule (no scan)."""
+    from repro.core.scheduler import Task
+    pol = ClusteredPolicy(1, cluster_of=lambda a: a)
+    for attr in ["a", "b", "c"]:
+        pol.put(0, Task(lambda: None, (), attr=attr))
+    assert pol.get(0).attr == "a"
+
+
+def test_nn_priority_dominates_overlap():
+    """NN policy: a stale-hot bucket beats a nearer (overlapping) cold
+    one; with equal priorities the overlap rule is unchanged."""
+    from repro.core.scheduler import NearestNeighborPolicy, Task
+    pol = NearestNeighborPolicy(1, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr=(5, 6)))
+    assert pol.get(0).attr == (5, 6)            # sets _last
+    pol.put(0, Task(lambda: None, (), attr=(5, 9)))   # overlap 1, cold
+    pol.put(0, Task(lambda: None, (), attr=(7, 8), priority=50.0))
+    assert pol.get(0).attr == (7, 8)            # hot beats near
+    pol.put(0, Task(lambda: None, (), attr=(7, 9)))
+    assert pol.get(0).attr == (7, 9)            # equal prio: overlap
+                                                # with _last == (7, 8)
+
+
+def test_steal_unaccounts_hot_tasks():
+    from repro.core.scheduler import Task
+    pol = ClusteredPolicy(2, cluster_of=lambda a: a)
+    pol.put(0, Task(lambda: None, (), attr="x", priority=5.0))
+    pol.put(0, Task(lambda: None, (), attr="x", priority=5.0))
+    assert pol._hot[0] == 2
+    got = pol.steal(1, 0)
+    assert len(got) == 2 and pol._hot[0] == 0
+
+
+# ------------------------------------------------- stable placement
+def _placement_subprocess(hashseed: str) -> str:
+    """Spawn placements for string-keyed clusters, in a subprocess with
+    a fixed PYTHONHASHSEED (the salted-hash regression trigger)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    code = textwrap.dedent("""
+        from repro.core.scheduler import ClusteredPolicy, TaskScheduler
+        pol = ClusteredPolicy(5, cluster_of=lambda a: a)
+        placed = []
+        orig = pol.put
+        pol.put = lambda w, t: (placed.append((w, t.attr)), orig(w, t))
+        sched = TaskScheduler(5, pol)
+        for i in range(24):
+            sched.spawn(lambda: None, attr=f"prefix-{i}")
+        sched.wait_all(); sched.shutdown()
+        spawn_puts = sorted(p for p in placed
+                            if str(p[1]).startswith("prefix-"))
+        print(";".join(f"{a}:{w}" for w, a in spawn_puts))
+    """)
+    env = {"PYTHONPATH": "src", "PYTHONHASHSEED": hashseed,
+           "JAX_PLATFORMS": "cpu",
+           "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=120,
+                       env=env, cwd=os.path.dirname(
+                           os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout.strip()
+
+
+def test_external_spawn_placement_reproducible_across_processes():
+    """Driver-thread spawns place by a stable hash of the cluster key:
+    two processes with DIFFERENT hash salts must place every task on
+    the same worker (hash() of a str would not)."""
+    a = _placement_subprocess("1")
+    b = _placement_subprocess("2")
+    assert a and a == b
+
+
+def test_stable_hash_is_salt_independent_for_common_key_types():
+    from repro.core.scheduler import stable_hash
+    # pinned values: changing these breaks cross-process placement
+    assert stable_hash(("a", 1)) == stable_hash(("a", 1))
+    assert stable_hash(42) != stable_hash(43)
+    assert isinstance(stable_hash("prefix"), int)

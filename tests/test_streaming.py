@@ -1,0 +1,345 @@
+"""Streaming subsystem: ingest/refresh equivalence vs batch mining,
+border classification, incremental-work bounds, and snapshot serving."""
+import threading
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.fpm import mine
+from repro.core.itemsets import brute_force_frequent
+from repro.core.streaming import (PatternServer, PatternSnapshot,
+                                  StreamingMiner)
+from repro.core.tidlist import pack_database
+
+RNG = np.random.default_rng(7)
+
+
+def rand_db(n, items=16, seed=7):
+    rng = np.random.default_rng(seed)
+    return [sorted(rng.choice(items, size=rng.integers(2, 7),
+                              replace=False).tolist())
+            for _ in range(n)]
+
+
+def batch_mine(db, n_items, ms, **kw):
+    return mine(pack_database(db, n_items), ms, **kw)[0]
+
+
+# ------------------------------------------------- equivalence matrix
+@pytest.mark.parametrize("granularity,policy", [
+    ("bucket", "clustered"), ("bucket", "nn"),
+    ("depth-first", "clustered"), ("depth-first", "nn"),
+    ("candidate", "clustered"), ("bucket", "fifo"),
+])
+def test_refresh_matches_batch_mine(granularity, policy):
+    """The correctness anchor: after ANY ingest sequence, refresh()
+    equals a from-scratch mine() on the concatenated database — same
+    itemsets, same supports — at every generation."""
+    full = rand_db(400)
+    cuts = [250, 320, 360, 400]
+    ms = 40
+    sm = StreamingMiner(16, ms, initial_db=full[:cuts[0]],
+                        granularity=granularity, policy=policy,
+                        n_workers=3, max_k=5)
+    prev_cut = cuts[0]
+    for cut in cuts:
+        if cut != prev_cut:
+            sm.ingest(full[prev_cut:cut])
+            prev_cut = cut
+        rep = sm.refresh()
+        ref = batch_mine(full[:cut], 16, ms, granularity=granularity,
+                         policy=policy, n_workers=3, max_k=5)
+        assert dict(sm.snapshot.supports) == ref
+        assert rep.frequent == len(ref)
+        assert sm.snapshot.n_transactions == cut
+
+
+@pytest.mark.parametrize("granularity", ["bucket", "depth-first"])
+def test_refresh_matches_on_logical_two_shard_mesh(granularity):
+    """The equivalence holds when the SAME streaming engine runs over
+    a logical 2-shard mesh (sharded arena, per-shard dispatchers,
+    device-affine workers)."""
+    full = rand_db(400, seed=11)
+    ms = 40
+    sm = StreamingMiner(16, ms, initial_db=full[:300],
+                        granularity=granularity, n_workers=4,
+                        max_k=5, mesh=2)
+    sm.refresh()
+    sm.ingest(full[300:])
+    sm.refresh()
+    ref = batch_mine(full, 16, ms, granularity=granularity,
+                     n_workers=4, max_k=5, mesh=2)
+    assert dict(sm.snapshot.supports) == ref
+
+
+def test_multiple_ingests_between_refreshes_fold_together():
+    full = rand_db(300, seed=3)
+    ms = 30
+    sm = StreamingMiner(16, ms, initial_db=full[:200], max_k=4)
+    sm.refresh()
+    sm.ingest(full[200:240])
+    sm.ingest(full[240:270])
+    sm.ingest(full[270:])
+    assert sm.needs_refresh
+    rep = sm.refresh()
+    assert rep.segments_refreshed == (1, 2, 3)
+    assert not sm.needs_refresh
+    assert dict(sm.snapshot.supports) == batch_mine(full, 16, ms,
+                                                    max_k=4)
+
+
+def test_empty_initial_db_then_ingest():
+    """A miner may start with nothing: generation 0 serves the empty
+    snapshot, and the first refresh after ingest equals batch mining
+    the batches alone."""
+    sm = StreamingMiner(16, 20, max_k=4)
+    assert sm.snapshot.generation == 0
+    assert dict(sm.snapshot.supports) == {}
+    assert sm.refresh().frequent == 0           # refresh of nothing
+    db = rand_db(200, seed=5)
+    sm.ingest(db[:150])
+    sm.ingest(db[150:])
+    sm.refresh()
+    assert dict(sm.snapshot.supports) == batch_mine(db, 16, 20, max_k=4)
+
+
+def test_ingest_rejects_out_of_range_items():
+    sm = StreamingMiner(8, 2)
+    with pytest.raises(ValueError, match="item id"):
+        sm.ingest([[1, 2], [7, 9]])
+
+
+# ------------------------------------------------- incremental bounds
+def retail_stream(n=3000, cut=2980):
+    from repro.data.transactions import load
+    db, p = load("retail", seed=0)
+    db = db[:n]
+    return db, db[:cut], db[cut:], p.n_items
+
+
+@pytest.mark.parametrize("granularity", ["bucket", "depth-first"])
+def test_incremental_refresh_touches_fewer_rows(granularity):
+    """A small ingest invalidates few equivalence classes: the refresh
+    must read strictly fewer bitmap rows (and far fewer bytes) than a
+    from-scratch re-mine at the same granularity, and most candidates
+    must be answered from the reuse store without any sweep."""
+    db, init, batch, n_items = retail_stream()
+    ms = 30
+    sm = StreamingMiner(n_items, ms, initial_db=init, max_k=4,
+                        n_workers=3, granularity=granularity)
+    sm.refresh()
+    rep = sm.refresh()                          # nothing pending:
+    assert rep.rows_touched == 0                # zero rows re-read
+    sm.ingest(batch)
+    rep = sm.refresh()
+    ref, full = mine(pack_database(db, n_items), ms, max_k=4,
+                     n_workers=3, granularity=granularity)
+    assert dict(sm.snapshot.supports) == ref
+    assert rep.rows_touched < full.rows_touched
+    assert rep.bytes_swept < full.bytes_swept
+    assert rep.reused > rep.swept_delta + rep.swept_full
+
+
+def test_ingest_h2d_bills_only_the_new_segment():
+    """Eager device backing: an ingest uploads exactly the new
+    segment's base-bitmap payload — never the whole arena again."""
+    db, init, batch, n_items = retail_stream(n=1200, cut=1100)
+    sm = StreamingMiner(n_items, 20, initial_db=init, max_k=3,
+                        arena="jax", backend="pallas-interpret",
+                        n_workers=2)
+    base_h2d = sm.arena.h2d_bytes               # eager initial upload
+    assert base_h2d == sm.arena.seg_nbytes(0)
+    rep = sm.ingest(batch)
+    assert rep.h2d_bytes == rep.payload_bytes == sm.arena.seg_nbytes(1)
+    assert rep.payload_bytes < base_h2d         # not the whole arena
+    sm.refresh()
+    assert dict(sm.snapshot.supports) == batch_mine(
+        db, n_items, 20, max_k=3)
+
+
+# ------------------------------------------------- border classification
+def test_border_classification_stayed_born_died():
+    """Fraction-based min_support: the threshold rises with the
+    database, so the border moves both ways — new itemsets are born
+    from the ingested pattern, old borderline ones die."""
+    init = [[0, 1, 2]] * 60 + [[0, 1]] * 3 + [[3, 4]] * 45
+    sm = StreamingMiner(6, 0.4, initial_db=init, max_k=4)
+    r0 = sm.refresh()
+    g1 = dict(sm.snapshot.supports)
+    assert r0.born == len(g1) > 0
+    assert (3, 4) in g1                         # 45 >= ms = 0.4*108 = 43
+    # ingest tilts the database toward {0,1,2,5}: |D| grows, ms rises
+    # to 0.4*198 = 79 — {3,4} (still 45) falls off the border while
+    # the 5-itemsets (90) climb over it
+    sm.ingest([[0, 1, 2, 5]] * 90)
+    r1 = sm.refresh()
+    g2 = dict(sm.snapshot.supports)
+    assert r1.died == len(set(g1) - set(g2)) > 0    # (3,4) fell under ms
+    assert r1.born == len(set(g2) - set(g1)) > 0    # (5,)-itemsets born
+    assert r1.stayed == len(set(g1) & set(g2)) > 0
+    assert (3, 4) not in g2 and (0, 1, 5) in g2
+
+
+def test_fixed_absolute_threshold_nothing_dies():
+    full = rand_db(300, seed=9)
+    sm = StreamingMiner(16, 25, initial_db=full[:200], max_k=4)
+    sm.refresh()
+    g1 = set(sm.snapshot.supports)
+    sm.ingest(full[200:])
+    rep = sm.refresh()
+    assert rep.died == 0                        # supports only grow
+    assert g1 <= set(sm.snapshot.supports)
+
+
+# ------------------------------------------------- serving layer
+def test_snapshot_swap_is_atomic_queries_see_old_generation():
+    """While a refresh is mining, the server answers from the previous
+    published generation; the swap is one reference assignment."""
+    full = rand_db(400, seed=13)
+    ms = 40
+    sm = StreamingMiner(16, ms, initial_db=full[:300], max_k=4)
+    sm.refresh()
+    srv = PatternServer(sm)
+    g1 = dict(srv.frequent())
+    sm.ingest(full[300:])
+    seen = {}
+
+    def probe(next_snap):
+        # called after mining, immediately BEFORE the swap: the server
+        # still serves generation 1 even though generation 2 is built
+        seen["gen"] = srv.snapshot.generation
+        seen["supports"] = dict(srv.frequent())
+        seen["next"] = next_snap.generation
+
+    sm.refresh(before_publish=probe)
+    assert seen["gen"] == 1 and seen["next"] == 2
+    assert seen["supports"] == g1
+    assert srv.snapshot.generation == 2
+    assert dict(srv.frequent()) == batch_mine(full, 16, ms, max_k=4)
+
+
+def test_queries_during_concurrent_refresh_are_consistent():
+    """Thread-level smoke: a query loop racing a real refresh must only
+    ever observe fully-published generations (monotone, self-consistent
+    snapshots)."""
+    full = rand_db(600, seed=17)
+    ms = 50
+    sm = StreamingMiner(16, ms, initial_db=full[:400], max_k=5,
+                        n_workers=3)
+    sm.refresh()
+    g1 = dict(sm.snapshot.supports)
+    sm.ingest(full[400:])
+    srv = PatternServer(sm)
+    stop = threading.Event()
+    bad = []
+
+    def query_loop():
+        while not stop.is_set():
+            snap = srv.snapshot
+            if snap.generation == 1 and dict(snap.supports) != g1:
+                bad.append("gen1 mutated")
+            if snap.generation not in (1, 2):
+                bad.append(f"gen {snap.generation}")
+
+    t = threading.Thread(target=query_loop)
+    t.start()
+    try:
+        sm.refresh()
+    finally:
+        stop.set()
+        t.join()
+    assert not bad
+    assert srv.snapshot.generation == 2
+
+
+def test_snapshot_query_api():
+    snap = PatternSnapshot(3, 100, 10, {
+        (1,): 50, (2,): 40, (1, 2): 30, (1, 3): 20, (1, 2, 4): 12})
+    assert snap.support((2, 1)) == 30           # order-insensitive
+    assert snap.support((9,)) is None
+    assert snap.top_k((1,), 2) == [((1, 2), 30), ((1, 3), 20)]
+    assert snap.top_k((), 1) == [((1,), 50)]
+    assert snap.frequent(25) == {(1,): 50, (2,): 40, (1, 2): 30}
+    assert len(snap.frequent()) == 5
+
+
+def test_pattern_server_counts_queries():
+    sm = StreamingMiner(8, 2, initial_db=[[0, 1], [0, 1], [1, 2]])
+    sm.refresh()
+    srv = PatternServer(sm)
+    srv.support((0, 1))
+    srv.top_k((0,))
+    srv.frequent()
+    assert srv.queries == 3
+
+
+# ------------------------------------------------- property tests
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_property_interleaved_ingest_refresh_equals_batch(data):
+    """Random databases, random split points, random refresh cadence,
+    both incremental granularities: the final refresh always equals
+    the brute-force frequent set of the concatenation."""
+    n_items = data.draw(st.integers(5, 10))
+    n_tx = data.draw(st.integers(8, 60))
+    seed = data.draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    db = [sorted(rng.choice(n_items,
+                            size=rng.integers(1, min(5, n_items) + 1),
+                            replace=False).tolist())
+          for _ in range(n_tx)]
+    n_cuts = data.draw(st.integers(1, 4))
+    cuts = sorted(data.draw(
+        st.lists(st.integers(0, n_tx), min_size=n_cuts, max_size=n_cuts)))
+    granularity = data.draw(st.sampled_from(["bucket", "depth-first"]))
+    ms = data.draw(st.integers(1, max(1, n_tx // 3)))
+    sm = StreamingMiner(n_items, ms, initial_db=db[:cuts[0]],
+                        granularity=granularity, n_workers=2, max_k=4)
+    prev = cuts[0]
+    for cut in cuts[1:]:
+        sm.ingest(db[prev:cut])
+        prev = cut
+        if data.draw(st.booleans()):            # refresh sometimes:
+            sm.refresh()                        # pending segs pile up
+    sm.ingest(db[prev:])
+    sm.refresh()
+    want = {x: s for x, s in brute_force_frequent(db, ms, max_k=4).items()}
+    assert dict(sm.snapshot.supports) == want
+
+
+def test_failed_refresh_leaves_state_intact_and_retry_is_exact():
+    """A refresh that dies mid-mine (backend error) must not corrupt
+    the miner: supports/known are committed only at publish, so a
+    retry re-folds the SAME pending segments once — no double-counted
+    deltas, and the retried generation still equals batch mining."""
+    from repro.core import fpm as fpm_mod
+    from repro.core.join_backend import NumpyBackend
+
+    full = rand_db(300, seed=21)
+    ms = 30
+    sm = StreamingMiner(16, ms, initial_db=full[:250], max_k=4,
+                        n_workers=2)
+    sm.refresh()
+    g1 = dict(sm.snapshot.supports)
+    sm.ingest(full[250:])
+
+    class Bomb(NumpyBackend):
+        def sweep_many(self, arena, requests):
+            raise RuntimeError("mid-refresh boom")
+
+    orig = fpm_mod.resolve_backend
+    fpm_mod.resolve_backend = lambda spec: Bomb()
+    try:
+        with pytest.raises(RuntimeError, match="boom"):
+            sm.refresh()
+    finally:
+        fpm_mod.resolve_backend = orig
+    # nothing published, nothing folded, queries still serve gen 1
+    assert sm.snapshot.generation == 1
+    assert dict(sm.snapshot.supports) == g1
+    assert sm.needs_refresh
+    # the retry folds the pending segment exactly once
+    sm.refresh()
+    assert dict(sm.snapshot.supports) == batch_mine(full, 16, ms,
+                                                    max_k=4)
