@@ -21,9 +21,12 @@ transactions against a large corpus), then
               previous published generation and never block) and at
               idle, plus the count of mid-refresh queries served.
 
-``--smoke`` (CI) shrinks the datasets and asserts the two acceptance
-invariants: incremental refresh touches fewer rows than the full
-re-mine, and ingest h2d equals the new segment's bytes.
+``--smoke`` (CI) shrinks the datasets and asserts the acceptance
+invariants: incremental refresh touches fewer rows AND finishes
+faster (``refresh_speedup > 1.0``) than the full re-mine on the
+small-delta scenario, ingest h2d equals the new segment's bytes, and
+segment compaction keeps the arena's segment count bounded across
+repeated ingest/refresh cycles.
 
 Emits ``BENCH_streaming.json``.
 """
@@ -48,7 +51,7 @@ SETUP = {
     "mushroom": (8, 0.15, 600, 0),
 }
 SMOKE_SETUP = {
-    "retail":   (1, 0.012, 50, 4000),
+    "retail":   (1, 0.012, 50, 6000),
     "mushroom": (1, 0.16, 60, 4000),
 }
 # The fewer-rows acceptance invariant holds on the SPARSE long-tail
@@ -154,6 +157,12 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
         rec["query_during_refresh"] = _percentiles(ref_lat)
         rec["queries_during_refresh"] = len(ref_lat)
         rec["generations_seen_during_refresh"] = sorted(gens)
+        rec["compacted_segments"] = rep.compacted_segments
+        rec["compaction_bytes"] = rep.compaction_bytes
+        # requests per dispatcher flush DURING the refresh: the delta
+        # path must coalesce its tuple-prefix sweeps into wide bursts,
+        # not trickle per-candidate launches at occupancy ~1
+        rec["refresh_batch_occupancy"] = rep.metrics.batch_occupancy
 
         # from-scratch baseline on the concatenated database
         bm = pack_database(db, n_items)
@@ -164,6 +173,7 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
         rec["full_wall_s"] = time.time() - t0
         rec["full_rows_touched"] = full_met.rows_touched
         rec["full_bytes_swept"] = full_met.bytes_swept
+        rec["full_batch_occupancy"] = full_met.batch_occupancy
         rec["refresh_speedup"] = rec["full_wall_s"] / max(
             rec["refresh_wall_s"], 1e-9)
         rec["rows_ratio"] = rec["refresh_rows_touched"] / max(
@@ -183,6 +193,28 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
                              "arena_total_bytes":
                                  sm2.arena.n_base * sm2.arena.n_words
                                  * 4}
+
+        # sustained ingest/refresh cycles: segment compaction must keep
+        # the arena's segment count bounded (without it every cycle
+        # leaves one more narrow segment, and delta sweeps degrade into
+        # per-segment launch trickles)
+        n_cycles = 6
+        chunk = max(1, batch_tx // 4)
+        cyc_walls: List[float] = []
+        cyc_compacted = 0
+        cyc_bytes = 0
+        for c in range(n_cycles):
+            sm.ingest([db[(c * chunk + j) % len(db)]
+                       for j in range(chunk)])
+            r = sm.refresh()
+            cyc_walls.append(r.wall_s)
+            cyc_compacted += r.compacted_segments
+            cyc_bytes += r.compaction_bytes
+        rec["cycles"] = {"n": n_cycles, "batch_tx": chunk,
+                         "refresh_wall_s": cyc_walls,
+                         "compacted_segments": cyc_compacted,
+                         "compaction_bytes": cyc_bytes,
+                         "final_segments": sm.arena.n_segments}
         rows.append(rec)
 
         print(f"{name:10s} ingest {rec['ingest_tx_per_s']:9.0f} tx/s | "
@@ -204,6 +236,14 @@ def run(datasets: List[str], *, n_workers: int = 4, max_k: int = 5,
                         "scenario")
                 assert rec["refresh_bytes_swept"] < \
                     rec["full_bytes_swept"]
+                assert rec["refresh_speedup"] > 1.0, (
+                    "incremental refresh must beat the full re-mine "
+                    "wall clock on the small-delta scenario, got "
+                    f"{rec['refresh_speedup']:.3f}")
+            assert rec["cycles"]["final_segments"] <= 3, (
+                "segment compaction must bound the arena's segment "
+                f"count, got {rec['cycles']['final_segments']}")
+            assert rec["cycles"]["compacted_segments"] > 0
             h = rec["ingest_h2d"]
             assert h["h2d_bytes"] == h["segment_payload_bytes"], \
                 "ingest must upload exactly the new segment"

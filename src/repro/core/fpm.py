@@ -137,16 +137,26 @@ class _PrefixCache:
     structurally)."""
 
     def __init__(self, arena: BitmapArena, maxsize: int = 32,
-                 shard: int = 0):
+                 shard: int = 0, upto: Optional[int] = None):
         self.arena = arena
         self.maxsize = maxsize
         self.shard = shard        # rows this cache pushes are owned by
                                   # the caching worker's device shard
+        self.upto = upto          # segment boundary: builds read (and
+                                  # pushed rows cover) only the first
+                                  # ``upto`` segments, so an ingest
+                                  # landing mid-refresh cannot change a
+                                  # row's width between two reads
         self.d: "collections.OrderedDict[Itemset, int]" = \
             collections.OrderedDict()
         self.hits = 0
         self.misses = 0
         self.partial_hits = 0
+
+    def _row(self, h: int) -> np.ndarray:
+        if self.upto is None:
+            return self.arena.row(h)
+        return self.arena.row_upto(h, self.upto)
 
     def _put(self, prefix: Itemset, handle: int):
         self.d[prefix] = handle
@@ -172,17 +182,17 @@ class _PrefixCache:
             if parent in d:
                 d.move_to_end(parent)
                 self.partial_hits += 1
-                bm = arena.row(d[parent])
+                bm = self._row(d[parent])
                 for item in prefix[cut:]:
-                    bm = bm & arena.row(item)
+                    bm = bm & self._row(item)
                 rows_read = len(prefix) - cut
                 break
         else:
-            bm = arena.row(prefix[0]).copy()
+            bm = self._row(prefix[0]).copy()
             for item in prefix[1:]:
-                bm &= arena.row(item)
+                bm &= self._row(item)
             rows_read = len(prefix)
-        h = arena.push(bm, shard=self.shard)
+        h = arena.push(bm, shard=self.shard, cover=self.upto)
         arena.retain(h)           # the caller's reference, BEFORE _put:
         self._put(prefix, h)      # maxsize=0 evicts-and-releases at once
         return h, rows_read
@@ -273,22 +283,64 @@ class DeltaPlan:
     ``known`` maps every candidate ever swept (frequent AND negative
     border) to its exact support over the segments refreshed so far —
     the engines update it in place (under ``lock`` on the depth-first
-    path, where class tasks merge concurrently). ``is_dirty(c)`` says
-    whether c's support may have changed (every item of c occurs in the
-    pending segments); ``segments`` are the pending segment ids a
-    dirty candidate's delta sweep reads. ``priority_of(prefix)`` is the
-    staleness-hotness carried on spawned tasks — the clustered
-    policies drain stale-hot buckets first. Clean known candidates are
-    never swept at all: that is the whole point."""
+    path, where class tasks merge concurrently). ``dirty_items`` are
+    the items occurring in the pending segments: a candidate's support
+    may have changed iff EVERY item of it is dirty. ``segments`` are
+    the pending segment ids a dirty candidate's delta sweep reads;
+    ``base_segments`` are the segments a FULL (fresh-candidate) sweep
+    reads — the refresh generation boundary, so an ingest landing
+    mid-refresh never leaks into this generation's supports.
+    ``priority_of(prefix)`` (optional) is the staleness-hotness carried
+    on spawned tasks — the clustered policies drain stale-hot buckets
+    first; None skips priority stamping entirely (an all-fresh first
+    generation would otherwise pay the priority-drain scan for
+    nothing). Clean known candidates are never swept at all: that is
+    the whole point."""
     known: Dict[Itemset, int]
-    is_dirty: Callable[[Itemset], bool]
+    dirty_items: frozenset
     segments: Tuple[int, ...]
-    priority_of: Callable[[Itemset], float]
+    base_segments: Tuple[int, ...]
+    priority_of: Optional[Callable[[Itemset], float]] = None
     lock: threading.Lock = field(default_factory=threading.Lock)
     # refresh-side counters (how much re-mining the plan avoided)
     swept_full: int = 0
     swept_delta: int = 0
     reused: int = 0
+
+    def is_dirty(self, c: Itemset) -> bool:
+        d = self.dirty_items
+        return all(i in d for i in c)
+
+    def classify_buckets(self, plan: List[Bucket]
+                         ) -> Tuple[List[Tuple[Itemset, int]],
+                                    List[Bucket], List[Itemset]]:
+        """Split a level's prefix buckets into (clean ``(c, support)``
+        pairs, dirty sub-buckets, fresh candidates) in one pass over
+        the already-grouped plan. The prefix's dirtiness is probed
+        ONCE per bucket — the per-candidate hot loop is one
+        ``known.get`` plus one set probe for the extension item, and
+        dirty extensions stay bucketed so the delta path never
+        re-groups them."""
+        known, ditems = self.known, self.dirty_items
+        clean: List[Tuple[Itemset, int]] = []
+        dirty: List[Bucket] = []
+        fresh: List[Itemset] = []
+        for b in plan:
+            p = b.prefix
+            p_dirty = all(i in ditems for i in p)
+            d_exts: List[int] = []
+            for e in b.exts:
+                c = p + (e,)
+                ks = known.get(c)
+                if ks is None:
+                    fresh.append(c)
+                elif p_dirty and e in ditems:
+                    d_exts.append(e)
+                else:
+                    clean.append((c, ks))
+            if d_exts:
+                dirty.append(Bucket(b.key, p, tuple(d_exts)))
+        return clean, dirty, fresh
 
 
 class MiningRun:
@@ -447,9 +499,16 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
     *clean known* (support unchanged — zero rows touched), *dirty
     known* (delta-swept over only the pending segments, support
     accumulated into ``delta.known``), and *fresh* (never swept —
-    full-width sweep). Tasks carry ``delta.priority_of`` so the
-    clustered policies drain stale-hot prefixes first."""
+    full sweep over the generation-boundary segments). Dirty buckets
+    are CHUNKED: one scheduler task carries ~hundreds of buckets and
+    submits them as a burst of tuple-prefix sweeps — the backend
+    AND-reduces each prefix's base rows over only the pending
+    segments, so the delta path never builds a full-width prefix
+    intersection and its launches fill like the full path's. Tasks
+    carry ``delta.priority_of`` (when set) so the clustered policies
+    drain stale-hot prefixes first."""
     n_w = store.n_words
+    upto = len(delta.base_segments) if delta is not None else None
     lock = threading.Lock()
 
     def _thread_cache() -> _PrefixCache:
@@ -459,7 +518,8 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             with lock:
                 c = caches.setdefault(
                     tid, _PrefixCache(store, cache_size,
-                                      shard=sched.worker_device()))
+                                      shard=sched.worker_device(),
+                                      upto=upto))
         return c
 
     def _prefix_handle(cache: _PrefixCache, prefix: Itemset
@@ -535,6 +595,51 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                             priority=prio(c[:-1]) if prio else 0.0)
                 for c in cands]
 
+    def delta_chunk_task(chunk: List[Bucket]
+                         ) -> List[Tuple[Itemset, int]]:
+        """Coalesced dirty-candidate burst: each bucket in the chunk
+        becomes ONE tuple-prefix sweep over the pending segments, and
+        the whole chunk executes as a single burst — on this worker
+        thread for host backends, or as one dispatcher flush for
+        kernel backends. No prefix bitmap is ever built host-side."""
+        st = sched.worker_stats()
+        disp = dispatchers[sched.worker_device()]
+        counts_per_bucket = disp.sweep_local(
+            [((b.prefix if len(b.prefix) > 1 else b.prefix[0]),
+              b.exts) for b in chunk],
+            segments=delta.segments)
+        st.sweeps_submitted += len(chunk)
+        out: List[Tuple[Itemset, int]] = []
+        rows = 0
+        for b, counts in zip(chunk, counts_per_bucket):
+            rows += len(b.prefix) + len(b.exts)
+            out.extend((b.prefix + (e,), int(s))
+                       for e, s in zip(b.exts, counts))
+        st.rows_touched += rows
+        st.bytes_swept += rows_to_bytes(rows, _seg_w(delta.segments))
+        return out
+
+    def _spawn_delta_chunks(plan: List[Bucket]) -> Callable[
+            [], List[Tuple[Itemset, int]]]:
+        """Spawn a handful of chunk tasks (≈4 per worker) over the
+        already-classified dirty buckets instead of one task per
+        bucket — per-task scheduler and future overhead is what made
+        the delta path slower than the full path it was supposed to
+        beat."""
+        if not plan:
+            return lambda: []
+        metrics.buckets += len(plan)
+        n_chunks = max(1, 4 * sched.n)
+        size = max(1, -(-len(plan) // n_chunks))
+        tasks = [sched.spawn(delta_chunk_task, plan[i:i + size],
+                             attr=(plan[i].key, plan[i].prefix))
+                 for i in range(0, len(plan), size)]
+
+        def collect():
+            _raise_task_errors(tasks)
+            return [pair for t in tasks for pair in t.result]
+        return collect
+
     def _spawn_sweeps(cands, segments) -> Callable[
             [], List[Tuple[Itemset, int]]]:
         """Spawn sweeps for ``cands`` (bucket- or candidate-grained)
@@ -575,20 +680,14 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             sched.wait_all()
             level = collect()
         else:
-            fresh, dirty = [], []
-            for c in cands:
-                ks = delta.known.get(c)
-                if ks is None:
-                    fresh.append(c)
-                elif delta.is_dirty(c):
-                    dirty.append(c)
-                else:
-                    level.append((c, ks))       # clean: zero rows read
-            delta.reused += len(level)
+            clean, dirty, fresh = delta.classify_buckets(
+                group_by_prefix(cands))
+            level.extend(clean)                 # clean: zero rows read
+            delta.reused += len(clean)
             delta.swept_full += len(fresh)
-            delta.swept_delta += len(dirty)
-            collect_fresh = _spawn_sweeps(fresh, None)
-            collect_dirty = _spawn_sweeps(dirty, delta.segments)
+            delta.swept_delta += sum(len(b.exts) for b in dirty)
+            collect_fresh = _spawn_sweeps(fresh, delta.base_segments)
+            collect_dirty = _spawn_delta_chunks(dirty)
             sched.wait_all()
             for c, s in collect_fresh():
                 delta.known[c] = s
@@ -680,8 +779,11 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                         supports.append((e, ks))    # clean: zero rows
                 n_clean = len(supports)
                 # both sweeps go out before either result is awaited,
-                # so they share a dispatcher flush
-                ffut = (disp.submit(ph, tuple(fresh_e))
+                # so they share a dispatcher flush; fresh sweeps read
+                # the generation-boundary segments, never ones an
+                # overlapped ingest appended mid-refresh
+                ffut = (disp.submit(ph, tuple(fresh_e),
+                                    segments=delta.base_segments)
                         if fresh_e else None)
                 dfut = (disp.submit(ph, tuple(dirty_e),
                                     segments=delta.segments)
@@ -749,7 +851,9 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                                 attr=(itemset_hash(cprefix), cprefix),
                                 depth=len(cprefix),
                                 priority=(delta.priority_of(cprefix)
-                                          if delta is not None else 0.0),
+                                          if delta is not None
+                                          and delta.priority_of
+                                          else 0.0),
                                 handles=(ch,)))
                 children.pop(0)       # ownership moved to the child task
             if spawned:
@@ -778,7 +882,8 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                             attr=(itemset_hash((it,)), (it,)),
                             depth=1,
                             priority=(delta.priority_of((it,))
-                                      if delta is not None else 0.0))
+                                      if delta is not None
+                                      and delta.priority_of else 0.0))
             with lock:    # already-running roots append concurrently
                 all_tasks.append(t)
     sched.wait_all()                            # the ONLY wait

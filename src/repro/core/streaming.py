@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from types import MappingProxyType
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -74,26 +74,34 @@ class PatternSnapshot:
 
     ``supports`` maps every frequent itemset (singletons included) to
     its exact support over the ``n_transactions`` the generation
-    covers. A prefix index for ``top_k`` is built once at publish
-    time."""
+    covers. The prefix index for ``top_k`` is built lazily on the
+    first ranked query — publishing a generation costs one dict copy,
+    not an index build inside the refresh wall (a racing build is
+    benign: both threads produce the identical index and the reference
+    store is atomic)."""
     generation: int
     n_transactions: int
     min_support: int
     supports: Mapping[Itemset, int]
-    _by_prefix: Mapping[Itemset, tuple] = field(init=False, repr=False,
-                                                compare=False)
 
     def __post_init__(self):
         object.__setattr__(self, "supports",
                            MappingProxyType(dict(self.supports)))
-        idx: Dict[Itemset, List[Tuple[int, Itemset]]] = {}
-        for x, s in self.supports.items():
-            for cut in range(len(x)):
-                idx.setdefault(x[:cut], []).append((-s, x))
-        by_prefix = {p: tuple((x, -ns) for ns, x in sorted(v))
-                     for p, v in idx.items()}
-        object.__setattr__(self, "_by_prefix",
-                           MappingProxyType(by_prefix))
+        object.__setattr__(self, "_by_prefix_cache", None)
+
+    @property
+    def _by_prefix(self) -> Mapping[Itemset, tuple]:
+        idx = self._by_prefix_cache
+        if idx is None:
+            acc: Dict[Itemset, List[Tuple[int, Itemset]]] = {}
+            for x, s in self.supports.items():
+                for cut in range(len(x)):
+                    acc.setdefault(x[:cut], []).append((-s, x))
+            idx = MappingProxyType(
+                {p: tuple((x, -ns) for ns, x in sorted(v))
+                 for p, v in acc.items()})
+            object.__setattr__(self, "_by_prefix_cache", idx)
+        return idx
 
     def support(self, itemset: Sequence[int]) -> Optional[int]:
         """Exact support of a FREQUENT itemset; None if it was not
@@ -188,6 +196,9 @@ class RefreshReport:
     h2d_bytes: int            # arena gauge deltas for THIS refresh
     d2d_bytes: int
     wall_s: float = 0.0
+    # post-publish segment compaction (0 when the policy didn't fire)
+    compacted_segments: int = 0
+    compaction_bytes: int = 0
     metrics: Optional[MiningMetrics] = None
 
 
@@ -206,11 +217,25 @@ class StreamingMiner:
     border itemsets can die). ``mesh`` accepts the same values as
     ``fpm.mine``: None, an int (logical shards), or a jax Mesh.
 
-    ``ingest`` and ``refresh`` serialize on one lock (a segment append
-    mid-mine would leave in-flight rows without the new words);
-    queries via :attr:`snapshot` / :class:`PatternServer` are
-    lock-free. Until the first ``refresh`` the published snapshot is
-    the empty generation 0."""
+    Locking: refreshes serialize on ``_refresh_lock``; quick state
+    mutations (segment appends, counter/snapshot commits, compaction)
+    serialize on ``_state``. An ``ingest`` therefore NEVER blocks
+    behind an in-flight ``refresh`` — the refresh captures its
+    generation boundary (segment count) up front, sweeps only
+    boundary segments, and the mid-refresh batch simply lands in the
+    next generation. Queries via :attr:`snapshot` /
+    :class:`PatternServer` are lock-free. Until the first ``refresh``
+    the published snapshot is the empty generation 0.
+
+    Segment compaction (LSM-style): every publish may fold the
+    refreshed (cold) segments back into one wide store —
+    ``compact_segments`` is the cadence bound (more cold segments than
+    this always compacts) and ``compact_ratio`` the size-ratio bound
+    (a cold tail at most this fraction of the lead segment's width is
+    cheap to fold, so it folds immediately). The repack bytes are
+    billed in the arena's ``compaction_bytes`` gauge and reported per
+    refresh. Set ``compact_ratio=0.0`` and a huge ``compact_segments``
+    to disable."""
 
     def __init__(self, n_items: int, min_support, *,
                  initial_db: Sequence[Sequence[int]] = (),
@@ -218,7 +243,9 @@ class StreamingMiner:
                  max_k: int = 6, granularity: str = "bucket",
                  backend: str = "auto", arena: str = "auto",
                  cache_size: int = 32, max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US, mesh=None):
+                 flush_us: float = FLUSH_US, mesh=None,
+                 compact_segments: int = 8,
+                 compact_ratio: float = 0.5):
         if n_items < 1:
             raise ValueError(f"n_items must be >= 1, got {n_items}")
         self.n_items = n_items
@@ -235,6 +262,7 @@ class StreamingMiner:
         self.arena = BitmapArena.from_bitmaps(
             bitmaps, backing=arena, n_shards=n_shards, devices=devices)
         self.n_transactions = len(initial_db)
+        self._seg_tx = [len(initial_db)]   # transactions per segment
         self._item_support = tidlist.popcount32(bitmaps).sum(axis=1)
         # support of every candidate ever swept (|X| >= 2; frequent AND
         # negative border), exact over the refreshed segments — the
@@ -242,7 +270,10 @@ class StreamingMiner:
         self._known: Dict[Itemset, int] = {}
         self._refreshed_segments = self.arena.n_segments
         self.generation = 0
-        self._lock = threading.RLock()
+        self.compact_segments = compact_segments
+        self.compact_ratio = compact_ratio
+        self._state = threading.RLock()     # quick mutations + commits
+        self._refresh_lock = threading.Lock()   # one refresh at a time
         self._snapshot = PatternSnapshot(
             0, self.n_transactions, self._resolve_ms(), {})
 
@@ -254,11 +285,18 @@ class StreamingMiner:
 
     @property
     def needs_refresh(self) -> bool:
-        return self.arena.n_segments > self._refreshed_segments
+        # snapshot BOTH counters under the state lock: free-running
+        # reads racing a completing refresh (or a compaction) could
+        # pair a fresh segment count with a stale refreshed count and
+        # report negative/phantom pending segments
+        with self._state:
+            return self.arena.n_segments > self._refreshed_segments
 
-    def _resolve_ms(self) -> int:
+    def _resolve_ms(self, n_transactions: Optional[int] = None) -> int:
+        if n_transactions is None:
+            n_transactions = self.n_transactions
         if isinstance(self._ms_spec, float):
-            return max(1, int(self._ms_spec * self.n_transactions))
+            return max(1, int(self._ms_spec * n_transactions))
         return int(self._ms_spec)
 
     def _check_items(self, db) -> None:
@@ -274,14 +312,18 @@ class StreamingMiner:
         O(batch) work and — with eager ("jax") arena backing — exactly
         the new segment's payload in device upload; the mined results
         are stale until the next :meth:`refresh` (queries keep serving
-        the published generation)."""
+        the published generation). Never blocks behind an in-flight
+        refresh: only the brief state lock is taken, and the new
+        segment lands in the NEXT generation (the running refresh
+        sweeps only its captured boundary segments)."""
         batch = [list(t) for t in batch]
         self._check_items(batch)
-        with self._lock:
-            t0 = time.time()
+        t0 = time.time()
+        seg_bm = pack_database(batch, self.n_items)   # outside any lock
+        with self._state:
             h0 = self.arena.h2d_bytes
-            seg_bm = pack_database(batch, self.n_items)
             seg = self.arena.add_segment(seg_bm)
+            self._seg_tx.append(len(batch))
             self.n_transactions += len(batch)
             return IngestReport(
                 segment=seg, n_transactions=len(batch),
@@ -297,12 +339,22 @@ class StreamingMiner:
         refresh report; the new :class:`PatternSnapshot` is swapped in
         atomically at the end (``before_publish(snapshot)``, if given,
         runs just before the swap — tests use it to observe the
-        serving layer mid-refresh)."""
-        with self._lock:
+        serving layer mid-refresh).
+
+        The generation boundary (segment count + transaction count) is
+        captured up front under the state lock; every sweep names its
+        segments explicitly, so batches an overlapped :meth:`ingest`
+        appends mid-refresh are invisible to this generation and fold
+        in on the next one."""
+        with self._refresh_lock:
             t0 = time.time()
             arena = self.arena
-            pending = tuple(range(self._refreshed_segments,
-                                  arena.n_segments))
+            with self._state:
+                boundary = arena.n_segments
+                pending = tuple(range(self._refreshed_segments,
+                                      boundary))
+                boundary_tx = sum(self._seg_tx[:boundary])
+            base_segments = tuple(range(boundary))
             deltas = np.zeros(self.n_items, np.int64)
             for g in pending:
                 seg = arena.seg_view(g)[:self.n_items]
@@ -316,7 +368,7 @@ class StreamingMiner:
             # fronts.
             item_support = self._item_support + deltas
             known = dict(self._known)
-            ms = self._resolve_ms()
+            ms = self._resolve_ms(boundary_tx)
             prev = self._snapshot.supports
 
             def hotness(prefix: Itemset) -> float:
@@ -330,9 +382,13 @@ class StreamingMiner:
 
             plan = DeltaPlan(
                 known=known,
-                is_dirty=lambda c: all(i in dirty for i in c),
+                dirty_items=dirty,
                 segments=pending,
-                priority_of=hotness)
+                base_segments=base_segments,
+                # an empty known store means everything is fresh — no
+                # staleness to rank, and stamping priorities would only
+                # buy the priority-drain scan on every task switch
+                priority_of=hotness if known else None)
             singles: Dict[Itemset, int] = {
                 (i,): int(s) for i, s in enumerate(item_support)
                 if s >= ms}
@@ -359,24 +415,28 @@ class StreamingMiner:
                 if len(x) <= self.max_k and s >= ms:
                     final[x] = s
 
-            new_keys = set(final)
-            prev_keys = set(prev)
-            # commit point: everything below is plain assignment
-            self._item_support = item_support
-            self._known = known
-            self._refreshed_segments = arena.n_segments
+            # single-pass border classification: one membership probe
+            # per published itemset (the old two-set construction was
+            # a measurable slice of small-delta refresh wall time)
+            stayed = born = 0
+            for x in final:
+                if x in prev:
+                    stayed += 1
+                else:
+                    born += 1
+            died = len(prev) - stayed
             snapshot = PatternSnapshot(self.generation + 1,
-                                       self.n_transactions, ms, final)
+                                       boundary_tx, ms, final)
             report = RefreshReport(
                 generation=snapshot.generation,
-                n_transactions=self.n_transactions,
+                n_transactions=boundary_tx,
                 min_support=ms,
                 frequent=len(final),
                 segments_refreshed=pending,
                 dirty_items=len(dirty),
-                stayed=len(new_keys & prev_keys),
-                born=len(new_keys - prev_keys),
-                died=len(prev_keys - new_keys),
+                stayed=stayed,
+                born=born,
+                died=died,
                 reused=plan.reused,
                 swept_delta=plan.swept_delta,
                 swept_full=plan.swept_full,
@@ -386,15 +446,59 @@ class StreamingMiner:
                 d2d_bytes=metrics.d2d_bytes,
                 wall_s=time.time() - t0,
                 metrics=metrics)
+            # the hook observes the world just before the swap and may
+            # itself ingest — so it runs OUTSIDE the state lock
             if before_publish is not None:
                 before_publish(snapshot)
-            self._snapshot = snapshot       # the atomic swap
-            self.generation = snapshot.generation
+            with self._state:
+                # commit point: plain assignments, then the swap
+                self._item_support = item_support
+                self._known = known
+                self._refreshed_segments = boundary
+                self._snapshot = snapshot       # the atomic swap
+                self.generation = snapshot.generation
+                c0 = arena.compaction_bytes
+                report.compacted_segments = self._maybe_compact()
+                report.compaction_bytes = arena.compaction_bytes - c0
+            report.wall_s = time.time() - t0
             return report
 
+    # --------------------------------------------------------- compaction --
+    def _maybe_compact(self) -> int:
+        """Fold the refreshed segments into one when the policy fires
+        (caller holds the state lock, no refresh mining in flight —
+        segment ids are not referenced by any live sweep). Returns the
+        number of segments removed."""
+        r = self._refreshed_segments
+        if r < 2:
+            return 0
+        lead = self.arena.seg_words(0)
+        tail = sum(self.arena.seg_words(g) for g in range(1, r))
+        if not (r > self.compact_segments
+                or tail <= self.compact_ratio * max(lead, 1)):
+            return 0
+        return self._compact(r)
+
+    def _compact(self, upto: int) -> int:
+        removed = self.arena.compact(upto)
+        if removed:
+            self._seg_tx[:removed + 1] = [sum(self._seg_tx[:removed + 1])]
+            self._refreshed_segments -= removed
+        return removed
+
+    def compact_now(self) -> int:
+        """Force-fold every refreshed segment regardless of policy
+        (maintenance hook; also what the cadence-equivalence tests
+        drive). Returns the number of segments removed."""
+        with self._refresh_lock, self._state:
+            return self._compact(self._refreshed_segments)
+
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
-        return (f"<StreamingMiner gen={self.generation} "
-                f"tx={self.n_transactions} "
-                f"segments={self.arena.n_segments} "
-                f"pending={self.arena.n_segments - self._refreshed_segments} "
-                f"known={len(self._known)}>")
+        with self._state:
+            n_seg = self.arena.n_segments
+            pending = n_seg - self._refreshed_segments
+            return (f"<StreamingMiner gen={self.generation} "
+                    f"tx={self.n_transactions} "
+                    f"segments={n_seg} "
+                    f"pending={pending} "
+                    f"known={len(self._known)}>")

@@ -244,6 +244,8 @@ class BitmapArena:
         self.h2d_bytes = 0            # bitmap payload uploaded, total
         self.d2d_bytes = 0            # modeled cross-shard row traffic
         self.migrations = 0           # rows re-owned by migrate()
+        self.compaction_bytes = 0     # host bytes repacked by compact()
+        self.compactions = 0          # compact() calls that merged
 
     # ---------------------------------------------------------- segments --
     @property
@@ -265,6 +267,86 @@ class BitmapArena:
 
     def _covered(self, handle: int, seg: int) -> bool:
         return seg < int(self._cover[handle])
+
+    def n_words_upto(self, upto: int) -> int:
+        """Total row width (words) of the first ``upto`` segments."""
+        return sum(self._seg_words[:upto])
+
+    def compact(self, upto: int) -> int:
+        """Merge the first ``upto`` segments into one wide word-column
+        store (LSM-style). Handles, refcounts, owners and the free list
+        are untouched — only the segment axis collapses, so the
+        per-segment sweep loop and the jit shape zoo stop growing with
+        ingest count. Segments at index >= ``upto`` shift down by
+        ``upto - 1``; a row's coverage is remapped accordingly (a row
+        that covered any merged segment now covers the merged block —
+        its store content beyond the old coverage is already zero, so
+        reads stay identical). Host repack bytes are billed to
+        ``compaction_bytes``. Device mirrors are merged device-side up
+        to the least-synced row count; rows beyond that re-sync (and
+        re-bill) on the next :meth:`device_rows`, which for the
+        streaming engine's fully-synced mirrors means no extra h2d.
+
+        Must not run concurrently with sweeps that hold segment ids —
+        the streaming engine serializes it with refresh/ingest.
+        Returns the number of segments removed (``upto - 1``)."""
+        with self._lock:
+            if not 2 <= upto <= len(self._seg_words):
+                return 0
+            new_w = sum(self._seg_words[:upto])
+            merged = np.concatenate(self._stores[:upto], axis=1)
+            self._stores[:upto] = [np.ascontiguousarray(merged)]
+            self._seg_words[:upto] = [new_w]
+            self.compaction_bytes += self.n_rows * new_w * 4
+            self.compactions += 1
+            # cover remap: >= upto -> minus (upto-1); in (0, upto) -> 1
+            cov = self._cover
+            self._cover = np.where(
+                cov >= upto, cov - (upto - 1),
+                np.minimum(cov, 1)).astype(np.int32)
+            for s in range(self.n_shards):
+                self._merge_mirror(s, upto)
+            return upto - 1
+
+    def _merge_mirror(self, shard: int, upto: int) -> None:
+        # caller holds self._lock
+        dn, dev = self._dev_n[shard], self._dev[shard]
+        inv, mig = self._invalid[shard], self._migrated_in[shard]
+
+        def _remap(d: dict, merged_val) -> dict:
+            out = {0: merged_val}
+            for g in sorted(k for k in d if k >= upto):
+                out[g - (upto - 1)] = d[g]
+            return out
+        nmin = min(dn.get(g, 0) for g in range(upto))
+        self._dev_n[shard] = _remap(dn, nmin)
+        # a row stale in ANY merged segment is stale in the merged block
+        inv_m = set()
+        for g in range(upto):
+            inv_m |= {h for h in inv.get(g, ()) if h < nmin}
+        self._invalid[shard] = _remap(inv, inv_m)
+        mig_m = set()
+        for g in range(upto):
+            mig_m |= mig.get(g, set())
+        self._migrated_in[shard] = _remap(mig, mig_m)
+        if not self.device_enabled:
+            # host-only backing: residency bookkeeping merged above,
+            # no physical mirrors to touch
+            self._dev[shard] = {}
+            return
+        blocks = [dev.get(g) for g in range(upto)]
+        if nmin > 0 and all(b is not None for b in blocks):
+            import jax.numpy as jnp
+            new_dev = _remap(dev, jnp.concatenate(
+                [b[:nmin] for b in blocks], axis=1))
+        else:
+            # nothing fully mirrored yet: the merged block re-syncs
+            # from scratch on the next device_rows
+            self._dev_n[shard][0] = 0
+            self._invalid[shard][0] = set()
+            new_dev = _remap(dev, None)
+            del new_dev[0]
+        self._dev[shard] = new_dev
 
     def add_segment(self, base_bitmaps: np.ndarray) -> int:
         """Append a fresh transaction segment: ``base_bitmaps`` is the
@@ -358,19 +440,28 @@ class BitmapArena:
         self.live_extra += 1
         self.peak_live_extra = max(self.peak_live_extra, self.live_extra)
 
-    def push(self, row: np.ndarray, shard: int = 0) -> int:
-        """Append (or recycle a slot for) one full-width bitmap row
-        (``[n_words]``, the concatenation over segments); refcount 1.
-        ``shard`` records the owning shard in sharded mode."""
+    def push(self, row: np.ndarray, shard: int = 0,
+             cover: Optional[int] = None) -> int:
+        """Append (or recycle a slot for) one bitmap row; refcount 1.
+        ``shard`` records the owning shard in sharded mode. Without
+        ``cover``, ``row`` is the full-width concatenation over all
+        segments; with ``cover=c``, ``row`` spans only the first ``c``
+        segments (:meth:`n_words_upto`) and the slot is zeroed beyond —
+        an overlapped refresh pushes rows at its generation boundary
+        even after an ingest has appended newer segments."""
         with self._lock:
             slot = self._alloc_slot()
+            cov = len(self._seg_words) if cover is None else cover
             off = 0
             for g, w in enumerate(self._seg_words):
-                self._stores[g][slot] = row[off:off + w]
-                off += w
+                if g < cov:
+                    self._stores[g][slot] = row[off:off + w]
+                    off += w
+                else:
+                    self._stores[g][slot] = 0
             self._refs[slot] = 1
             self._owner[slot] = shard
-            self._cover[slot] = len(self._seg_words)
+            self._cover[slot] = cov
             self._bump_live()
             return slot
 
@@ -469,6 +560,19 @@ class BitmapArena:
             [store[handle] if g < cov
              else np.zeros(self._seg_words[g], np.uint32)
              for g, store in enumerate(self._stores)])
+
+    def row_upto(self, handle: int, upto: int) -> np.ndarray:
+        """Row words over the first ``upto`` segments only, zero-filled
+        past the row's coverage — the boundary-consistent read for an
+        overlapped refresh (segments appended after the boundary are
+        invisible, so two reads of the same handle agree in width)."""
+        if upto == 1:
+            return self._stores[0][handle]
+        cov = int(self._cover[handle])
+        return np.concatenate(
+            [store[handle] if g < cov
+             else np.zeros(self._seg_words[g], np.uint32)
+             for g, store in enumerate(self._stores[:upto])])
 
     def seg_row(self, seg: int, handle: int) -> np.ndarray:
         """Zero-copy [W_seg] view of one row's words in one segment."""

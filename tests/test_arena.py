@@ -441,3 +441,130 @@ def test_pallas_interpret_matches_numpy_on_segmented_arena():
     b = PallasInterpretBackend().sweep_many(arena, reqs)
     for x, y in zip(a, b):
         np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------- compaction
+def test_compact_merges_segments_preserving_rows_and_handles():
+    """compact() collapses the segment axis only: every handle reads
+    the same full-width row before and after, coverage semantics
+    (zeros beyond a stale row's ingest horizon) included."""
+    arena, rows = small_arena(n=4, w=3)
+    h_pre = arena.materialize(0, 1)             # covers segment 0 only
+    seg1 = RNG.integers(0, 2 ** 32, size=(4, 2), dtype=np.uint32)
+    seg2 = RNG.integers(0, 2 ** 32, size=(4, 1), dtype=np.uint32)
+    arena.add_segment(seg1)
+    arena.add_segment(seg2)
+    h_post = arena.materialize(2, 3)            # covers all three
+    before = {h: arena.row(h).copy()
+              for h in (0, 1, 2, 3, h_pre, h_post)}
+    removed = arena.compact(3)
+    assert removed == 2
+    assert arena.n_segments == 1
+    assert arena.seg_words(0) == 3 + 2 + 1 == arena.n_words
+    assert arena.compactions == 1
+    assert arena.compaction_bytes == arena.n_rows * 6 * 4
+    for h, want in before.items():
+        np.testing.assert_array_equal(arena.row(h), want)
+    # the pre-ingest row still reads zeros beyond its old coverage
+    assert (arena.row(h_pre)[3:] == 0).all()
+
+
+def test_compact_partial_prefix_and_segment_id_shift():
+    """compact(upto=2) folds only the cold prefix; the remaining
+    segment shifts down and keeps serving segment-restricted sweeps."""
+    from repro.core.join_backend import NumpyBackend, SweepRequest
+    from repro.core.tidlist import popcount32
+    arena, rows = small_arena(n=4, w=2)
+    seg1 = RNG.integers(0, 2 ** 32, size=(4, 1), dtype=np.uint32)
+    seg2 = RNG.integers(0, 2 ** 32, size=(4, 3), dtype=np.uint32)
+    arena.add_segment(seg1)
+    arena.add_segment(seg2)
+    full_before = arena.row(0).copy()
+    assert arena.compact(2) == 1
+    assert arena.n_segments == 2
+    assert arena.seg_words(0) == 3 and arena.seg_words(1) == 3
+    np.testing.assert_array_equal(arena.row(0), full_before)
+    # old segment 2 is now segment 1
+    delta = NumpyBackend().sweep_many(
+        arena, [SweepRequest(0, (1, 2), segments=(1,))])[0]
+    want = [int(popcount32(seg2[0] & seg2[e]).sum()) for e in (1, 2)]
+    assert list(delta) == want
+
+
+def test_compact_guards_reject_trivial_or_out_of_range():
+    arena, _ = small_arena(n=4, w=2)
+    assert arena.compact(1) == 0                # nothing to merge
+    assert arena.compact(2) == 0                # only one segment
+    arena.add_segment(np.ones((4, 1), np.uint32))
+    assert arena.compact(3) == 0                # beyond segment count
+    assert arena.compactions == 0
+    assert arena.compact(2) == 1
+
+
+def test_compact_recycled_slot_spans_compaction():
+    """A slot recycled BEFORE a compaction keeps its new content and
+    its new coverage through the merge."""
+    arena, rows = small_arena(n=4, w=2)
+    h = arena.materialize(0, 1)
+    seg1 = RNG.integers(0, 2 ** 32, size=(4, 2), dtype=np.uint32)
+    arena.add_segment(seg1)
+    arena.release(h)
+    h2 = arena.materialize(2, 3)                # recycles the slot,
+    assert h2 == h                              # now covers both segs
+    arena.compact(2)
+    np.testing.assert_array_equal(
+        arena.row(h2), np.concatenate([rows[2] & rows[3],
+                                       seg1[2] & seg1[3]]))
+
+
+def test_compact_fully_synced_mirror_merges_without_h2d():
+    """Eager backing keeps every segment mirror complete, so compact()
+    merges them device-side: the next device_rows() is free."""
+    arena, rows = small_arena(n=4, w=2, backing="jax")
+    seg1 = RNG.integers(0, 2 ** 32, size=(4, 1), dtype=np.uint32)
+    arena.add_segment(seg1)
+    h2d = arena.h2d_bytes
+    arena.compact(2)
+    dev = arena.device_rows(segment=0)
+    assert arena.h2d_bytes == h2d               # no re-upload
+    np.testing.assert_array_equal(
+        np.asarray(dev)[:4], np.concatenate([rows, seg1], axis=1))
+
+
+def test_compact_unsynced_mirror_resyncs_from_host():
+    """With a lazily-backed arena that never synced, compact() leaves
+    the merged block host-only; a later device_rows() re-syncs it at
+    the merged width and the content is exact."""
+    arena, rows = small_arena(n=4, w=2)
+    seg1 = RNG.integers(0, 2 ** 32, size=(4, 1), dtype=np.uint32)
+    arena.add_segment(seg1)
+    arena.compact(2)
+    dev = arena.device_rows(segment=0)
+    if dev is not None:                         # device backing enabled
+        np.testing.assert_array_equal(
+            np.asarray(dev)[:4], np.concatenate([rows, seg1], axis=1))
+        assert arena.h2d_bytes >= 4 * 3 * 4
+
+
+def test_sweeps_identical_across_compaction():
+    """The same batch of (tuple-prefix, segment-restricted) sweeps
+    returns identical counts before and after compact()."""
+    from repro.core.join_backend import NumpyBackend, SweepRequest
+
+    def reqs():
+        return [SweepRequest(0, (1, 2, 3)),
+                SweepRequest((0, 1), (2, 3)),
+                SweepRequest(2, (3,), segments=(2,))]
+
+    arena, rows = small_arena(n=5, w=2)
+    arena.add_segment(RNG.integers(0, 2 ** 32, (5, 1), np.uint32))
+    arena.add_segment(RNG.integers(0, 2 ** 32, (5, 2), np.uint32))
+    be = NumpyBackend()
+    before = be.sweep_many(arena, reqs())
+    arena.compact(2)                            # old seg 2 -> seg 1
+    after = be.sweep_many(
+        arena, [SweepRequest(0, (1, 2, 3)),
+                SweepRequest((0, 1), (2, 3)),
+                SweepRequest(2, (3,), segments=(1,))])
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, y)
