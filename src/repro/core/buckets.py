@@ -83,3 +83,155 @@ def class_rows_touched(n_exts: int, n_children: int) -> int:
 def rows_to_bytes(rows: int, n_words: int) -> int:
     """Bitmap rows -> bytes of TID-bitmap traffic."""
     return rows * n_words * BYTES_PER_WORD
+
+
+# ---------------------------------------------------------------------------
+# Density-aware representation + granularity selection (dEclat hybrid)
+# ---------------------------------------------------------------------------
+
+REPRESENTATIONS = ("auto", "bitmap", "sparse")
+
+# Breakeven between the two sweep primitives, in elements-per-word: a
+# dense sweep touches every one of the row's W words (AND + popcount,
+# ~1 fused pass/word); a sparse sweep gathers one ext word per tid and
+# tests one bit (~2-3 scalar-equivalent ops/element, no locality).
+# A tid-list of S entries therefore costs about S / TIDS_PER_WORD
+# "word-equivalents", and sparse wins once S < TIDS_PER_WORD * W.
+TIDS_PER_WORD = 2.0
+
+# Ones-per-word above which level-synchronous buckets beat depth-first
+# even in bitmap representation (very dense, very wide classes — chess
+# territory: huge supports keep every word busy and the level barrier
+# amortizes across few, fat sweeps). Mushroom sits near 5 ones/word
+# (depth-first wins), chess above 20 (bucket wins on clustered).
+DF_ONES_PER_WORD = 16.0
+
+# EWMA weight for folding measured sweep supports into the density
+# estimate (level-1 seeds it; each observed sweep nudges it).
+DENSITY_EWMA = 0.2
+
+
+@dataclasses.dataclass
+class DensityModel:
+    """Density-driven cost model for per-subtree representation and
+    granularity selection — the hybrid-representation extension of
+    :func:`class_rows_touched`.
+
+    All costs are in *word-equivalents* (one dense uint32 word scanned
+    = 1.0), so dense and sparse sweeps land on one axis: a bitmap row
+    costs ``n_words`` regardless of support, a tid-list of S entries
+    costs ``S / TIDS_PER_WORD``, and a dEclat diffset of D entries
+    costs ``D / TIDS_PER_WORD`` (support comes from the parent's
+    already-known sibling supports, so only the difference is swept).
+
+    ``ones_per_word`` is the measured density gauge: seeded from the
+    level-1 item supports (``seed_from_counts`` — free, because
+    ``pack_database`` now counts ones while packing) and EWMA-updated
+    from actual sweep results (:meth:`observe`), so the granularity
+    choice tracks the subtree the engine is actually in, not the
+    dataset-wide average.
+
+    ``force`` pins the representation ("bitmap" / "sparse") for A/B
+    runs; granularity selection still follows density.
+    """
+    n_words: int
+    force: str | None = None          # None=auto, "bitmap", "sparse"
+    tids_per_word: float = TIDS_PER_WORD
+    ones_per_word: float = 0.0        # measured EWMA density gauge
+    # decision counters (surfaced through MiningMetrics)
+    bitmap_picks: int = 0
+    tidlist_picks: int = 0
+    diffset_picks: int = 0
+
+    @classmethod
+    def from_counts(cls, n_words: int, counts, force: str | None = None,
+                    tids_per_word: float = TIDS_PER_WORD) -> "DensityModel":
+        """Seed from per-item ones counts (pack_database's one-pass
+        byproduct): ones_per_word starts at the mean item density."""
+        m = cls(n_words=n_words, force=force, tids_per_word=tids_per_word)
+        if counts is not None and len(counts) and n_words > 0:
+            m.ones_per_word = float(sum(counts)) / (len(counts) * n_words)
+        return m
+
+    # ------------------------------------------------------------ costs --
+    def row_cost(self, rep: str, size: int) -> float:
+        """Word-equivalents one sweep pass over a row of this
+        representation touches. ``size`` is the entry count (support
+        for tid-lists, difference size for diffsets; ignored for
+        bitmaps)."""
+        if rep == "bitmap":
+            return float(self.n_words)
+        return size / self.tids_per_word
+
+    def class_cost(self, rep: str, size: int, n_exts: int,
+                   n_children: int) -> float:
+        """Density-aware generalisation of :func:`class_rows_touched`:
+        word-equivalents a depth-first class task touches — the prefix
+        row once, one ext-row pass per extension (a sparse prefix
+        gathers only ``size`` words per ext, never W), and one
+        materialization per frequent child."""
+        per_pass = self.row_cost(rep, size)
+        return per_pass * (1 + n_exts + n_children)
+
+    # -------------------------------------------------------- selection --
+    def pick_rep(self, support: int) -> str:
+        """Representation for a standalone row (no parent context):
+        bitmap vs tid-list by sweep cost."""
+        if self.force == "bitmap":
+            return "bitmap"
+        if self.force == "sparse":
+            return "tidlist"
+        if self.row_cost("tidlist", support) < self.n_words:
+            return "tidlist"
+        return "bitmap"
+
+    def pick_child_rep(self, parent_support: int, child_support: int,
+                       allow_diffset: bool = True) -> str:
+        """Representation for a depth-first child handoff. Candidates:
+        bitmap (W words), tid-list (child_support entries), diffset
+        (parent_support - child_support entries, anchored on the
+        parent). Cheapest sweep cost wins; ties prefer the simpler
+        representation (bitmap > tidlist > diffset). Scalar arithmetic
+        on purpose: this runs once per child class, so list-building
+        would be a measurable share of the per-class Python floor."""
+        if self.force != "bitmap":
+            best = child_support / self.tids_per_word
+            rep = "tidlist"
+            if allow_diffset:
+                diff = parent_support - child_support
+                if diff < 0:
+                    diff = 0
+                df = diff / self.tids_per_word
+                if df < best:
+                    best = df
+                    rep = "diffset"
+            if self.force == "sparse" or best < self.n_words:
+                if rep == "tidlist":
+                    self.tidlist_picks += 1
+                else:
+                    self.diffset_picks += 1
+                return rep
+        self.bitmap_picks += 1
+        return "bitmap"
+
+    def pick_granularity(self, support: int) -> str:
+        """Bucket vs depth-first for one subtree (``granularity="auto"``).
+        Sparse subtrees always go depth-first (diffset handoffs shrink
+        with depth; level-sync would re-pay full-width sweeps). Dense
+        subtrees go depth-first only below DF_ONES_PER_WORD — beyond
+        that (chess-dense) the bucket engine's fat, few sweeps win."""
+        if self.pick_rep(support) != "bitmap":
+            return "depth-first"
+        if self.n_words and support / self.n_words <= DF_ONES_PER_WORD:
+            return "depth-first"
+        return "bucket"
+
+    # ------------------------------------------------------ measurement --
+    def observe(self, supports) -> None:
+        """Fold measured sweep supports into the density gauge (EWMA),
+        so per-subtree decisions track observed — not assumed —
+        density."""
+        if self.n_words <= 0 or len(supports) == 0:
+            return
+        mean = float(sum(supports)) / (len(supports) * self.n_words)
+        self.ones_per_word += DENSITY_EWMA * (mean - self.ones_per_word)

@@ -61,7 +61,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import tidlist
-from repro.core.buckets import (Bucket, class_rows_touched, group_by_prefix,
+from repro.core.buckets import (REPRESENTATIONS, Bucket, DensityModel,
+                                class_rows_touched, group_by_prefix,
                                 rows_to_bytes)
 from repro.core.itemsets import (Itemset, gen_candidates, itemset_hash,
                                  prefix_hash)
@@ -70,7 +71,7 @@ from repro.core.join_backend import (FLUSH_US, MAX_BATCH, SweepDispatcher,
 from repro.core.scheduler import TaskScheduler, make_policy
 from repro.core.tidlist import BitmapArena
 
-GRANULARITIES = ("bucket", "candidate", "depth-first")
+GRANULARITIES = ("bucket", "candidate", "depth-first", "auto")
 
 
 @dataclass
@@ -104,6 +105,21 @@ class MiningMetrics:
     migrations: int = 0
     per_device: List[Dict[str, float]] = field(default_factory=list)
     scheduler: Dict[str, float] = field(default_factory=dict)
+    # hybrid-representation gauges: sweeps split by the prefix row's
+    # representation, the byte share of bytes_swept that went through
+    # the sparse (gather-intersect) path, sparse rows pushed, both
+    # conversion directions (ops + bytes billed by the arena), and the
+    # density model's per-child representation decisions
+    representation: str = "bitmap"
+    dense_sweeps: int = 0
+    sparse_sweeps: int = 0
+    sparse_bytes_swept: int = 0
+    sparse_rows: int = 0
+    densify_ops: int = 0
+    densify_bytes: int = 0
+    sparsify_ops: int = 0
+    sparsify_bytes: int = 0
+    rep_picks: Dict[str, int] = field(default_factory=dict)
 
     @property
     def cache_hit_rate(self) -> float:
@@ -137,9 +153,13 @@ class _PrefixCache:
     structurally)."""
 
     def __init__(self, arena: BitmapArena, maxsize: int = 32,
-                 shard: int = 0, upto: Optional[int] = None):
+                 shard: int = 0, upto: Optional[int] = None,
+                 model: Optional[DensityModel] = None):
         self.arena = arena
         self.maxsize = maxsize
+        self.model = model        # density model: sparse-worthy prefix
+                                  # intersections are pushed as
+                                  # tid-lists instead of word-columns
         self.shard = shard        # rows this cache pushes are owned by
                                   # the caching worker's device shard
         self.upto = upto          # segment boundary: builds read (and
@@ -192,7 +212,12 @@ class _PrefixCache:
             for item in prefix[1:]:
                 bm &= self._row(item)
             rows_read = len(prefix)
-        h = arena.push(bm, shard=self.shard, cover=self.upto)
+        if (self.model is not None and self.model.pick_rep(
+                int(tidlist.popcount32(bm).sum())) != "bitmap"):
+            h = arena.sparsify_push(bm, shard=self.shard,
+                                    cover=self.upto)
+        else:
+            h = arena.push(bm, shard=self.shard, cover=self.upto)
         arena.retain(h)           # the caller's reference, BEFORE _put:
         self._put(prefix, h)      # maxsize=0 evicts-and-releases at once
         return h, rows_read
@@ -217,10 +242,14 @@ def _raise_task_errors(tasks) -> None:
             raise t.error
 
 
-def _level1(bitmaps: np.ndarray, min_support: int
+def _level1(bitmaps: np.ndarray, min_support: int, counts=None
             ) -> Tuple[Dict[Itemset, int], List[Itemset]]:
-    """Level 1, shared by every engine: dense popcount, no tasks."""
-    supports = tidlist.popcount32(bitmaps).sum(axis=1)
+    """Level 1, shared by every engine: dense popcount, no tasks.
+    ``counts`` short-circuits the popcount with per-item ones counts a
+    caller already has (``pack_database(..., return_counts=True)``
+    produces them in the packing pass)."""
+    supports = (np.asarray(counts) if counts is not None
+                else tidlist.popcount32(bitmaps).sum(axis=1))
     result: Dict[Itemset, int] = {
         (i,): int(supports[i]) for i in range(bitmaps.shape[0])
         if supports[i] >= min_support}
@@ -353,11 +382,16 @@ class MiningRun:
     def __init__(self, store: BitmapArena, *, policy: str,
                  n_workers: int, granularity: str, cache_size: int,
                  backend: str = "auto", max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US):
+                 flush_us: float = FLUSH_US,
+                 representation: str = "auto", item_counts=None):
         if granularity not in GRANULARITIES:
             raise ValueError(
                 f"granularity must be one of {GRANULARITIES}, "
                 f"got {granularity!r}")
+        if representation not in REPRESENTATIONS:
+            raise ValueError(
+                f"representation must be one of {REPRESENTATIONS}, "
+                f"got {representation!r}")
         backend_obj = resolve_backend(backend)
         n_shards = store.n_shards
         if n_shards > 1:
@@ -365,6 +399,16 @@ class MiningRun:
         self.store = store
         self.granularity = granularity
         self.cache_size = cache_size
+        self.representation = representation
+        # "bitmap" keeps the model out entirely — the seed engine's
+        # exact code paths; "auto"/"sparse" seed the density model from
+        # per-item ones counts (pack_database's one-pass byproduct, or
+        # the level-1 popcount the caller ran anyway)
+        self.model = (None if representation == "bitmap"
+                      else DensityModel.from_counts(
+                          store.n_words, item_counts,
+                          force=(None if representation == "auto"
+                                 else "sparse")))
         self.device_of = [i % n_shards for i in range(n_workers)]
         self.dispatchers = [
             SweepDispatcher(store, backend_obj,
@@ -414,6 +458,20 @@ class MiningRun:
         metrics.migrations = store.migrations
         metrics.peak_retained_bitmaps = store.peak_live_extra
         metrics.peak_bytes_retained = store.peak_bytes_extra
+        metrics.representation = self.representation
+        metrics.dense_sweeps = int(metrics.scheduler["dense_sweeps"])
+        metrics.sparse_sweeps = int(metrics.scheduler["sparse_sweeps"])
+        metrics.sparse_bytes_swept = int(
+            metrics.scheduler["sparse_bytes_swept"])
+        metrics.sparse_rows = store.sparse_pushed
+        metrics.densify_ops = store.densify_ops
+        metrics.densify_bytes = store.densify_bytes
+        metrics.sparsify_ops = store.sparsify_ops
+        metrics.sparsify_bytes = store.sparsify_bytes
+        if self.model is not None:
+            metrics.rep_picks = {"bitmap": self.model.bitmap_picks,
+                                 "tidlist": self.model.tidlist_picks,
+                                 "diffset": self.model.diffset_picks}
         return metrics
 
 
@@ -423,14 +481,24 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
          granularity: str = "bucket", backend: str = "auto",
          arena: str = "auto", max_batch: int = MAX_BATCH,
          flush_us: float = FLUSH_US, mesh=None,
+         representation: str = "auto", item_counts=None,
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
     ``granularity`` selects the unit of scheduler task: "bucket" (one
     task per (k-1)-prefix, batched extension sweep), "candidate"
-    (one scalar join per candidate — kept for A/B benchmarking), or
+    (one scalar join per candidate — kept for A/B benchmarking),
     "depth-first" (barrier-free equivalence-class recursion with
-    parent→child handle handoff).
+    parent→child handle handoff), or "auto" (levelwise driver that
+    detaches subtrees to depth-first class tasks when the density
+    model predicts sparse/deep mining wins there).
+    ``representation`` selects the row representation the engines hand
+    around: "bitmap" (word-columns only — the pre-hybrid engine),
+    "sparse" (force tid-list/diffset rows wherever structurally legal),
+    or "auto" (per-subtree density-driven choice; the default).
+    ``item_counts`` passes per-item ones counts a caller already has
+    (``pack_database(..., return_counts=True)``) so level 1 and the
+    density-model seed skip their popcount pass.
     ``backend`` names the sweep executor ("auto", "numpy",
     "pallas-interpret", "pallas-jit"; see repro.core.join_backend).
     ``arena`` picks the bitmap store's device residency ("auto": lazy
@@ -452,11 +520,14 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     t0 = time.time()
     # level 1 before the runtime spins up worker/dispatcher threads:
     # if it raises there is nothing to tear down
-    result, frequent = _level1(bitmaps, min_support)
+    if item_counts is None:
+        item_counts = tidlist.popcount32(bitmaps).sum(axis=1)
+    result, frequent = _level1(bitmaps, min_support, counts=item_counts)
     run = MiningRun(store, policy=policy, n_workers=n_workers,
                     granularity=granularity, cache_size=cache_size,
                     backend=backend, max_batch=max_batch,
-                    flush_us=flush_us)
+                    flush_us=flush_us, representation=representation,
+                    item_counts=item_counts)
     run.metrics.frequent += len(frequent)
     try:
         mine_more(run, min_support, max_k, result, frequent)
@@ -476,17 +547,18 @@ def mine_more(run: MiningRun, min_support: int, max_k: int,
     if run.granularity == "depth-first":
         _mine_depth_first(run.store, run.dispatchers, min_support,
                           max_k, run.sched, run.metrics, result,
-                          frequent, delta=delta)
+                          frequent, delta=delta, model=run.model)
     else:
         _mine_levelwise(run.store, run.dispatchers, min_support, max_k,
                         run.sched, run.metrics, result, frequent,
                         run.granularity, run.cache_size, run.caches,
-                        sweep_joins=run.sweep_joins, delta=delta)
+                        sweep_joins=run.sweep_joins, delta=delta,
+                        model=run.model)
 
 
 def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                     metrics, result, frequent, granularity, cache_size,
-                    caches, sweep_joins=False, delta=None):
+                    caches, sweep_joins=False, delta=None, model=None):
     """Level-synchronous engines: plan level k, spawn, barrier, plan
     level k+1 (the paper's §2 shape, at candidate or bucket grain).
     ``sweep_joins`` routes even candidate-granularity scalar joins
@@ -506,10 +578,26 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
     segments, so the delta path never builds a full-width prefix
     intersection and its launches fill like the full path's. Tasks
     carry ``delta.priority_of`` (when set) so the clustered policies
-    drain stale-hot prefixes first."""
+    drain stale-hot prefixes first.
+
+    ``granularity="auto"`` runs this driver with a per-bucket escape
+    hatch: when the density model predicts a prefix's subtree is
+    sparse (or thin enough that level barriers dominate), the whole
+    bucket detaches into a depth-first class task — the subtree mines
+    barrier-free in the model-picked representation and its itemsets
+    never re-enter the level frontier (``gen_candidates`` gets the
+    full known-frequent set so cross-prefix pruning stays exact).
+    Under a delta plan auto stays level-synchronous: the classify
+    clean/dirty/fresh split already skips clean work, and diffset
+    handoffs are structurally disabled mid-refresh anyway."""
     n_w = store.n_words
     upto = len(delta.base_segments) if delta is not None else None
     lock = threading.Lock()
+    df_miner = None
+    detached_tasks: List = []
+    if granularity == "auto" and model is not None and delta is None:
+        df_miner = _ClassMiner(store, dispatchers, min_support, max_k,
+                               sched, metrics, result, model=model)
 
     def _thread_cache() -> _PrefixCache:
         tid = threading.get_ident()
@@ -519,7 +607,7 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                 c = caches.setdefault(
                     tid, _PrefixCache(store, cache_size,
                                       shard=sched.worker_device(),
-                                      upto=upto))
+                                      upto=upto, model=model))
         return c
 
     def _prefix_handle(cache: _PrefixCache, prefix: Itemset
@@ -550,12 +638,23 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         ph, prows = _prefix_handle(cache, cand[:-1])
         try:
             _account(prows, 1, segments)
+            st = sched.worker_stats()
+            sparse = store.rep_of(ph) != tidlist.REP_BITMAP
+            if sparse:
+                st.sparse_sweeps += 1
+                st.sparse_bytes_swept += len(store.tids_of(ph)) * 4
+            else:
+                st.dense_sweeps += 1
             if sweep_joins or segments is not None:
-                st = sched.worker_stats()
                 st.sweeps_submitted += 1
                 disp = dispatchers[sched.worker_device()]
                 return int(disp.sweep(ph, (cand[-1],),
                                       segments=segments)[0])
+            if sparse:
+                # cached sparse prefixes are tid-lists (never
+                # diffsets), so the gather count IS the support
+                return int(tidlist.gather_count(store.tids_of(ph),
+                                                store.row(cand[-1])))
             return int(tidlist.popcount32(store.row(ph)
                                           & store.row(cand[-1])).sum())
         finally:
@@ -573,13 +672,50 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             _account(prows, len(bucket.exts), segments)
             st = sched.worker_stats()
             st.sweeps_submitted += 1
+            if store.rep_of(ph) != tidlist.REP_BITMAP:
+                st.sparse_sweeps += 1
+                st.sparse_bytes_swept += (len(store.tids_of(ph)) * 4
+                                          * len(bucket.exts))
+            else:
+                st.dense_sweeps += 1
             disp = dispatchers[sched.worker_device()]
             return disp.sweep(ph, bucket.exts, segments=segments)
         finally:
             store.release(ph)
 
+    def detach_task(bucket: Bucket, own_support: int,
+                    psup: Tuple[int, ...]) -> None:
+        """granularity="auto" handoff: resolve the bucket's prefix
+        handle like a sweep task would, then run the depth-first class
+        body inline — its children spawn barrier-free class tasks, and
+        this whole subtree leaves the level frontier."""
+        cache = _thread_cache()
+        ph, prows = _prefix_handle(cache, bucket.prefix)
+        _account(prows, 0, None)
+        df_miner.class_task(bucket.prefix, ph, bucket.exts, psup,
+                            own_support, True)
+
     def _spawn_buckets(cands, segments):
         plan = group_by_prefix(cands)
+        if df_miner is not None:
+            keep = []
+            for b in plan:
+                ps = result.get(b.prefix)
+                if (ps is not None
+                        and model.pick_granularity(ps) == "depth-first"):
+                    # the class task re-counts its own candidates
+                    metrics.candidates -= len(b.exts)
+                    # parent-level sibling supports (for dEclat
+                    # children): support of prefix[:-1] + (e,), frequent
+                    # by the Apriori prune so present in ``result``
+                    psup = tuple(result[b.prefix[:-1] + (e,)]
+                                 for e in b.exts)
+                    detached_tasks.append(
+                        sched.spawn(detach_task, b, ps, psup,
+                                    attr=(b.key, b.prefix)))
+                else:
+                    keep.append(b)
+            plan = keep
         metrics.buckets += len(plan)
         prio = delta.priority_of if delta is not None else None
         tasks = [sched.spawn(sweep_task, b, segments,
@@ -649,7 +785,7 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         to the known supports)."""
         if not cands:
             return lambda: []
-        if granularity == "bucket":
+        if granularity in ("bucket", "auto"):
             plan, tasks = _spawn_buckets(cands, segments)
 
             def collect():
@@ -668,7 +804,12 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
 
     k = 2
     while frequent and k <= max_k:
-        cands = gen_candidates(frequent)
+        # detached subtrees' itemsets never rejoin ``frequent``, so the
+        # Apriori prune needs the full known-frequent membership (the
+        # result dict is complete here: the level barrier below also
+        # waited on every detached class task)
+        cands = (gen_candidates(frequent, known_frequent=result)
+                 if df_miner is not None else gen_candidates(frequent))
         if not cands:
             break
         metrics.levels += 1
@@ -678,6 +819,9 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         if delta is None:
             collect = _spawn_sweeps(cands, None)
             sched.wait_all()
+            if df_miner is not None:
+                _raise_task_errors(detached_tasks)
+                df_miner.raise_errors()
             level = collect()
         else:
             clean, dirty, fresh = delta.classify_buckets(
@@ -705,20 +849,42 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         k += 1
 
 
-def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
-                      metrics, result, frequent, delta=None):
-    """Barrier-free engine: tasks spawn child equivalence classes.
+class _ClassMiner:
+    """Barrier-free equivalence-class machinery: tasks spawn child
+    classes. Shared by ``granularity="depth-first"`` (every root item
+    is a class) and ``granularity="auto"`` (the levelwise driver
+    detaches model-chosen prefix buckets into class tasks mid-run).
 
     A task = one equivalence class (P, E) owning an arena handle for
-    P's bitmap: it sweeps the |E| extensions through the dispatcher,
+    P's row: it sweeps the |E| extensions through the dispatcher,
     records frequent extensions, then for each frequent sibling e
-    (except the last) materializes ``row(P) ∧ row(e)`` ONCE into the
-    arena and spawns the child class (P+(e,), {frequent siblings > e})
-    with the new handle. The child never recomputes a prefix
-    intersection — the handoff replaces the LRU cache entirely. Eclat
-    shape: no global candidate generation, no Apriori cross-class prune
-    (supports are identical; a few extra infrequent candidates get
-    swept).
+    (except the last) materializes the child row ONCE into the arena
+    and spawns the child class (P+(e,), {frequent siblings > e}) with
+    the new handle. The child never recomputes a prefix intersection —
+    the handoff replaces the LRU cache entirely. Eclat shape: no global
+    candidate generation, no Apriori cross-class prune (supports are
+    identical; a few extra infrequent candidates get swept).
+
+    Hybrid representation (``model`` set): the handed row's
+    representation is chosen per child by the density cost model —
+    dense word-column (``materialize``), sorted tid-list
+    (``push_tids``), or dEclat diffset anchored on P
+    (``push_diffset``). A sparse P is swept by the gather-intersect
+    path, which returns |payload ∩ e| — for a tid-list that IS the
+    support, for a diffset the class converts it with the
+    parent-sibling supports handed down at spawn
+    (``support = psup[e] - |diff ∩ e|``). Sparse children of a sparse
+    parent are carved out of P's explicit tid set (``resolve_tids``,
+    reconstructed once per class), so no dense intermediate is built.
+
+    On host_parallel backends sparse subtrees run PROJECTED instead:
+    the class sweep's [E, S] bit matrix (``sweep_bits``) is the dEclat
+    recursion state — a child class receives its sibling rows
+    column-masked to its own tid positions, its supports are row sums,
+    and no arena row, dispatcher hop, or gather exists anywhere in the
+    subtree's interior. Kernel backends keep the arena handoff path
+    (device-resident rows, diffset chains, per-class gather-intersect
+    sweeps).
 
     Memory bound: a handed row is live from materialize until the
     child task's ``finally`` releases it (including on task error — an
@@ -735,37 +901,131 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
     subtree is recursed into ONLY when some candidate in it is fresh or
     dirty — a clean subtree's results are already exact in
     ``delta.known``, so whole equivalence classes are skipped without
-    touching a row (the invalidated-classes-only re-mine)."""
-    n_w = store.n_words
-    lock = threading.Lock()
-    all_tasks: List = []
+    touching a row (the invalidated-classes-only re-mine). Diffset
+    children are disabled under delta (``allow_diffset=False``): a
+    dirty diffset sweep would need |parent ∩ e ∩ pending|, which the
+    delta path doesn't carry — tid-list children delta-sweep fine (the
+    backend searchsorts the payload into the pending segments' tid
+    windows)."""
 
-    def _needs_visit(cprefix: Itemset, csibs) -> bool:
+    def __init__(self, store, dispatchers, min_support, max_k, sched,
+                 metrics, result, delta=None, model=None):
+        self.store = store
+        self.dispatchers = dispatchers
+        self.min_support = min_support
+        self.max_k = max_k
+        self.sched = sched
+        self.metrics = metrics
+        self.result = result
+        self.delta = delta
+        self.model = model
+        self.n_w = store.n_words
+        self.lock = threading.Lock()
+        self.all_tasks: List = []
+        self._obs = 0     # observe() sampling counter (racy is fine)
+
+    def needs_visit(self, cprefix: Itemset, csibs) -> bool:
         """A class subtree can contain changed or never-swept itemsets
         only if one of ITS OWN candidates is fresh or dirty: deeper
         dirt implies a dirty candidate here (X ⊆ dirty-items ⇒ every
         sub-candidate too), and deeper freshness implies a frequency
         status change here (supports only change where dirt is)."""
+        delta = self.delta
         for e in csibs:
             c = cprefix + (e,)
             if delta.known.get(c) is None or delta.is_dirty(c):
                 return True
         return False
 
-    def class_task(prefix: Itemset, ph: int,
-                   exts: Tuple[int, ...], owned: bool) -> None:
-        children: List[Tuple[Itemset, int, Tuple[int, ...]]] = []
+    def _make_child(self, ph, e, csup, crep, shard, ptids, bits):
+        """One child handoff row in the model-picked representation.
+        Returns (handle, handoff-bytes-read, is-sparse). ``ptids`` is
+        P's explicit tid set and ``bits`` its membership row in ext e —
+        both resolved/gathered ONCE per class by the caller (from the
+        sweep's own bit matrix when the backend surfaced it); only the
+        dense-parent materialize path runs without them."""
+        store = self.store
+        if crep == "bitmap" and store.rep_of(ph) == tidlist.REP_BITMAP:
+            return (store.materialize(ph, e, shard=shard),
+                    self.n_w * 4, False)
+        cov = min(store.cover_of(ph), store.cover_of(e))
+        read = len(ptids) * 4 * 2      # bits gather + payload carve
+        if crep == "bitmap":
+            # force="bitmap" never lands here; under "auto" a dense
+            # child of a sparse parent can't win the cost model
+            # (child support ≤ parent support), so this is the forced
+            # densify corner only
+            ch = store.push(tidlist.tids_to_bitmap(ptids[bits],
+                                                   self.n_w),
+                            shard=shard, cover=cov)
+            return ch, read + self.n_w * 4, False
+        if crep == "tidlist":
+            ch = store.push_tids(ptids[bits], shard=shard, cover=cov)
+        else:
+            ch = store.push_diffset(ptids[~bits], anchor=ph,
+                                    support=csup, shard=shard,
+                                    cover=cov)
+        return ch, read, True
+
+    def class_task(self, prefix: Itemset, ph: int,
+                   exts: Tuple[int, ...], psup: Tuple[int, ...],
+                   own_support: int, owned: bool,
+                   ptids_hint=None, sub=None) -> None:
+        store, sched, delta = self.store, self.sched, self.delta
+        min_support, model = self.min_support, self.model
+        children: List[Tuple[Itemset, int, Tuple[int, ...],
+                             Tuple[int, ...], int, object,
+                             object]] = []
         try:
             k = len(prefix) + 1                 # size of swept itemsets
             shard = sched.worker_device()
             st = sched.worker_stats()
-            disp = dispatchers[shard]
+            disp = self.dispatchers[shard]
+            # host backends mine sparse subtrees projected (see the
+            # children block); a projected child is a positional tid
+            # mask whose sweep reads child_support bools no matter how
+            # it was notionally encoded — so diffsets' smaller size
+            # buys nothing there and the model must not price them
+            host = delta is None and disp.backend.host_parallel
+            if sub is not None:
+                # projected class: ``sub`` is the subtree root's
+                # gather-intersect bit matrix, row-selected to this
+                # class's extensions and column-sliced to its tid
+                # positions — no arena row exists for P at all
+                rep = None
+                sparse = True
+                is_diff = False
+                payload = sub.shape[1]
+            else:
+                rep = store.rep_of(ph)
+                sparse = rep != tidlist.REP_BITMAP
+                payload = len(store.tids_of(ph)) if sparse else 0
+                is_diff = rep == tidlist.REP_DIFFSET
+            pbits = None      # sweep's own [E, S] payload∩ext matrix
             supports: List[Tuple[int, int]] = []     # (ext, support)
             if delta is None:
-                st.sweeps_submitted += 1
-                counts = disp.sweep(ph, exts)
-                supports = [(e, int(s)) for e, s in zip(exts, counts)]
+                if sub is not None:
+                    # support of P+e is a masked row sum — the dEclat
+                    # intersection collapsed to boolean algebra
+                    counts = sub.sum(axis=1, dtype=np.int64)
+                    pbits = sub
+                    supports = [(e, int(s))
+                                for e, s in zip(exts, counts)]
+                else:
+                    st.sweeps_submitted += 1
+                    counts, pbits = disp.sweep_bits(ph, exts)
+                    if is_diff:
+                        # dEclat arithmetic: the backend counted
+                        # |diff ∩ e|; the parent's sibling supports
+                        # handed down at spawn turn it into support
+                        supports = [(e, psup[j] - int(s)) for j, (e, s)
+                                    in enumerate(zip(exts, counts))]
+                    else:
+                        supports = [(e, int(s))
+                                    for e, s in zip(exts, counts)]
                 swept = len(exts)
+                fresh_e: List[int] = []
+                dirty_e: List[int] = []
             else:
                 fresh_e, dirty_e = [], []
                 for e in exts:
@@ -808,23 +1068,131 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                     delta.reused += n_clean
                 supports.sort()       # merged lists back to ext order
                 swept = len(fresh_e) + len(dirty_e)
+            if model is not None and supports:
+                # sampled EWMA: the gauge steers granularity detach
+                # decisions, not per-child picks — every 4th class is
+                # plenty of signal and trims the per-class Python floor
+                self._obs += 1
+                if (self._obs & 3) == 0:
+                    model.observe([s for _, s in supports])
             freq = [(e, s) for e, s in supports if s >= min_support]
             sibs = [e for e, _ in freq]         # ascending (exts sorted)
-            if k < max_k and len(freq) > 1:
-                for i, e in enumerate(sibs[:-1]):
-                    cprefix = prefix + (e,)
-                    csibs = tuple(sibs[i + 1:])
-                    if delta is not None and not _needs_visit(cprefix,
-                                                              csibs):
+            child_bytes = 0
+            child_sparse_bytes = 0
+            if k < self.max_k and len(freq) > 1:
+                # pick every child's representation first, so the carve
+                # work (P's explicit tid set + its membership bits in
+                # each child ext) resolves and gathers ONCE per class
+                plan = []             # (sibling idx, ext, csup, crep)
+                for i, (e, csup) in enumerate(freq[:-1]):
+                    if delta is not None and not self.needs_visit(
+                            prefix + (e,), tuple(sibs[i + 1:])):
                         continue      # clean subtree: known is exact
-                    children.append((cprefix,
-                                     store.materialize(ph, e,
-                                                       shard=shard),
-                                     csibs))
+                    plan.append((i, e, csup,
+                                 "bitmap" if model is None
+                                 else model.pick_child_rep(
+                                     own_support, csup,
+                                     allow_diffset=delta is None
+                                     and not host)))
+                # host backends mine sparse subtrees PROJECTED: the
+                # sweep's gather-intersect bit matrix, row-selected to
+                # the frequent siblings, IS the dEclat recursion state.
+                # A child class's supports are column-masked row sums
+                # of its parent's matrix, so the whole subtree below
+                # this class runs on boolean index algebra — no arena
+                # rows, no dispatcher hops, no gathers. Kernel backends
+                # keep arena handoffs (the device owns the rows;
+                # projection would drag every class to the host).
+                proj = host and (sparse
+                                 or any(p[3] != "bitmap" for p in plan))
+                fmat = None   # frequent-sibling bits over P's tid set
+                ptids = None  # P's tid set, resolved at most once
+                bcol: Dict[int, int] = {}   # ext -> row in bit matrix
+                bmat = None
+                if proj and plan:
+                    if pbits is not None and not is_diff:
+                        eidx = {e: j for j, e in enumerate(exts)}
+                        fmat = pbits[[eidx[f] for f in sibs]]
+                    else:
+                        if is_diff:
+                            # dEclat chain: the spawner handed P's
+                            # parent tid set down, so resolution is ONE
+                            # sorted difference, not a chain walk
+                            diff = store.tids_of(ph)
+                            ptids = (tidlist.sorted_difference(
+                                         ptids_hint, diff)
+                                     if ptids_hint is not None
+                                     else store.resolve_tids(ph))
+                        elif sparse:
+                            ptids = store.tids_of(ph)
+                        else:
+                            ptids = store.resolve_tids(ph)  # billed
+                        fmat = store.gather_bits_rows(ptids, sibs)
+                        child_bytes += len(ptids) * 4
+                elif plan and not host:
+                    carve = [p for p in plan
+                             if p[3] != "bitmap"
+                             or rep != tidlist.REP_BITMAP]
+                    if carve:
+                        if is_diff:
+                            diff = store.tids_of(ph)
+                            ptids = (tidlist.sorted_difference(
+                                         ptids_hint, diff)
+                                     if ptids_hint is not None
+                                     else store.resolve_tids(ph))
+                            pbits = None  # sweep bits were over diff
+                        elif sparse:
+                            ptids = store.tids_of(ph)
+                        else:
+                            ptids = store.resolve_tids(ph)  # billed
+                        if pbits is not None:
+                            eidx = {e: j for j, e in enumerate(exts)}
+                            bcol = {e: eidx[e] for _, e, _, _ in carve}
+                            bmat = pbits
+                        else:
+                            ce = [e for _, e, _, _ in carve]
+                            bmat = store.gather_bits_rows(ptids, ce)
+                            bcol = {e: j for j, e in enumerate(ce)}
+                for i, e, csup, crep in plan:
+                    if proj and (crep != "bitmap" or sparse):
+                        m = fmat[i]
+                        csub = fmat[i + 1:len(freq)][:, m]
+                        read = csub.nbytes + m.nbytes
+                        child_bytes += read
+                        child_sparse_bytes += read
+                        children.append((prefix + (e,), -1,
+                                         tuple(sibs[i + 1:]),
+                                         tuple(s for _, s
+                                               in freq[i + 1:]),
+                                         csup, None, csub))
+                        continue
+                    ch, read, ch_sparse = self._make_child(
+                        ph, e, csup, crep, shard, ptids,
+                        bmat[bcol[e]] if e in bcol else None)
+                    child_bytes += read
+                    if ch_sparse:
+                        child_sparse_bytes += read
+                    children.append((prefix + (e,), ch,
+                                     tuple(sibs[i + 1:]),
+                                     tuple(s for _, s in freq[i + 1:]),
+                                     csup,
+                                     ptids if crep == "diffset"
+                                     else None, None))
             if delta is None:
                 rows = class_rows_touched(len(exts), len(children))
                 st.rows_touched += rows
-                st.bytes_swept += rows_to_bytes(rows, n_w)
+                if sparse:
+                    # gather-intersect passes: the payload once per
+                    # extension (plus once for itself), never W words —
+                    # plus the measured child-handoff reads. Projected
+                    # classes read exactly their bit matrix.
+                    sb = (sub.nbytes if sub is not None
+                          else payload * 4 * (1 + len(exts)))
+                    st.bytes_swept += sb + child_bytes
+                    st.sparse_bytes_swept += sb + child_sparse_bytes
+                else:
+                    st.bytes_swept += rows_to_bytes(rows, self.n_w)
+                    st.sparse_bytes_swept += child_sparse_bytes
             else:
                 # only what was actually read: the parent-handed prefix
                 # row (when any sweep ran), swept extension rows (dirty
@@ -834,62 +1202,101 @@ def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                 full_rows = ((1 if swept else 0) + len(fresh_e)
                              + len(children))
                 st.rows_touched += full_rows + len(dirty_e)
-                st.bytes_swept += (rows_to_bytes(full_rows, n_w)
-                                   + rows_to_bytes(len(dirty_e), seg_w))
-            with lock:
+                if sparse:
+                    sb = (payload * 4 * (1 + len(fresh_e)
+                                         + len(dirty_e)) + child_bytes)
+                    st.bytes_swept += sb
+                    st.sparse_bytes_swept += sb
+                else:
+                    st.bytes_swept += (rows_to_bytes(full_rows,
+                                                     self.n_w)
+                                       + rows_to_bytes(len(dirty_e),
+                                                       seg_w))
+                    st.sparse_bytes_swept += child_sparse_bytes
+            if swept or delta is None:
+                if sparse:
+                    st.sparse_sweeps += 1
+                else:
+                    st.dense_sweeps += 1
+            with self.lock:
+                metrics = self.metrics
                 metrics.buckets += 1
                 metrics.candidates += len(exts)
                 metrics.levels = max(metrics.levels, k - 1)
                 metrics.frequent += len(freq)
                 for e, s in freq:
-                    result[prefix + (e,)] = s
+                    self.result[prefix + (e,)] = s
             spawned = []
             while children:
-                cprefix, ch, csibs = children[0]
-                spawned.append(
-                    sched.spawn(class_task, cprefix, ch, csibs, True,
-                                attr=(itemset_hash(cprefix), cprefix),
-                                depth=len(cprefix),
-                                priority=(delta.priority_of(cprefix)
-                                          if delta is not None
-                                          and delta.priority_of
-                                          else 0.0),
-                                handles=(ch,)))
+                (cprefix, ch, csibs, cpsup, csup, chint,
+                 csub) = children[0]
+                spawned.append(self.spawn(cprefix, ch, csibs, cpsup,
+                                          csup, csub is None, chint,
+                                          csub))
                 children.pop(0)       # ownership moved to the child task
             if spawned:
-                with lock:
-                    all_tasks.extend(spawned)
+                with self.lock:
+                    self.all_tasks.extend(spawned)
         except BaseException:
             # refcount hygiene on error: materialized handles whose
             # child tasks never spawned must release here or the rows
-            # leak for the rest of the run
-            for _, ch, _ in children:
-                store.release(ch)
+            # leak for the rest of the run (projected children own
+            # nothing — their state is the sliced bit matrix)
+            for _, ch, _, _, _, _, csub in children:
+                if csub is None:
+                    store.release(ch)
             raise
         finally:
             if owned:
                 store.release(ph)
 
-    if max_k >= 2 and len(frequent) > 1:
+    def spawn(self, prefix: Itemset, ph: int, exts, psup,
+              own_support: int, owned: bool, ptids_hint=None,
+              sub=None):
+        delta = self.delta
+        return self.sched.spawn(
+            self.class_task, prefix, ph, exts, psup, own_support, owned,
+            ptids_hint, sub,
+            attr=(itemset_hash(prefix), prefix), depth=len(prefix),
+            priority=(delta.priority_of(prefix)
+                      if delta is not None and delta.priority_of
+                      else 0.0),
+            handles=(ph,) if owned else ())
+
+    def spawn_roots(self, frequent, result) -> None:
+        """One class per root item (the depth-first driver). Root
+        classes hand the pinned base row's handle (== item id —
+        nothing materialized, nothing retained); their sibling
+        supports are the level-1 supports."""
+        if self.max_k < 2 or len(frequent) < 2:
+            return
         items = [p[0] for p in frequent]        # sorted singleton items
+        sup = {p[0]: result[p] for p in frequent}
         for i, it in enumerate(items[:-1]):
             sibs = tuple(items[i + 1:])
-            if delta is not None and not _needs_visit((it,), sibs):
+            if self.delta is not None and not self.needs_visit((it,),
+                                                               sibs):
                 continue              # clean root class: skip entirely
-            # root classes hand the pinned base row's handle (== item
-            # id — nothing materialized, nothing retained)
-            t = sched.spawn(class_task, (it,), it, sibs, False,
-                            attr=(itemset_hash((it,)), (it,)),
-                            depth=1,
-                            priority=(delta.priority_of((it,))
-                                      if delta is not None
-                                      and delta.priority_of else 0.0))
-            with lock:    # already-running roots append concurrently
-                all_tasks.append(t)
+            t = self.spawn((it,), it, sibs,
+                           tuple(sup[e] for e in sibs), sup[it], False)
+            with self.lock:   # already-running roots append concurrently
+                self.all_tasks.append(t)
+
+    def raise_errors(self) -> None:
+        with self.lock:
+            tasks = list(self.all_tasks)
+        _raise_task_errors(tasks)
+
+
+def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
+                      metrics, result, frequent, delta=None,
+                      model=None):
+    """Barrier-free engine driver: see :class:`_ClassMiner`."""
+    miner = _ClassMiner(store, dispatchers, min_support, max_k, sched,
+                        metrics, result, delta=delta, model=model)
+    miner.spawn_roots(frequent, result)
     sched.wait_all()                            # the ONLY wait
-    with lock:
-        tasks = list(all_tasks)
-    _raise_task_errors(tasks)
+    miner.raise_errors()
 
 
 def mine_serial(bitmaps: np.ndarray, min_support: int, max_k: int = 8

@@ -41,9 +41,17 @@ def prefix_of(itemset: Itemset) -> Itemset:
     return itemset[:-1]
 
 
-def gen_candidates(frequent: Sequence[Itemset]) -> List[Itemset]:
-    """F_{k-1} -> C_k by prefix join + anti-monotone prune (Apriori)."""
+def gen_candidates(frequent: Sequence[Itemset],
+                   known_frequent: Iterable[Itemset] = ()) -> List[Itemset]:
+    """F_{k-1} -> C_k by prefix join + anti-monotone prune (Apriori).
+
+    ``known_frequent`` widens the prune set beyond the join frontier:
+    granularity="auto" detaches whole subtrees to depth-first class
+    tasks, so their itemsets never re-enter ``frequent`` — without the
+    full known-frequent membership, a candidate whose (k-1)-subset was
+    mined inside a detached subtree would be falsely pruned."""
     fset = set(frequent)
+    fset.update(known_frequent)
     if not frequent:
         return []
     k = len(frequent[0]) + 1

@@ -67,7 +67,16 @@ class SweepRequest:
     which arena mirror to gather from. ``segments`` restricts the join
     to a subset of the arena's transaction segments (None = all): the
     streaming engine's support-delta sweeps read ONLY the freshly
-    ingested segments, so a small ingest costs a small sweep."""
+    ingested segments, so a small ingest costs a small sweep.
+
+    Hybrid representation: when ``prefix_handle`` is a SPARSE arena row
+    (tid-list or diffset), the backend runs the gather-intersect path
+    instead of AND+popcount and the counts are ``|payload ∩ ext_i|``
+    over the raw sparse payload — for a tid-list that IS the support,
+    for a diffset it is the subtrahend the engine turns into
+    ``parent_support - count``. One flush may mix representations; the
+    backend partitions per launch. Tuple prefixes are always dense
+    (streaming sweeps AND base item rows)."""
     prefix_handle: "int | Tuple[int, ...]"
     ext_handles: Tuple[int, ...]
     shard: int = 0
@@ -83,6 +92,13 @@ class SweepRequest:
         if self.segments is not None:
             return self.segments
         return tuple(range(arena.n_segments))
+
+    def is_sparse(self, arena: BitmapArena) -> bool:
+        """True when the prefix row is a tid-list/diffset (gather-
+        intersect path); tuple prefixes AND base rows, always dense."""
+        p = self.prefix_handle
+        return (not isinstance(p, tuple)
+                and arena.rep_of(p) != tidlist.REP_BITMAP)
 
 
 class JoinBackend:
@@ -136,6 +152,14 @@ class NumpyBackend(JoinBackend):
         totals: List[Optional[np.ndarray]] = [None] * len(requests)
         by_seg: Dict[int, List[int]] = {}
         for i, r in enumerate(requests):
+            if r.is_sparse(arena):
+                # gather-intersect path: O(S) per ext, never W — the
+                # request loops its own segments internally.  Kept
+                # scalar deliberately: a flat cross-request gather
+                # (repeat/tile + reduceat) was measured ~2x SLOWER than
+                # per-request np.ix_ outer indexing at class shapes.
+                totals[i] = self._sweep_sparse(arena, r)
+                continue
             for g in r.segment_ids(arena):
                 if arena.seg_words(g):   # skip zero-width (empty batch)
                     by_seg.setdefault(g, []).append(i)
@@ -164,6 +188,64 @@ class NumpyBackend(JoinBackend):
         return [t if t is not None
                 else np.zeros(len(r.ext_handles), np.int64)
                 for t, r in zip(totals, requests)]
+
+    @staticmethod
+    def sweep_sparse_bits(arena, r):
+        """Sparse sweep that also returns the gathered bit matrix.
+
+        A depth-first class task needs |payload ∩ e| to COUNT and
+        payload ∩ e to CARVE child rows — both fall out of one [E, S]
+        gather. The host-parallel path returns ``(counts, bits)`` so
+        the engine never re-gathers what the count pass already read
+        (the device kernel returns counts only; the engine falls back
+        to a batched carve gather there). ``bits`` columns align with
+        the request's sorted payload; full sweeps only."""
+        tids = arena.tids_of(r.prefix_handle)
+        n_ext, n_tid = len(r.ext_handles), len(tids)
+        bits = np.zeros((n_ext, n_tid), bool)
+        if not n_ext or not n_tid:
+            return np.zeros(n_ext, np.int64), bits
+        eh = list(r.ext_handles)
+        for g in r.segment_ids(arena):
+            if not arena.seg_words(g):
+                continue
+            lo, hi = arena.seg_tid_range(g)
+            i0, i1 = np.searchsorted(tids, [lo, hi])
+            if i0 == i1:
+                continue
+            t = tids[i0:i1].astype(np.int64) - lo
+            w = arena.seg_view(g)[np.ix_(eh, t >> 5)]
+            bits[:, i0:i1] = (w >> (t & 31).astype(np.uint32)[None, :]
+                              ) & np.uint32(1)
+        return bits.sum(axis=1, dtype=np.int64), bits
+
+    @staticmethod
+    def _sweep_sparse(arena, r):
+        """Sparse-prefix sweep: for each extension, gather the ext word
+        at every prefix tid and test one bit — ``np.ix_`` outer-indexes
+        the segment store directly into an [E, S] word block, so no
+        [E, W] dense gather copy is ever built. Segment-restricted
+        (delta) sweeps searchsorted the sorted tid payload down to the
+        swept segments' global tid windows."""
+        out = np.zeros(len(r.ext_handles), np.int64)
+        tids = arena.tids_of(r.prefix_handle)
+        if not len(tids) or not len(r.ext_handles):
+            return out
+        eh = list(r.ext_handles)
+        for g in r.segment_ids(arena):
+            if not arena.seg_words(g):
+                continue
+            lo, hi = arena.seg_tid_range(g)
+            i0, i1 = np.searchsorted(tids, [lo, hi])
+            if i0 == i1:
+                continue
+            t = (tids[i0:i1].astype(np.int64) - lo)
+            wi = t >> 5
+            bp = (t & 31).astype(np.uint32)
+            words = arena.seg_view(g)[np.ix_(eh, wi)]       # [E, S]
+            out += ((words >> bp[None, :]) & np.uint32(1)
+                    ).sum(axis=1, dtype=np.int64)
+        return out
 
     @staticmethod
     def _sweep_one(rows, r):
@@ -241,11 +323,19 @@ class _PallasBackend(JoinBackend):
                 if arena.seg_words(g):
                     by_seg.setdefault(g, []).append(i)
         for g, idxs in sorted(by_seg.items()):
-            counts = self._sweep_segment(arena, g,
-                                         [requests[i] for i in idxs])
-            for j, i in enumerate(idxs):
-                totals[i] += counts[j, :len(requests[i].ext_handles)
-                                    ].astype(np.int64)
+            # one flush may mix representations: dense requests go to
+            # bitmap_join_many, sparse ones to gather_intersect_many —
+            # two launches per (segment, mixed batch) at most
+            dense = [i for i in idxs if not requests[i].is_sparse(arena)]
+            sparse = [i for i in idxs if requests[i].is_sparse(arena)]
+            for part, fn in ((dense, self._sweep_segment),
+                             (sparse, self._sweep_segment_sparse)):
+                if not part:
+                    continue
+                counts = fn(arena, g, [requests[i] for i in part])
+                for j, i in enumerate(part):
+                    totals[i] += counts[j, :len(requests[i].ext_handles)
+                                        ].astype(np.int64)
         return totals
 
     def _sweep_segment(self, arena, seg, requests):
@@ -308,6 +398,65 @@ class _PallasBackend(JoinBackend):
         return np.asarray(bitmap_join_many(prefixes, exts,
                                            jnp.asarray(mask),
                                            mode=self.mode))
+
+    def _sweep_segment_sparse(self, arena, seg, requests):
+        """Sparse sub-batch: prefixes are tid/diffset payloads, shipped
+        host→device per launch (billed at actual nbytes — sparse rows
+        have no resident mirror payload); extension word-columns gather
+        from the mirror exactly like the dense path. Tids are
+        searchsorted down to this segment's global tid window and
+        rebased, then padded to a pow2 S with the -1 sentinel so the
+        jit cache stays bounded."""
+        import jax.numpy as jnp
+
+        from repro.kernels.gather_intersect.ops import (
+            gather_intersect_many)
+        b = len(requests)
+        emax = max(len(r.ext_handles) for r in requests)
+        bp = _pow2(b)
+        ep = _pow2(emax, lo=E_PAD_FLOOR)
+        w = arena.seg_words(seg)
+        wp = _pow2(w)
+        lo, hi = arena.seg_tid_range(seg)
+        local: List[np.ndarray] = []
+        smax = 1
+        for r in requests:
+            tids = arena.tids_of(r.prefix_handle)
+            i0, i1 = np.searchsorted(tids, [lo, hi])
+            t = (tids[i0:i1].astype(np.int64) - lo).astype(np.int32)
+            local.append(t)
+            smax = max(smax, len(t))
+        sp = _pow2(smax, lo=E_PAD_FLOOR)
+        tmat = np.full((bp, sp), -1, np.int32)
+        for i, t in enumerate(local):
+            tmat[i, :len(t)] = t
+        eidx = np.zeros((bp, ep), np.int32)
+        mask = np.zeros((bp, ep), bool)
+        for i, r in enumerate(requests):
+            n = len(r.ext_handles)
+            eidx[i, :n] = r.ext_handles
+            mask[i, :n] = True
+        shard = requests[0].shard if requests else 0
+        needed = None
+        if arena.n_shards > 1:
+            needed = [h for r in requests
+                      for h in (*r.prefix_handles, *r.ext_handles)]
+        dev = arena.device_rows(shard, needed=needed, segment=seg)
+        if dev is not None:
+            if wp != w:
+                dev = jnp.pad(dev, ((0, 0), (0, wp - w)))
+            exts = dev[jnp.asarray(eidx.reshape(-1))].reshape(bp, ep, wp)
+            arena.count_h2d(tmat.nbytes)      # tid payload, per launch
+        else:
+            rows = arena.seg_view(seg)
+            eh = rows[eidx.reshape(-1)].reshape(bp, ep, w)
+            arena.count_h2d(eh.nbytes + tmat.nbytes)
+            if wp != w:
+                eh = np.pad(eh, ((0, 0), (0, 0), (0, wp - w)))
+            exts = jnp.asarray(eh)
+        return np.asarray(gather_intersect_many(jnp.asarray(tmat), exts,
+                                                jnp.asarray(mask),
+                                                mode=self.mode))
 
 
 class PallasInterpretBackend(_PallasBackend):
@@ -501,6 +650,40 @@ class SweepDispatcher:
         streaming delta sweep)."""
         return self.submit(prefix_handle, ext_handles,
                            segments=segments).result()
+
+    def sweep_bits(self, prefix_handle: int, ext_handles: Sequence[int]
+                   ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """Depth-first class sweep: ``(counts, bits)`` where ``bits``
+        is the [E, S] payload∩ext matrix of the SAME gather the counts
+        came from (sparse prefixes on host-parallel backends; None
+        otherwise).
+
+        Host-parallel backends run inline on the CALLING thread — the
+        ``sweep_local`` rationale applied to class tasks: a class
+        sweep is one vectorized pass, so the enqueue → dispatcher
+        wakeup → future round-trip costs more than the sweep itself
+        (two context switches per class on a busy machine), and for a
+        sparse prefix returning the bit matrix lets the class task
+        carve children without re-gathering. Kernel backends keep the
+        batched queue (only the dispatcher thread touches JAX) and
+        return no bits. Billed as a 1-request flush so
+        ``flushes × occupancy == requests`` stays exact."""
+        if not self.backend.host_parallel:
+            return self.sweep(prefix_handle, ext_handles), None
+        req = self._make_requests(
+            [(prefix_handle, tuple(ext_handles))], None)[0]
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("dispatcher is stopped")
+            self.flushes += 1
+            self.requests += 1
+        if req.is_sparse(self.arena) and getattr(
+                self.backend, "sweep_sparse_bits", None) is not None:
+            if self.arena.n_shards > 1:
+                self.arena.note_access(req.shard, (*req.prefix_handles,
+                                                   *req.ext_handles))
+            return self.backend.sweep_sparse_bits(self.arena, req)
+        return self.backend.sweep_many(self.arena, [req])[0], None
 
     @property
     def batch_occupancy(self) -> float:

@@ -77,6 +77,13 @@ class WorkerStats:
     # dispatcher (repro.core.join_backend); together with the
     # dispatcher's flush count this yields batch_occupancy
     sweeps_submitted: int = 0
+    # hybrid-representation split: how many of this worker's sweeps ran
+    # against a dense word-column prefix vs a tid-list/diffset one, and
+    # the byte share of bytes_swept that went through the sparse
+    # (gather-intersect) path
+    dense_sweeps: int = 0
+    sparse_sweeps: int = 0
+    sparse_bytes_swept: int = 0
 
 
 class SchedulingPolicy:
@@ -530,6 +537,9 @@ class TaskScheduler:
             "rows_touched": sum(w.rows_touched for w in s),
             "bytes_swept": sum(w.bytes_swept for w in s),
             "sweeps_submitted": sum(w.sweeps_submitted for w in s),
+            "dense_sweeps": sum(w.dense_sweeps for w in s),
+            "sparse_sweeps": sum(w.sparse_sweeps for w in s),
+            "sparse_bytes_swept": sum(w.sparse_bytes_swept for w in s),
         }
 
 

@@ -244,6 +244,7 @@ class StreamingMiner:
                  backend: str = "auto", arena: str = "auto",
                  cache_size: int = 32, max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US, mesh=None,
+                 representation: str = "auto",
                  compact_segments: int = 8,
                  compact_ratio: float = 0.5):
         if n_items < 1:
@@ -254,16 +255,21 @@ class StreamingMiner:
         self._run_kw = dict(policy=policy, n_workers=n_workers,
                             granularity=granularity, backend=backend,
                             cache_size=cache_size, max_batch=max_batch,
-                            flush_us=flush_us)
+                            flush_us=flush_us,
+                            representation=representation)
         n_shards, devices = _resolve_mesh(mesh)
         initial_db = [list(t) for t in initial_db]
         self._check_items(initial_db)
-        bitmaps = pack_database(initial_db, n_items)
+        # one packing pass yields the bitmaps AND the per-item ones
+        # counts — the level-1 supports and the density-model seed,
+        # with no post-hoc popcount sweep
+        bitmaps, item_counts = pack_database(initial_db, n_items,
+                                             return_counts=True)
         self.arena = BitmapArena.from_bitmaps(
             bitmaps, backing=arena, n_shards=n_shards, devices=devices)
         self.n_transactions = len(initial_db)
         self._seg_tx = [len(initial_db)]   # transactions per segment
-        self._item_support = tidlist.popcount32(bitmaps).sum(axis=1)
+        self._item_support = item_counts
         # support of every candidate ever swept (|X| >= 2; frequent AND
         # negative border), exact over the refreshed segments — the
         # reuse store that lets clean classes skip their sweeps
@@ -395,7 +401,8 @@ class StreamingMiner:
             result = dict(singles)
             frequent = sorted(result)
             h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
-            run = MiningRun(arena, **self._run_kw)
+            run = MiningRun(arena, item_counts=item_support,
+                            **self._run_kw)
             run.metrics.frequent += len(frequent)
             try:
                 mine_more(run, ms, self.max_k, result, frequent,

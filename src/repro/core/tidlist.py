@@ -21,20 +21,31 @@ def n_words(n_transactions: int) -> int:
     return (n_transactions + WORD - 1) // WORD
 
 
-def pack_database(db: Sequence[Sequence[int]], n_items: int) -> np.ndarray:
+def pack_database(db: Sequence[Sequence[int]], n_items: int,
+                  return_counts: bool = False):
     """db: list of transactions (item id lists) -> [n_items, W] uint32.
 
     Packs per-word directly — O(n_items × W) memory, never the dense
     [n_items, n_transactions] bool matrix (which on scaled Quest/retail
     profiles could exceed the packed bitmaps by 32× and blow host
-    memory before mining even starts)."""
+    memory before mining even starts).
+
+    With ``return_counts=True`` also returns the per-item ones count
+    (``[n_items] int64``) tallied during the same pass — the level-1
+    supports and density seed, with no post-hoc popcount sweep over
+    the packed words."""
     m = len(db)
     out = np.zeros((n_items, n_words(m)), dtype=np.uint32)
+    counts = np.zeros(n_items, dtype=np.int64)
     for t, txn in enumerate(db):
         word = t >> 5
         bit = np.uint32(1 << (t & 31))
         for i in txn:
+            if not out[i, word] & bit:
+                counts[i] += 1
             out[i, word] |= bit
+    if return_counts:
+        return out, counts
     return out
 
 
@@ -113,6 +124,71 @@ def support_counts(prefix: np.ndarray, exts: np.ndarray,
         hi = min(lo + chunk, e)
         out[lo:hi] = popcount32(exts[lo:hi] & prefix[None, :]).sum(axis=1)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Sparse (tid-list / dEclat diffset) row helpers
+# ---------------------------------------------------------------------------
+# A *tid* is a global bit position on the concatenated segment word
+# axis: tid = 32 * word_index + bit. Packing zero-fills past the real
+# transaction count and compact() concatenates segments in order, so a
+# sparse row's tids stay valid across ingest and compaction without
+# rewriting.
+
+REP_BITMAP, REP_TIDLIST, REP_DIFFSET = 0, 1, 2
+REP_NAMES = ("bitmap", "tidlist", "diffset")
+
+
+def bitmap_to_tids(words: np.ndarray) -> np.ndarray:
+    """[W] uint32 word-column -> sorted uint32 tids of its set bits."""
+    w = words.shape[0]
+    if w == 0:
+        return np.zeros(0, np.uint32)
+    bits = unpack_bool(words[None, :], w * WORD)[0]
+    return np.flatnonzero(bits).astype(np.uint32)
+
+
+def tids_to_bitmap(tids: np.ndarray, n_words_: int) -> np.ndarray:
+    """Sorted uint32 tids -> [n_words_] uint32 word-column."""
+    out = np.zeros(n_words_, np.uint32)
+    if len(tids):
+        t = np.asarray(tids, np.uint32)
+        np.bitwise_or.at(out, t >> np.uint32(5),
+                         np.uint32(1) << (t & np.uint32(31)))
+    return out
+
+
+def gather_bits(tids: np.ndarray, ext_words: np.ndarray) -> np.ndarray:
+    """bit test of ``ext_words`` at each tid -> [len(tids)] bool.
+
+    The sparse sweep primitive: O(|tids|) gathered words regardless of
+    row width W — exactly what the Pallas ``gather_intersect_many``
+    kernel batches on device."""
+    if len(tids) == 0:
+        return np.zeros(0, bool)
+    t = np.asarray(tids, np.uint32)
+    return ((ext_words[t >> np.uint32(5)] >> (t & np.uint32(31)))
+            & np.uint32(1)).astype(bool)
+
+
+def gather_count(tids: np.ndarray, ext_words: np.ndarray) -> int:
+    """|tids ∩ ext| for one sparse row against one word-column."""
+    if len(tids) == 0:
+        return 0
+    t = np.asarray(tids, np.uint32)
+    return int((((ext_words[t >> np.uint32(5)] >> (t & np.uint32(31)))
+                 & np.uint32(1))).sum())
+
+
+def sorted_difference(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """a \\ b for sorted unique uint32 arrays (diffset reconstruction:
+    tids(P) = tids(parent) \\ diffset). Binary-search based — ``np.isin``
+    re-sorts the concatenation, which dominates diffset-chain walks."""
+    if len(b) == 0 or len(a) == 0:
+        return a
+    idx = np.searchsorted(b, a)
+    np.minimum(idx, len(b) - 1, out=idx)
+    return a[b[idx] != a]
 
 
 # ---------------------------------------------------------------------------
@@ -246,6 +322,26 @@ class BitmapArena:
         self.migrations = 0           # rows re-owned by migrate()
         self.compaction_bytes = 0     # host bytes repacked by compact()
         self.compactions = 0          # compact() calls that merged
+        # hybrid sparse representation: per-slot tag plus a
+        # variable-length tid/diffset store sharing the same handle
+        # space, refcounting, coverage and accounting as word-columns.
+        # Sparse slots carry NO payload in the word-column stores or
+        # device mirrors; their tid arrays ship per-launch (billed at
+        # actual nbytes) and cross-shard reads bill d2d once per
+        # residency via _note_sparse.
+        self._rep = np.zeros(cap, np.int8)        # REP_* tag per slot
+        self._sparse: dict = {}                   # handle -> uint32 tids
+        self._anchor: dict = {}                   # diffset -> parent handle
+        self._ssupport: dict = {}                 # handle -> support
+        self._sparse_res: List[set] = [set() for _ in range(n_shards)]
+        self.sparse_pushed = 0        # sparse rows ever created
+        self.sparse_live = 0          # live sparse rows gauge
+        self.sparse_bytes_live = 0    # live sparse payload bytes
+        self.peak_sparse_bytes = 0
+        self.densify_ops = 0          # sparse->dense conversions billed
+        self.densify_bytes = 0
+        self.sparsify_ops = 0         # dense->sparse conversions billed
+        self.sparsify_bytes = 0
 
     # ---------------------------------------------------------- segments --
     @property
@@ -431,7 +527,10 @@ class BitmapArena:
             owner[:self.n_rows] = self._owner[:self.n_rows]
             cover = np.zeros(cap, np.int32)
             cover[:self.n_rows] = self._cover[:self.n_rows]
+            rep = np.zeros(cap, np.int8)
+            rep[:self.n_rows] = self._rep[:self.n_rows]
             self._refs, self._owner, self._cover = refs, owner, cover
+            self._rep = rep
         slot = self.n_rows
         self.n_rows += 1
         return slot
@@ -462,6 +561,7 @@ class BitmapArena:
             self._refs[slot] = 1
             self._owner[slot] = shard
             self._cover[slot] = cov
+            self._rep[slot] = REP_BITMAP
             self._bump_live()
             return slot
 
@@ -486,8 +586,161 @@ class BitmapArena:
             self._refs[slot] = 1
             self._owner[slot] = shard
             self._cover[slot] = cov
+            self._rep[slot] = REP_BITMAP
             self._bump_live()
             return slot
+
+    # ------------------------------------------------- sparse lifecycle --
+    def _push_sparse(self, rep: int, tids: np.ndarray, support: int,
+                     shard: int, cover: Optional[int],
+                     anchor: Optional[int] = None) -> int:
+        t = np.ascontiguousarray(tids, dtype=np.uint32)
+        with self._lock:
+            slot = self._alloc_slot()
+            self._refs[slot] = 1
+            self._owner[slot] = shard
+            self._cover[slot] = (len(self._seg_words) if cover is None
+                                 else cover)
+            self._rep[slot] = rep
+            self._sparse[slot] = t
+            self._ssupport[slot] = int(support)
+            if anchor is not None:
+                self._anchor[slot] = anchor
+                if anchor >= self.n_base:     # pin the diffset's parent
+                    self._refs[anchor] += 1
+            self.sparse_pushed += 1
+            self.sparse_live += 1
+            self.sparse_bytes_live += t.nbytes
+            self.peak_sparse_bytes = max(self.peak_sparse_bytes,
+                                         self.sparse_bytes_live)
+            self._bump_live()
+            return slot
+
+    def push_tids(self, tids: np.ndarray, shard: int = 0,
+                  cover: Optional[int] = None) -> int:
+        """Append one sparse row as a sorted uint32 tid-list; refcount 1.
+        Shares the handle space (and refcounting / coverage / owner
+        bookkeeping) with word-column rows, but carries no word-column
+        payload — the slot's store words are dead and device mirrors
+        keep it zeroed."""
+        return self._push_sparse(REP_TIDLIST, tids, len(tids), shard,
+                                 cover)
+
+    def push_diffset(self, diff: np.ndarray, anchor: int, support: int,
+                     shard: int = 0, cover: Optional[int] = None) -> int:
+        """Append one dEclat diffset row: ``diff`` holds the tids of the
+        *anchor* (parent prefix) row NOT in this row, so this row's tid
+        set is ``tids(anchor) \\ diff`` and its support is
+        ``support(anchor) - len(diff)`` (stored explicitly as
+        ``support``). The anchor is retained until this row is
+        released — releasing a diffset cascades one release to its
+        anchor."""
+        return self._push_sparse(REP_DIFFSET, diff, support, shard,
+                                 cover, anchor=anchor)
+
+    def sparsify_push(self, row: np.ndarray, shard: int = 0,
+                      cover: Optional[int] = None) -> int:
+        """Scan a dense word-row into a tid-list row (billed sparsify
+        conversion) — the prefix cache's path when the density model
+        says a freshly built intersection should live sparse."""
+        t = bitmap_to_tids(row)
+        with self._lock:
+            self.sparsify_ops += 1
+            self.sparsify_bytes += row.nbytes
+        return self.push_tids(t, shard=shard, cover=cover)
+
+    def rep_of(self, handle: int) -> int:
+        """REP_BITMAP / REP_TIDLIST / REP_DIFFSET tag of a row."""
+        return int(self._rep[handle])
+
+    def rep_name(self, handle: int) -> str:
+        return REP_NAMES[self.rep_of(handle)]
+
+    def cover_of(self, handle: int) -> int:
+        return int(self._cover[handle])
+
+    def tids_of(self, handle: int) -> np.ndarray:
+        """Raw sparse payload of a tid-list or diffset row (for a
+        diffset this is the *difference*, not the tid set — see
+        :meth:`resolve_tids`)."""
+        return self._sparse[handle]
+
+    def anchor_of(self, handle: int) -> Optional[int]:
+        return self._anchor.get(handle)
+
+    def sparse_support(self, handle: int) -> int:
+        """Stored support of a sparse row (len(tids) for tid-lists,
+        anchor support minus difference size for diffsets)."""
+        return self._ssupport[handle]
+
+    def resolve_tids(self, handle: int) -> np.ndarray:
+        """Explicit sorted tid set of ANY row. Tid-lists are returned
+        as-is; diffsets reconstruct ``tids(anchor) \\ diff`` (walking
+        the anchor chain); bitmap rows are scanned — billed as a
+        sparsify conversion, since it turns W words into a tid array."""
+        rep = int(self._rep[handle])
+        if rep == REP_TIDLIST:
+            return self._sparse[handle]
+        if rep == REP_DIFFSET:
+            parent = self.resolve_tids(self._anchor[handle])
+            return sorted_difference(parent, self._sparse[handle])
+        tids = bitmap_to_tids(self.row(handle))
+        with self._lock:
+            self.sparsify_ops += 1
+            self.sparsify_bytes += self.n_words * 4
+        return tids
+
+    def densify(self, handle: int) -> np.ndarray:
+        """Full-width dense word-column of ANY row; for sparse rows
+        this is a billed densify conversion (the transient bitmap a
+        dense-only consumer forces)."""
+        rep = int(self._rep[handle])
+        if rep == REP_BITMAP:
+            return self.row(handle)
+        if rep == REP_TIDLIST:
+            out = tids_to_bitmap(self._sparse[handle], self.n_words)
+        else:
+            anchor = self.densify(self._anchor[handle])
+            out = anchor.copy()
+            d = self._sparse[handle]
+            if len(d):
+                np.bitwise_and.at(
+                    out, d >> np.uint32(5),
+                    ~(np.uint32(1) << (d & np.uint32(31))))
+        with self._lock:
+            self.densify_ops += 1
+            self.densify_bytes += self.n_words * 4
+        return out
+
+    def seg_tid_range(self, seg: int) -> Tuple[int, int]:
+        """[lo, hi) global tid bounds of one segment — the searchsorted
+        window a segment-restricted sparse sweep filters tids with."""
+        lo = 32 * sum(self._seg_words[:seg])
+        return lo, lo + 32 * self._seg_words[seg]
+
+    def gather_bits_rows(self, tids: np.ndarray,
+                         handles: Sequence[int]) -> np.ndarray:
+        """[len(handles), len(tids)] bool: bit test of each handle's
+        DENSE row at each tid — the class task's batched child carve.
+        One ``np.ix_`` gather per segment serves every row at once;
+        per-child :func:`gather_bits` calls pay ~10x numpy call
+        overhead for the same reads."""
+        out = np.zeros((len(handles), len(tids)), bool)
+        if not len(tids) or not len(handles):
+            return out
+        hs = [int(h) for h in handles]
+        for g in range(self.n_segments):
+            if not self.seg_words(g):
+                continue
+            lo, hi = self.seg_tid_range(g)
+            i0, i1 = np.searchsorted(tids, [lo, hi])
+            if i0 == i1:
+                continue
+            t = tids[i0:i1].astype(np.int64) - lo
+            w = self.seg_view(g)[np.ix_(hs, t >> 5)]
+            out[:, i0:i1] = (w >> (t & 31).astype(np.uint32)[None, :]
+                             ) & np.uint32(1)
+        return out
 
     def owner_of(self, handle: int) -> int:
         """Owning shard of a row; -1 for replicated (pinned base) rows."""
@@ -515,15 +768,21 @@ class BitmapArena:
                 if int(self._owner[h]) == dst:
                     continue
                 self._owner[h] = dst
-                for g in range(int(self._cover[h])):
-                    wb = self._seg_words[g] * 4
-                    if not wb:
-                        continue
-                    resident = (h < dn.get(g, 0)
-                                and h not in inv.get(g, ()))
-                    if not resident:
-                        self.d2d_bytes += wb
-                        mig.setdefault(g, set()).add(h)
+                if self._rep[h] != REP_BITMAP:
+                    # sparse payload crosses once, at its actual size
+                    if h not in self._sparse_res[dst]:
+                        self.d2d_bytes += self._sparse[h].nbytes
+                        self._sparse_res[dst].add(h)
+                else:
+                    for g in range(int(self._cover[h])):
+                        wb = self._seg_words[g] * 4
+                        if not wb:
+                            continue
+                        resident = (h < dn.get(g, 0)
+                                    and h not in inv.get(g, ()))
+                        if not resident:
+                            self.d2d_bytes += wb
+                            mig.setdefault(g, set()).add(h)
                 self.migrations += 1
                 moved += 1
         return moved
@@ -535,15 +794,33 @@ class BitmapArena:
             self._refs[handle] += 1
 
     def release(self, handle: int) -> None:
+        """Drop one reference; a freed diffset row cascades one release
+        to its anchor (the parent row it pinned at push time), walking
+        the chain iteratively outside the lock."""
+        h: Optional[int] = handle
+        while h is not None:
+            h = self._release_one(h)
+
+    def _release_one(self, handle: int) -> Optional[int]:
         if handle < self.n_base:
-            return                    # pinned item row
+            return None               # pinned item row
         with self._lock:
             self._refs[handle] -= 1
             if self._refs[handle] == 0:
                 self._free.append(handle)
                 self.live_extra -= 1
+                if self._rep[handle] != REP_BITMAP:
+                    t = self._sparse.pop(handle)
+                    self.sparse_live -= 1
+                    self.sparse_bytes_live -= t.nbytes
+                    self._ssupport.pop(handle, None)
+                    self._rep[handle] = REP_BITMAP
+                    for s in range(self.n_shards):
+                        self._sparse_res[s].discard(handle)
+                    return self._anchor.pop(handle, None)
             elif self._refs[handle] < 0:   # pragma: no cover - API misuse
                 raise RuntimeError(f"double release of handle {handle}")
+        return None
 
     def refcount(self, handle: int) -> int:
         return int(self._refs[handle])
@@ -552,7 +829,11 @@ class BitmapArena:
     def row(self, handle: int) -> np.ndarray:
         """[n_words] view of one live row. Zero-copy for single-segment
         arenas (the non-streaming hot path); for segmented arenas this
-        is a concatenated copy, zero-filled past the row's coverage."""
+        is a concatenated copy, zero-filled past the row's coverage.
+        Sparse rows densify on the fly (billed — see :meth:`densify`),
+        so dense-only consumers stay correct on any handle."""
+        if self._rep[handle] != REP_BITMAP:
+            return self.densify(handle)
         if len(self._stores) == 1:
             return self._stores[0][handle]
         cov = int(self._cover[handle])
@@ -566,6 +847,8 @@ class BitmapArena:
         past the row's coverage — the boundary-consistent read for an
         overlapped refresh (segments appended after the boundary are
         invisible, so two reads of the same handle agree in width)."""
+        if self._rep[handle] != REP_BITMAP:
+            return self.densify(handle)[:self.n_words_upto(upto)]
         if upto == 1:
             return self._stores[0][handle]
         cov = int(self._cover[handle])
@@ -612,7 +895,10 @@ class BitmapArena:
 
     @property
     def live_bytes_extra(self) -> int:
-        return self.live_extra * self.n_words * 4
+        """Retained non-base payload: dense rows at full row width,
+        sparse rows at their actual tid-array size."""
+        return ((self.live_extra - self.sparse_live) * self.n_words * 4
+                + self.sparse_bytes_live)
 
     @property
     def peak_bytes_extra(self) -> int:
@@ -660,7 +946,8 @@ class BitmapArena:
             return h < self.n_base or int(self._owner[h]) in (-1, shard)
 
         for h in range(lo, n):
-            if _owned(h) and _live(h) and self._covered(h, seg):
+            if (_owned(h) and _live(h) and self._covered(h, seg)
+                    and self._rep[h] == REP_BITMAP):
                 fresh_owned.append(h)
                 if h in mig:          # transfer billed at migrate time
                     mig.discard(h)
@@ -675,8 +962,12 @@ class BitmapArena:
 
         def _classify(h: int) -> None:
             inv.discard(h)
-            if not (_live(h) and self._covered(h, seg)):
-                fetch.append(h)       # no real payload: never billed
+            if (not (_live(h) and self._covered(h, seg))
+                    or self._rep[h] != REP_BITMAP):
+                # no word-column payload: dead/uncovered rows, and
+                # sparse rows (their tid payload ships per-launch and
+                # bills via _note_sparse / count_h2d instead)
+                fetch.append(h)
             elif _owned(h):
                 if h in mig:          # prepaid migration landing
                     mig.discard(h)
@@ -713,10 +1004,25 @@ class BitmapArena:
         if self.n_shards == 1:
             return
         with self._lock:
+            self._note_sparse(shard, handles)
             segs = (segments if segments is not None
                     else range(len(self._seg_words)))
             for g in segs:
                 self._sync_plan(shard, g, handles)
+
+    def _note_sparse(self, shard: int, handles: Sequence[int]) -> None:
+        """Cross-shard residency billing for sparse rows (caller holds
+        the lock): a foreign tid/diffset payload read by ``shard`` is
+        billed to d2d once per residency, at its actual nbytes — the
+        sparse analogue of _sync_plan's per-row word-column bill."""
+        res = self._sparse_res[shard]
+        for h in set(handles):
+            if (self._rep[h] != REP_BITMAP and h not in res
+                    and int(self._owner[h]) not in (-1, shard)):
+                t = self._sparse.get(h)
+                if t is not None:
+                    self.d2d_bytes += t.nbytes
+                    res.add(h)
 
     def device_rows(self, shard: int = 0,
                     needed: Optional[Sequence[int]] = None,
@@ -744,6 +1050,8 @@ class BitmapArena:
                 self.note_access(shard, needed, segments=(segment,))
             return None
         with self._lock:
+            if needed is not None:
+                self._note_sparse(shard, needed)
             lo, n, fresh_owned, fresh_h2d, reupload, fetch = \
                 self._sync_plan(shard, segment, needed)
             store = self._stores[segment]
@@ -756,6 +1064,10 @@ class BitmapArena:
                         fresh[j] = 0          # unfetched foreign row
             re_rows = store[reupload].copy() if reupload else None
             fe_rows = store[fetch].copy() if fetch else None
+            if fe_rows is not None:
+                for j, h in enumerate(fetch):
+                    if self._rep[h] != REP_BITMAP:
+                        fe_rows[j] = 0    # sparse slot: store words dead
         import jax.numpy as jnp
 
         def _place(arr):

@@ -1,0 +1,2 @@
+from repro.kernels.gather_intersect.ops import (  # noqa: F401
+    gather_intersect_many)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: sparse gather-intersect support counting.
+
+counts[b, e] = Σ_s bit(exts[b, e], tids[b, s])
+
+This is the hybrid representation's sparse sweep: each request's
+prefix row arrives as a sorted tid-list (or dEclat diffset — the
+kernel doesn't care which), and instead of AND+popcount over all W
+words, the kernel walks the S tids and for each one gathers a single
+ext word and tests a single bit — O(S) work per extension regardless
+of row width.
+
+Layout: the extension block is held WORD-MAJOR ([W, E_TILE]) so the
+per-tid dynamic index lands on the sublane axis (supported scalar
+dynamic indexing, per the Pallas TPU guide) and the gathered slice
+``exts_t[ds(w, 1), :]`` is a full E_TILE lane vector — one VPU op per
+tid covers the whole extension tile. The tid walk is a fori_loop with
+padded lanes carrying the sentinel -1 (masked, not skipped: the loop
+trip count must be static).
+
+VMEM: the whole W axis of one request's extension tile is resident
+([W_pad, E_TILE] uint32 = W_pad·512 B), fine up to ~16K words (512K
+transactions per segment). Past that a W-tiled variant with a
+tid-in-tile guard would be needed; the cost model picks the dense
+kernel long before rows get both that wide and sparse-worthy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+E_TILE = 128     # lane width of one extension tile
+W_SUB = 8        # sublane multiple for the word-major axis
+
+
+def _many_kernel(tids_ref, exts_ref, out_ref):
+    # tids_ref: [1, S]; exts_ref: [1, W, E_TILE] (word-major);
+    # out_ref: [1, E_TILE]
+    s_len = tids_ref.shape[1]
+
+    def body(s, acc):
+        t = tids_ref[0, s]
+        tt = jnp.maximum(t, 0)
+        w = tt >> 5
+        bit = (tt & 31).astype(jnp.uint32)
+        row = exts_ref[0, pl.ds(w, 1), :]              # [1, E_TILE]
+        bits = ((row >> bit) & jnp.uint32(1)).astype(jnp.int32)
+        return acc + jnp.where(t >= 0, bits, 0)
+
+    acc0 = jnp.zeros(out_ref.shape, jnp.int32)
+    out_ref[...] = jax.lax.fori_loop(0, s_len, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_intersect_many_kernel(tids: jnp.ndarray, exts: jnp.ndarray,
+                                 *, interpret: bool = False
+                                 ) -> jnp.ndarray:
+    """tids: [B, S] int32 (-1 = padded lane); exts: [B, E, W] uint32
+    -> counts [B, E] int32.
+
+    E is padded to E_TILE, W to a sublane multiple (padded words are
+    never gathered: every valid tid is < 32·W). The extension block is
+    transposed word-major on device before the launch.
+    """
+    b, e, w = exts.shape
+    ep = (e + E_TILE - 1) // E_TILE * E_TILE
+    wp = max((w + W_SUB - 1) // W_SUB * W_SUB, W_SUB)
+    if (ep, wp) != (e, w):
+        exts = jnp.pad(exts, ((0, 0), (0, ep - e), (0, wp - w)))
+    exts_t = jnp.transpose(exts, (0, 2, 1))            # [B, Wp, Ep]
+    grid = (b, ep // E_TILE)
+    out = pl.pallas_call(
+        _many_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tids.shape[1]), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, wp, E_TILE), lambda bi, i: (bi, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, E_TILE), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ep), jnp.int32),
+        interpret=interpret,
+    )(tids, exts_t)
+    return out[:, :e]

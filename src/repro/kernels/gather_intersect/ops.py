@@ -1,0 +1,56 @@
+"""jit'd public wrapper for the sparse gather-intersect sweep.
+
+Mirrors ``bitmap_join.ops``: one lru-cached jit wrapper per reference
+function (fresh per-call ``jax.jit`` would re-trace every shape), and
+the same four execution modes so ``SweepDispatcher`` backends can put
+dense and sparse batches of one flush through matching strategies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_intersect.kernel import (
+    gather_intersect_many_kernel)
+from repro.kernels.gather_intersect.ref import gather_intersect_many_ref
+
+MODES = ("auto", "ref", "pallas-interpret", "pallas-jit")
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(fn):
+    return jax.jit(fn)
+
+
+def gather_intersect_many(tids: jnp.ndarray, exts: jnp.ndarray,
+                          mask: jnp.ndarray | None = None,
+                          *, mode: str = "auto") -> jnp.ndarray:
+    """Batched sparse sweep: counts[b, e] = |tids[b] ∩ exts[b, e]|.
+
+    tids: [B, S] int32 sorted per row, padded with -1 (ragged batches);
+    exts: [B, E, W] uint32 word-columns; optional mask [B, E] bool
+    zeroes padded extension lanes. An empty tid axis (S == 0) is the
+    all-empty-intersection fast path — no launch at all.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    b, e, _ = exts.shape
+    if tids.shape[1] == 0:
+        return jnp.zeros((b, e), jnp.int32)
+    if mode == "ref":
+        counts = _jitted(gather_intersect_many_ref)(tids, exts)
+    elif mode == "pallas-interpret":
+        counts = gather_intersect_many_kernel(tids, exts, interpret=True)
+    elif mode == "pallas-jit":
+        counts = gather_intersect_many_kernel(tids, exts, interpret=False)
+    else:                                     # auto: Pallas on TPU only
+        if jax.default_backend() == "tpu":
+            counts = gather_intersect_many_kernel(tids, exts,
+                                                  interpret=False)
+        else:
+            counts = _jitted(gather_intersect_many_ref)(tids, exts)
+    if mask is not None:
+        counts = jnp.where(mask, counts, 0)
+    return counts

@@ -1,0 +1,41 @@
+"""Oracles for the gather_intersect kernel (jnp + pure numpy).
+
+counts[b, e] = |{s : tids[b, s] valid and bit tids[b, s] set in
+exts[b, e]}| — the sparse sweep: one word gathered and one bit tested
+per (ext, tid) pair, O(S) per extension regardless of row width W.
+Invalid (padded) tid lanes carry the sentinel -1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_intersect_many_ref(tids: jnp.ndarray, exts: jnp.ndarray
+                              ) -> jnp.ndarray:
+    """tids: [B, S] int32 (-1 = padded lane); exts: [B, E, W] uint32
+    -> counts [B, E] int32."""
+    w = exts.shape[-1]
+    valid = tids >= 0
+    t = jnp.where(valid, tids, 0).astype(jnp.uint32)
+    wi = jnp.minimum((t >> 5).astype(jnp.int32), w - 1)
+    bi = (t & jnp.uint32(31)).astype(jnp.uint32)
+    words = jnp.take_along_axis(exts, wi[:, None, :], axis=2)  # [B,E,S]
+    bits = (words >> bi[:, None, :]) & jnp.uint32(1)
+    bits = jnp.where(valid[:, None, :], bits, 0)
+    return bits.sum(axis=2).astype(jnp.int32)
+
+
+def gather_intersect_many_np(tids: np.ndarray, exts: np.ndarray
+                             ) -> np.ndarray:
+    """Pure-numpy twin of :func:`gather_intersect_many_ref` — the
+    host-side reference the parity tests pit against pallas-interpret."""
+    w = exts.shape[-1]
+    valid = tids >= 0
+    t = np.where(valid, tids, 0).astype(np.uint32)
+    wi = np.minimum((t >> np.uint32(5)).astype(np.int64), w - 1)
+    bi = (t & np.uint32(31)).astype(np.uint32)
+    words = np.take_along_axis(exts, wi[:, None, :], axis=2)   # [B,E,S]
+    bits = (words >> bi[:, None, :]) & np.uint32(1)
+    bits = np.where(valid[:, None, :], bits, 0)
+    return bits.sum(axis=2).astype(np.int32)

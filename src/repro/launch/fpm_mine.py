@@ -9,6 +9,7 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.core.buckets import REPRESENTATIONS
 from repro.core.fpm import (GRANULARITIES, mesh_over_devices, mine,
                             mine_serial)
 from repro.core.tidlist import pack_database
@@ -26,6 +27,11 @@ def main():
                     help="task grain: bucket (level-sync sweep), "
                          "candidate (scalar joins), or depth-first "
                          "(barrier-free class recursion)")
+    ap.add_argument("--representation", default="auto",
+                    choices=list(REPRESENTATIONS),
+                    help="row representation: bitmap (word-columns "
+                         "only), sparse (force tid-list/diffset rows), "
+                         "auto (density-driven per-subtree choice)")
     ap.add_argument("--backend", default="auto",
                     help="join backend: auto|numpy|pallas-interpret|"
                          "pallas-jit")
@@ -66,7 +72,8 @@ def main():
     db, prof = load(args.dataset, args.seed)
     n_items = (prof.n_dense_items if prof.kind == "dense"
                else prof.n_items)
-    bitmaps = pack_database(db, n_items)
+    bitmaps, item_counts = pack_database(db, n_items,
+                                         return_counts=True)
     frac = args.support if args.support is not None else prof.support
     ms = max(1, int(frac * len(db)))
     print(f"dataset=synth:{args.dataset} |D|={len(db)} items={n_items} "
@@ -93,7 +100,8 @@ def main():
                             granularity=args.granularity,
                             backend=args.backend, arena=args.arena,
                             max_batch=args.max_batch,
-                            flush_us=args.flush_us, mesh=mesh)
+                            flush_us=args.flush_us, mesh=mesh,
+                            representation=args.representation)
         rep = sm.refresh()
         print(f"stream gen1: |D|={rep.n_transactions} "
               f"frequent={rep.frequent} wall={rep.wall_s:.2f}s "
@@ -123,7 +131,8 @@ def main():
                         granularity=args.granularity,
                         backend=args.backend, arena=args.arena,
                         max_batch=args.max_batch, flush_us=args.flush_us,
-                        mesh=mesh)
+                        mesh=mesh, representation=args.representation,
+                        item_counts=item_counts)
         assert res == ref, f"{policy} result mismatch!"
         s = met.scheduler
         line = (f"{policy:10s} wall={met.wall_s:6.2f}s "
@@ -144,6 +153,17 @@ def main():
         if args.granularity == "depth-first":
             line += (f" peak_retained={met.peak_retained_bitmaps}"
                      f" ({met.peak_bytes_retained} B)")
+        if met.sparse_sweeps or met.sparse_rows:
+            line += (f"\n{'':10s} rep[{met.representation}]: "
+                     f"sweeps dense={met.dense_sweeps} "
+                     f"sparse={met.sparse_sweeps} "
+                     f"sparse_bytes={met.sparse_bytes_swept}B "
+                     f"rows={met.sparse_rows} "
+                     f"picks={met.rep_picks} "
+                     f"densify={met.densify_ops}"
+                     f"/{met.densify_bytes}B "
+                     f"sparsify={met.sparsify_ops}"
+                     f"/{met.sparsify_bytes}B")
         print(line)
 
 
