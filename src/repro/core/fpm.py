@@ -323,13 +323,16 @@ class DeltaPlan:
     on spawned tasks — the clustered policies drain stale-hot buckets
     first; None skips priority stamping entirely (an all-fresh first
     generation would otherwise pay the priority-drain scan for
-    nothing). Clean known candidates are never swept at all: that is
+    nothing). ``tenant`` tags every spawned task for the scheduler's
+    weighted-fair drain (multi-tenant serving; None on single-tenant
+    runs). Clean known candidates are never swept at all: that is
     the whole point."""
     known: Dict[Itemset, int]
     dirty_items: frozenset
     segments: Tuple[int, ...]
     base_segments: Tuple[int, ...]
     priority_of: Optional[Callable[[Itemset], float]] = None
+    tenant: object = None
     lock: threading.Lock = field(default_factory=threading.Lock)
     # refresh-side counters (how much re-mining the plan avoided)
     swept_full: int = 0
@@ -372,18 +375,69 @@ class DeltaPlan:
         return clean, dirty, fresh
 
 
+class EngineRuntime:
+    """The persistent engine substrate: one scheduler with
+    device-affine workers plus one sweep dispatcher per arena shard.
+
+    Batch ``mine`` spins one up per call and tears it down with the
+    run; the streaming/serving layer owns ONE across its whole life and
+    lends it to every refresh's :class:`MiningRun` — so query sweeps
+    submitted between (and during) refreshes land on the SAME
+    dispatchers as candidate sweeps and coalesce into the same
+    flushes. Idle cost is zero: dispatcher threads park untimed on
+    their condition variable and so do scheduler workers once nothing
+    is outstanding."""
+
+    def __init__(self, store: BitmapArena, *, policy: str = "clustered",
+                 n_workers: int = 8, granularity: str = "bucket",
+                 backend: str = "auto", max_batch: int = MAX_BATCH,
+                 flush_us: float = FLUSH_US):
+        backend_obj = resolve_backend(backend)
+        n_shards = store.n_shards
+        if n_shards > 1:
+            n_workers = max(n_workers, n_shards)  # ≥1 worker per shard
+        self.store = store
+        self.n_workers = n_workers
+        self.backend = backend_obj
+        self.device_of = [i % n_shards for i in range(n_workers)]
+        self.dispatchers = [
+            SweepDispatcher(store, backend_obj,
+                            n_clients=self.device_of.count(s),
+                            max_batch=max_batch, flush_us=flush_us,
+                            shard=s)
+            for s in range(n_shards)]
+        self.sched = TaskScheduler(
+            n_workers,
+            make_policy(policy, n_workers,
+                        _cluster_fn(granularity, policy)),
+            device_of=self.device_of,
+            migrate_cb=lambda hs, src, dst: store.migrate(hs, dst))
+
+    def shutdown(self) -> None:
+        self.sched.shutdown()
+        for dispatcher in self.dispatchers:
+            dispatcher.stop()
+
+
 class MiningRun:
     """The engine runtime shared by batch ``mine`` and streaming
     ``refresh``: one scheduler with device-affine workers, one sweep
     dispatcher per arena shard, per-worker prefix caches, and the
     metrics plumbing — built around an arena the caller owns (a batch
-    run discards it; a streaming run keeps it across refreshes)."""
+    run discards it; a streaming run keeps it across refreshes).
+
+    ``runtime`` lends a persistent :class:`EngineRuntime` instead of
+    building one: the run then reports scheduler/dispatcher gauges as
+    DELTAS against construction-time baselines (the shared runtime's
+    counters accumulate across refreshes and query traffic), and
+    ``close`` drains this run's caches but leaves the runtime alive."""
 
     def __init__(self, store: BitmapArena, *, policy: str,
                  n_workers: int, granularity: str, cache_size: int,
                  backend: str = "auto", max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US,
-                 representation: str = "auto", item_counts=None):
+                 representation: str = "auto", item_counts=None,
+                 runtime: Optional[EngineRuntime] = None):
         if granularity not in GRANULARITIES:
             raise ValueError(
                 f"granularity must be one of {GRANULARITIES}, "
@@ -392,10 +446,18 @@ class MiningRun:
             raise ValueError(
                 f"representation must be one of {REPRESENTATIONS}, "
                 f"got {representation!r}")
-        backend_obj = resolve_backend(backend)
-        n_shards = store.n_shards
-        if n_shards > 1:
-            n_workers = max(n_workers, n_shards)  # ≥1 worker per shard
+        if runtime is None:
+            runtime = EngineRuntime(
+                store, policy=policy, n_workers=n_workers,
+                granularity=granularity, backend=backend,
+                max_batch=max_batch, flush_us=flush_us)
+            self._owns_runtime = True
+        else:
+            if runtime.store is not store:
+                raise ValueError(
+                    "runtime was built over a different arena")
+            self._owns_runtime = False
+        self.runtime = runtime
         self.store = store
         self.granularity = granularity
         self.cache_size = cache_size
@@ -409,38 +471,52 @@ class MiningRun:
                           store.n_words, item_counts,
                           force=(None if representation == "auto"
                                  else "sparse")))
-        self.device_of = [i % n_shards for i in range(n_workers)]
-        self.dispatchers = [
-            SweepDispatcher(store, backend_obj,
-                            n_clients=self.device_of.count(s),
-                            max_batch=max_batch, flush_us=flush_us,
-                            shard=s)
-            for s in range(n_shards)]
-        self.metrics = MiningMetrics(n_devices=n_shards)
-        self.sched = TaskScheduler(
-            n_workers,
-            make_policy(policy, n_workers,
-                        _cluster_fn(granularity, policy)),
-            device_of=self.device_of,
-            migrate_cb=lambda hs, src, dst: store.migrate(hs, dst))
+        self.device_of = runtime.device_of
+        self.dispatchers = runtime.dispatchers
+        self.sched = runtime.sched
+        self.metrics = MiningMetrics(n_devices=store.n_shards)
         self.caches: Dict[int, _PrefixCache] = {}   # thread ident -> cache
-        self.sweep_joins = n_shards > 1
+        self.sweep_joins = store.n_shards > 1
+        # gauge baselines: zero for an owned runtime, the accumulated
+        # counters for a borrowed one — finalize() reports deltas
+        self._disp0 = [(d.flushes, d.requests, d.queue_flushes,
+                        d.queue_requests, d.query_requests)
+                       for d in self.dispatchers]
+        self._sched0 = self.sched.merged_stats()
 
     def close(self) -> None:
-        self.sched.shutdown()
-        for dispatcher in self.dispatchers:
-            dispatcher.stop()
+        if self._owns_runtime:
+            self.runtime.shutdown()
         for cache in self.caches.values():
             cache.drain()
 
+    def _disp_stats(self, d, base) -> Dict[str, float]:
+        f0, r0, qf0, qr0, q0 = base
+        fl = d.flushes - f0
+        rq = d.requests - r0
+        return {"device": d.shard, "flushes": fl,
+                "sweep_requests": rq,
+                "batch_occupancy": rq / fl if fl else 0.0,
+                "query_requests": d.query_requests - q0,
+                "queue_flushes": d.queue_flushes - qf0,
+                "queue_requests": d.queue_requests - qr0}
+
     def finalize(self, t0: float) -> MiningMetrics:
         """Fill the metrics from scheduler/dispatcher/arena gauges.
-        Arena gauges are cumulative over the arena's life — ``mine``
-        owns a fresh arena so they equal the run; ``refresh`` snapshots
-        them before/after to report per-refresh deltas."""
+        Scheduler and dispatcher gauges are deltas against this run's
+        construction (identical to totals for an owned runtime). Arena
+        gauges are cumulative over the arena's life — ``mine`` owns a
+        fresh arena so they equal the run; ``refresh`` snapshots them
+        before/after to report per-refresh deltas."""
         metrics, store = self.metrics, self.store
         metrics.wall_s = time.time() - t0
-        metrics.scheduler = self.sched.merged_stats()
+        now = self.sched.merged_stats()
+        sched_delta = {k: now[k] - self._sched0.get(k, 0)
+                       for k in now}
+        steals = sched_delta.get("steals", 0)
+        sched_delta["tasks_per_steal"] = (
+            sched_delta.get("tasks_stolen", 0) / max(steals, 1))
+        metrics.scheduler = sched_delta
         metrics.rows_touched = int(metrics.scheduler["rows_touched"])
         metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
         metrics.cache_hits = sum(c.hits for c in self.caches.values())
@@ -448,11 +524,15 @@ class MiningRun:
                                    for c in self.caches.values())
         metrics.cache_partial_hits = sum(c.partial_hits
                                          for c in self.caches.values())
-        metrics.flushes = sum(d.flushes for d in self.dispatchers)
-        total_requests = sum(d.requests for d in self.dispatchers)
+        metrics.per_device = [self._disp_stats(d, b)
+                              for d, b in zip(self.dispatchers,
+                                              self._disp0)]
+        metrics.flushes = sum(int(row["flushes"])
+                              for row in metrics.per_device)
+        total_requests = sum(int(row["sweep_requests"])
+                             for row in metrics.per_device)
         metrics.batch_occupancy = (total_requests / metrics.flushes
                                    if metrics.flushes else 0.0)
-        metrics.per_device = [d.stats() for d in self.dispatchers]
         metrics.h2d_bytes = store.h2d_bytes
         metrics.d2d_bytes = store.d2d_bytes
         metrics.migrations = store.migrations
@@ -591,7 +671,12 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
     clean/dirty/fresh split already skips clean work, and diffset
     handoffs are structurally disabled mid-refresh anyway."""
     n_w = store.n_words
-    upto = len(delta.base_segments) if delta is not None else None
+    # cached prefix rows must COVER every segment the plan sweeps;
+    # max+1 (not len) because a multi-tenant plan's segment set is a
+    # non-contiguous subset of the arena's segments (identical for the
+    # single-tenant prefix case, where base_segments is range(n))
+    upto = ((max(delta.base_segments) + 1)
+            if delta is not None and delta.base_segments else None)
     lock = threading.Lock()
     df_miner = None
     detached_tasks: List = []
@@ -718,17 +803,21 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             plan = keep
         metrics.buckets += len(plan)
         prio = delta.priority_of if delta is not None else None
+        tenant = delta.tenant if delta is not None else None
         tasks = [sched.spawn(sweep_task, b, segments,
                              attr=(b.key, b.prefix),
-                             priority=prio(b.prefix) if prio else 0.0)
+                             priority=prio(b.prefix) if prio else 0.0,
+                             tenant=tenant)
                  for b in plan]
         return plan, tasks
 
     def _spawn_candidates(cands, segments):
         prio = delta.priority_of if delta is not None else None
+        tenant = delta.tenant if delta is not None else None
         return [sched.spawn(count_task, c, segments,
                             attr=(prefix_hash(c), c),
-                            priority=prio(c[:-1]) if prio else 0.0)
+                            priority=prio(c[:-1]) if prio else 0.0,
+                            tenant=tenant)
                 for c in cands]
 
     def delta_chunk_task(chunk: List[Bucket]
@@ -768,7 +857,8 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         n_chunks = max(1, 4 * sched.n)
         size = max(1, -(-len(plan) // n_chunks))
         tasks = [sched.spawn(delta_chunk_task, plan[i:i + size],
-                             attr=(plan[i].key, plan[i].prefix))
+                             attr=(plan[i].key, plan[i].prefix),
+                             tenant=delta.tenant)
                  for i in range(0, len(plan), size)]
 
         def collect():
@@ -1261,6 +1351,7 @@ class _ClassMiner:
             priority=(delta.priority_of(prefix)
                       if delta is not None and delta.priority_of
                       else 0.0),
+            tenant=delta.tenant if delta is not None else None,
             handles=(ph,) if owned else ())
 
     def spawn_roots(self, frequent, result) -> None:

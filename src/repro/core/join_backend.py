@@ -50,6 +50,11 @@ from repro.core.tidlist import BitmapArena
 # before flushing a partial batch.
 MAX_BATCH = 32
 FLUSH_US = 200.0
+# Straggler cap once a QUERY-class (priority) request is pending: a
+# serving query still coalesces into whatever flush is forming, but
+# it will not sit out the full mining straggler window — the p99 a
+# lone query pays is bounded by this, not FLUSH_US.
+QUERY_FLUSH_US = 50.0
 
 
 @dataclass
@@ -76,11 +81,18 @@ class SweepRequest:
     for a diffset it is the subtrahend the engine turns into
     ``parent_support - count``. One flush may mix representations; the
     backend partitions per launch. Tuple prefixes are always dense
-    (streaming sweeps AND base item rows)."""
+    (streaming sweeps AND base item rows).
+
+    ``priority`` marks a QUERY-class request (the serving layer's
+    unknown-itemset sweeps): it jumps to the front of the pending
+    queue (guaranteed into the next flush) and caps the dispatcher's
+    straggler wait at ``QUERY_FLUSH_US`` — queries coalesce with
+    candidate sweeps but never wait out the full mining window."""
     prefix_handle: "int | Tuple[int, ...]"
     ext_handles: Tuple[int, ...]
     shard: int = 0
     segments: Optional[Tuple[int, ...]] = None
+    priority: bool = False
     future: Future = field(default_factory=Future)
 
     @property
@@ -554,18 +566,28 @@ class SweepDispatcher:
 
     def __init__(self, arena: BitmapArena, backend: JoinBackend,
                  n_clients: int, max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US, shard: int = 0):
+                 flush_us: float = FLUSH_US, shard: int = 0,
+                 query_flush_us: float = QUERY_FLUSH_US):
         self.arena = arena
         self.backend = backend
         self.n_clients = max(1, n_clients)
         self.max_batch = max(1, max_batch)
         self.flush_s = max(0.0, flush_us) * 1e-6
+        self.query_flush_s = max(0.0, query_flush_us) * 1e-6
         self.shard = shard
         self._pending: List[SweepRequest] = []
+        self._n_priority = 0          # priority requests in _pending
         self._cv = threading.Condition()
         self._stop = False
         self.flushes = 0
         self.requests = 0
+        self.query_requests = 0       # priority (serving) requests seen
+        # dispatcher-THREAD flushes only (excludes sweep_local /
+        # sweep_bits inline bursts, which bill themselves as flushes):
+        # the coalescing gauge the query-storm benchmark compares,
+        # since inline bursts never mix with anything by construction
+        self.queue_flushes = 0
+        self.queue_requests = 0
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"sweep-dispatcher-{shard}")
         self._thread.start()
@@ -573,43 +595,60 @@ class SweepDispatcher:
     # ------------------------------------------------------------ client --
     def submit(self, prefix_handle: int,
                ext_handles: Sequence[int],
-               segments: Optional[Sequence[int]] = None) -> Future:
+               segments: Optional[Sequence[int]] = None,
+               priority: bool = False) -> Future:
         p = (tuple(int(h) for h in prefix_handle)
              if isinstance(prefix_handle, tuple) else int(prefix_handle))
         req = SweepRequest(p, tuple(ext_handles),
                            shard=self.shard,
                            segments=(tuple(segments)
-                                     if segments is not None else None))
+                                     if segments is not None else None),
+                           priority=priority)
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
-            self._pending.append(req)
+            if priority:
+                self._pending.insert(0, req)
+                self._n_priority += 1
+                self.query_requests += 1
+            else:
+                self._pending.append(req)
             self._cv.notify_all()
         return req.future
 
     def _make_requests(self, sweeps: Sequence[Tuple],
-                       segments: Optional[Sequence[int]]
+                       segments: Optional[Sequence[int]],
+                       priority: bool = False
                        ) -> List[SweepRequest]:
         segs = tuple(segments) if segments is not None else None
         return [SweepRequest(
                     (tuple(int(h) for h in p) if isinstance(p, tuple)
                      else int(p)),
-                    tuple(e), shard=self.shard, segments=segs)
+                    tuple(e), shard=self.shard, segments=segs,
+                    priority=priority)
                 for p, e in sweeps]
 
     def submit_many(self, sweeps: Sequence[Tuple],
-                    segments: Optional[Sequence[int]] = None
-                    ) -> List[Future]:
+                    segments: Optional[Sequence[int]] = None,
+                    priority: bool = False) -> List[Future]:
         """Enqueue a burst of ``(prefix, ext_handles)`` sweeps under one
         lock acquisition / one wakeup — the streaming delta path's
         coalescing entry point (per-candidate ``submit`` calls would
         trickle in and flush at occupancy ~1). ``prefix`` may be a
-        handle or a tuple of handles (AND-reduced in the backend)."""
-        reqs = self._make_requests(sweeps, segments)
+        handle or a tuple of handles (AND-reduced in the backend).
+        ``priority=True`` marks the burst as query-class: it goes to
+        the FRONT of the pending queue (order preserved within the
+        burst) and shortens the straggler wait to ``query_flush_us``."""
+        reqs = self._make_requests(sweeps, segments, priority)
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
-            self._pending.extend(reqs)
+            if priority:
+                self._pending[:0] = reqs
+                self._n_priority += len(reqs)
+                self.query_requests += len(reqs)
+            else:
+                self._pending.extend(reqs)
             self._cv.notify_all()
         return [r.future for r in reqs]
 
@@ -695,7 +734,10 @@ class SweepDispatcher:
         on the arena, not here)."""
         return {"device": self.shard, "flushes": self.flushes,
                 "sweep_requests": self.requests,
-                "batch_occupancy": self.batch_occupancy}
+                "batch_occupancy": self.batch_occupancy,
+                "query_requests": self.query_requests,
+                "queue_flushes": self.queue_flushes,
+                "queue_requests": self.queue_requests}
 
     # -------------------------------------------------------------- loop --
     def _loop(self):
@@ -709,14 +751,24 @@ class SweepDispatcher:
                 if len(self._pending) < full and not self._stop:
                     deadline = time.monotonic() + self.flush_s
                     while len(self._pending) < full and not self._stop:
+                        # a pending query caps the straggler wait: the
+                        # cap re-applies on every pass so a query that
+                        # ARRIVES mid-wait also shortens the window
+                        if self._n_priority:
+                            deadline = min(
+                                deadline,
+                                time.monotonic() + self.query_flush_s)
                         left = deadline - time.monotonic()
                         if left <= 0:
                             break
                         self._cv.wait(timeout=left)
                 batch = self._pending[:self.max_batch]
                 del self._pending[:self.max_batch]
+                self._n_priority -= sum(1 for r in batch if r.priority)
                 self.flushes += 1       # gauges share the cv lock with
                 self.requests += len(batch)   # sweep_local's local bursts
+                self.queue_flushes += 1
+                self.queue_requests += len(batch)
             try:
                 results = self.backend.sweep_many(self.arena, batch)
             except BaseException as e:  # noqa: BLE001 - resolve futures:

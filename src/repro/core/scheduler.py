@@ -50,6 +50,8 @@ class Task:
     depth: int = 0            # prefix depth: deeper tasks drain first
     priority: float = 0.0     # staleness priority: stale-hot buckets
                               # drain first (streaming re-mine)
+    tenant: Any = None        # owning tenant (multi-tenant serving):
+                              # the weighted-fair drain's accounting key
     handles: Tuple[int, ...] = ()   # arena handles the task retains —
                                     # a cross-device steal migrates them
     result: Any = None
@@ -155,6 +157,16 @@ class ClusteredPolicy(SchedulingPolicy):
     paper's first-non-empty rule; for the barrier-free engine the depth
     tiebreak drains each subtree before starting the next, bounding the
     number of retained parent-handed bitmaps.
+
+    Multi-tenant fairness (:meth:`set_weights`): when tenant weights
+    are configured, drain selection ranks buckets by *weighted
+    deficit* first — ``weight(tenant) / (tasks served for tenant +
+    1)``, per worker — so a heavy tenant's refresh cannot starve a
+    light tenant's tasks out of the drain order; priority and depth
+    break ties WITHIN the deficit rank, preserving the staleness /
+    subtree semantics inside each tenant's share. With no weights set
+    (every single-tenant run) the rank and the O(1) fast path are
+    byte-for-byte the old behaviour.
     """
 
     DRAIN_SCAN_CAP = 64   # bound the deepest-bucket scan per switch
@@ -171,6 +183,29 @@ class ClusteredPolicy(SchedulingPolicy):
         self._hot = [0] * n_workers    # queued tasks with priority > 0
         self.switches = [0] * n_workers  # drain-bucket selections (the
                                          # paper's bucket-switch count)
+        self.weights: Optional[Dict[Any, float]] = None
+        # per-worker tasks-served tally per tenant (the deficit
+        # denominator); merged across workers by tenant_served()
+        self._served: List[Dict[Any, int]] = [
+            dict() for _ in range(n_workers)]
+
+    def set_weights(self, weights: Optional[Dict[Any, float]]) -> None:
+        """Configure tenant fairness weights (None/{} disables and
+        restores the single-tenant fast path). Unlisted tenants —
+        including ``tenant=None`` tasks — weigh 1.0."""
+        self.weights = dict(weights) if weights else None
+
+    def tenant_served(self) -> Dict[Any, int]:
+        """Tasks drained per tenant, merged across workers."""
+        out: Dict[Any, int] = {}
+        for served in self._served:
+            for t, n in served.items():
+                out[t] = out.get(t, 0) + n
+        return out
+
+    def _deficit(self, worker: int, tenant: Any) -> float:
+        w = self.weights.get(tenant, 1.0)
+        return w / (self._served[worker].get(tenant, 0) + 1)
 
     def put(self, worker, task):
         key = self.cluster_of(task.attr)
@@ -192,16 +227,21 @@ class ClusteredPolicy(SchedulingPolicy):
         classes queue up, inverting the drain order and unbounding the
         retained-bitmap peak). With no deep or hot task queued (the
         level-synchronous batch engines: every depth and priority is 0)
-        this is the paper's O(1) first-non-empty rule."""
-        if not self._deep[worker] and not self._hot[worker]:
+        this is the paper's O(1) first-non-empty rule. Tenant weights
+        prepend the weighted-deficit rank (see class docstring)."""
+        weights = self.weights
+        if (weights is None and not self._deep[worker]
+                and not self._hot[worker]):
             return next(iter(tab))
-        best, best_rank = None, (-1.0, -1)
+        best, best_rank = None, None
         for i, key in enumerate(reversed(tab)):
             if i >= self.DRAIN_SCAN_CAP:
                 break
             head = tab[key][0]
             rank = (head.priority, head.depth)
-            if rank > best_rank:
+            if weights is not None:
+                rank = (self._deficit(worker, head.tenant),) + rank
+            if best_rank is None or rank > best_rank:
                 best, best_rank = key, rank
         return best
 
@@ -225,6 +265,9 @@ class ClusteredPolicy(SchedulingPolicy):
                 self._deep[worker] -= 1
             if task.priority > 0:
                 self._hot[worker] -= 1
+            if self.weights is not None:
+                served = self._served[worker]
+                served[task.tenant] = served.get(task.tenant, 0) + 1
             return task
 
     def steal(self, thief, victim):
@@ -286,8 +329,10 @@ class NearestNeighborPolicy(ClusteredPolicy):
                     # a stale-hot bucket is served before a merely
                     # nearby one, so the serving layer converges on
                     # popular prefixes first — then item overlap, then
-                    # the depth-first tiebreak.
-                    best, best_rank = None, (-1.0, -1, -1)
+                    # the depth-first tiebreak. Tenant weights prepend
+                    # the weighted-deficit rank, like _pick_drain.
+                    weights = self.weights
+                    best, best_rank = None, None
                     for i, cand in enumerate(reversed(tab)):
                         if i >= self.SCAN_CAP:
                             break
@@ -295,7 +340,10 @@ class NearestNeighborPolicy(ClusteredPolicy):
                             if isinstance(cand, tuple) else 0
                         head = tab[cand][0]
                         rank = (head.priority, ov, head.depth)
-                        if rank > best_rank:
+                        if weights is not None:
+                            rank = (self._deficit(worker, head.tenant),
+                                    ) + rank
+                        if best_rank is None or rank > best_rank:
                             best, best_rank = cand, rank
                     key = best
                 self._drain[worker] = key
@@ -312,6 +360,9 @@ class NearestNeighborPolicy(ClusteredPolicy):
                 self._deep[worker] -= 1
             if task.priority > 0:
                 self._hot[worker] -= 1
+            if self.weights is not None:
+                served = self._served[worker]
+                served[task.tenant] = served.get(task.tenant, 0) + 1
             return task
 
 
@@ -357,7 +408,7 @@ class TaskScheduler:
 
     # ------------------------------------------------------------ spawn --
     def spawn(self, fn, *args, attr=None, depth: int = 0,
-              priority: float = 0.0,
+              priority: float = 0.0, tenant: Any = None,
               handles: Tuple[int, ...] = (),
               worker: Optional[int] = None):
         """Enqueue a task. When called from inside a task body, the child
@@ -368,10 +419,11 @@ class TaskScheduler:
         via :func:`stable_hash` so placement reproduces across
         processes) or round-robin (approximates even initial placement).
         ``priority`` is the staleness-hotness the clustered policies'
-        drain selection prefers; ``handles`` names arena rows the task
-        retains (the depth-first handoff bitmaps); a cross-device steal
-        migrates them."""
-        task = Task(fn, args, attr, depth, priority, handles)
+        drain selection prefers; ``tenant`` tags the task for the
+        weighted-fair drain (multi-tenant serving); ``handles`` names
+        arena rows the task retains (the depth-first handoff bitmaps);
+        a cross-device steal migrates them."""
+        task = Task(fn, args, attr, depth, priority, tenant, handles)
         if worker is None:
             worker = getattr(self._tls, "worker_id", None)
         if worker is None:
@@ -488,7 +540,11 @@ class TaskScheduler:
                 # busy-spin: an idle worker burns no CPU while one deep
                 # branch stays live. The timeout is a residual safety
                 # net (e.g. a steal victim's queue refilling between
-                # our probe and the park without a new put).
+                # our probe and the park without a new put) — but with
+                # NOTHING outstanding there is no queue to refill and
+                # no running task to spawn, so a fully idle scheduler
+                # parks untimed: a persistent serving runtime costs
+                # zero wakeups between refreshes.
                 with self._cv:
                     if self._stop:
                         return
@@ -497,7 +553,8 @@ class TaskScheduler:
                         self._cv.wait_for(
                             lambda: (self._stop
                                      or self._work_seq != seen),
-                            timeout=0.05)
+                            timeout=(None if self._outstanding == 0
+                                     else 0.05))
                     finally:
                         self._parked -= 1
                 continue

@@ -3,7 +3,7 @@
 The batch engine (``repro.core.fpm``) answers "what is frequent in this
 database" once; a deployed miner faces a database that never stops
 growing and queries that cannot wait for a re-mine. This module closes
-that gap with three pieces on top of the existing arena/scheduler/
+that gap with four pieces on top of the existing arena/scheduler/
 dispatcher stack:
 
 ``StreamingMiner.ingest(batch)``
@@ -29,37 +29,163 @@ dispatcher stack:
     the published patterns converge on popular prefixes earliest:
     the paper's task-attribute machinery doing live scheduling work.
 
-``PatternServer``
-    answers ``support`` / ``top_k`` / ``frequent`` queries from the
-    last PUBLISHED generation: every refresh builds an immutable
-    ``PatternSnapshot`` and swaps it in atomically (one reference
-    assignment), so queries never block on mining and never observe a
-    half-updated result.
+``PatternServer`` / ``QueryPlanner``
+    answer ``support`` / ``top_k`` / ``frequent`` queries. Dict hits
+    read the last PUBLISHED generation: every refresh builds an
+    immutable ``PatternSnapshot`` (frequent supports AND the negative
+    border) and swaps it in atomically, so those queries never block
+    on mining and never observe a half-updated result. An itemset the
+    generation never counted is no longer a ``None`` — the planner
+    decomposes it into a prefix-intersection + extension-count sweep
+    and enqueues it as a PRIORITY request on the same live per-shard
+    dispatchers the refresh path uses, so query sweeps coalesce into
+    the very flushes that carry candidate sweeps. Answered supports
+    backfill the known store: a repeat of the same query is a dict
+    hit. ``top_k`` ranks on a device-resident index (a jitted masked
+    top-k over flat itemset encodings) once the snapshot is large
+    enough to pay for it.
+
+``TenantHub``
+    multiplexes several independent streams onto ONE arena and ONE
+    persistent :class:`~repro.core.fpm.EngineRuntime`. Each tenant
+    owns a disjoint, tagged segment set, its own threshold/known
+    store/snapshot; re-mine tasks carry the tenant tag and the drain
+    rules serve the highest weight/(served+1) deficit first, so a
+    heavy tenant cannot starve a light one.
 
 Correctness anchor: after ANY ingest sequence, ``refresh()`` yields
 exactly the frequent itemsets (and supports) of a from-scratch
 ``fpm.mine`` on the concatenated database — for every granularity,
-policy, and mesh shape. ``_known`` keeps the support of every
-candidate ever swept (frequent and negative border); it grows with the
-pattern space, not the transaction count, and is what makes clean
-subtrees skippable without a sweep.
+policy, and mesh shape; and ``support_many`` answers equal brute-force
+counts over the refreshed prefix of the database. ``_known`` keeps the
+support of every candidate ever swept (frequent and negative border);
+it grows with the pattern space, not the transaction count, and is
+what makes clean subtrees skippable without a sweep.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from types import MappingProxyType
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
 from repro.core import tidlist
-from repro.core.fpm import (DeltaPlan, MiningMetrics, MiningRun,
-                            _resolve_mesh, mine_more)
+from repro.core.fpm import (DeltaPlan, EngineRuntime, MiningMetrics,
+                            MiningRun, _resolve_mesh, mine_more)
 from repro.core.itemsets import Itemset
 from repro.core.join_backend import FLUSH_US, MAX_BATCH
+from repro.core.scheduler import ClusteredPolicy
 from repro.core.tidlist import BitmapArena, pack_database
+
+
+# ---------------------------------------------------------------------------
+# device-resident top-k
+# ---------------------------------------------------------------------------
+
+# snapshots below this many itemsets rank faster with one numpy argsort
+# than with a device round-trip; tests monkeypatch it to 0 to force the
+# device path on tiny inputs
+TOPK_DEVICE_MIN = 4096
+
+_topk_fn = None
+
+
+def _device_topk_fn():
+    """The jitted masked top-k, built once: rows whose length exceeds
+    the prefix length and whose leading positions equal the prefix
+    keep their support, everything else scores -1, and
+    ``lax.top_k`` ranks. Its smallest-index tie rule over
+    lexicographically sorted rows reproduces the host ordering."""
+    global _topk_fn
+    if _topk_fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        def kernel(enc, sup, lens, pref, plen, k):
+            pos = jnp.arange(enc.shape[1])[None, :]
+            match = jnp.all((pos >= plen) | (enc == pref[None, :]),
+                            axis=1)
+            match = match & (lens > plen)
+            return jax.lax.top_k(jnp.where(match, sup, -1), k)
+
+        _topk_fn = jax.jit(kernel, static_argnums=(5,))
+    return _topk_fn
+
+
+class _SnapshotIndex:
+    """Flat itemset encodings for vectorized ``top_k``: rows sorted
+    lexicographically, items right-padded with -1. Stable descending-
+    support orderings over this layout (numpy stable argsort, or
+    ``lax.top_k``'s smallest-index tie rule) reproduce the serving
+    tie-break — equal supports rank lexicographically — so the device
+    and host paths are bit-identical."""
+
+    def __init__(self, supports: Mapping[Itemset, int]):
+        items = sorted(supports)
+        n = len(items)
+        kmax = max((len(x) for x in items), default=1)
+        enc = np.full((n, kmax), -1, np.int32)
+        lens = np.zeros(n, np.int32)
+        sup = np.zeros(n, np.int64)
+        for r, x in enumerate(items):
+            enc[r, :len(x)] = x
+            lens[r] = len(x)
+            sup[r] = supports[x]
+        self.items = items
+        self.enc, self.lens, self.sup = enc, lens, sup
+        self._dev = None      # padded device copies, uploaded once
+
+    def top_k(self, prefix: Itemset, k: int
+              ) -> List[Tuple[Itemset, int]]:
+        plen = len(prefix)
+        n = len(self.items)
+        if n == 0 or k <= 0 or plen >= self.enc.shape[1]:
+            return []
+        order = vals = None
+        if n >= TOPK_DEVICE_MIN:
+            try:
+                order, vals = self._device_top_k(prefix, k)
+            except Exception:            # no jax → host path
+                order = vals = None
+        if order is None:
+            mask = self.lens > plen
+            if plen:
+                mask &= (self.enc[:, :plen]
+                         == np.asarray(prefix, np.int32)).all(axis=1)
+            scored = np.where(mask, self.sup, -1)
+            order = np.argsort(-scored, kind="stable")[:k]
+            vals = scored[order]
+        return [(self.items[int(r)], int(v))
+                for r, v in zip(order, vals) if v >= 0]
+
+    def _device_top_k(self, prefix: Itemset, k: int):
+        import jax.numpy as jnp
+        if self._dev is None:
+            n, kmax = self.enc.shape
+            npad = 1 << max(n - 1, 1).bit_length()
+            enc = np.full((npad, kmax), -1, np.int32)
+            enc[:n] = self.enc
+            lens = np.zeros(npad, np.int32)   # len 0 never matches
+            lens[:n] = self.lens
+            sup = np.zeros(npad, np.int32)
+            sup[:n] = self.sup
+            self._dev = (jnp.asarray(enc), jnp.asarray(sup),
+                         jnp.asarray(lens))
+        enc_d, sup_d, lens_d = self._dev
+        pref = np.full(enc_d.shape[1], -1, np.int32)
+        pref[:len(prefix)] = prefix
+        # k rounds up to a power of two so the jit cache holds a few
+        # entries, not one per distinct k
+        kk = min(1 << max(k - 1, 1).bit_length(), int(enc_d.shape[0]))
+        vals, idx = _device_topk_fn()(
+            enc_d, sup_d, lens_d, jnp.asarray(pref),
+            np.int32(len(prefix)), kk)
+        return np.asarray(idx)[:k], np.asarray(vals)[:k]
 
 
 # ---------------------------------------------------------------------------
@@ -74,47 +200,68 @@ class PatternSnapshot:
 
     ``supports`` maps every frequent itemset (singletons included) to
     its exact support over the ``n_transactions`` the generation
-    covers. The prefix index for ``top_k`` is built lazily on the
-    first ranked query — publishing a generation costs one dict copy,
-    not an index build inside the refresh wall (a racing build is
-    benign: both threads produce the identical index and the reference
-    store is atomic)."""
+    covers; ``border`` maps the NEGATIVE border — candidates the
+    engines counted whose support landed below ``min_support`` — to
+    those exact sub-threshold supports (:meth:`lookup` flags them
+    infrequent). The ranking index for ``top_k`` is built lazily on
+    the first ranked query — publishing a generation costs one dict
+    copy, not an index build inside the refresh wall (a racing build
+    is benign: both threads produce the identical index and the
+    reference store is atomic)."""
     generation: int
     n_transactions: int
     min_support: int
     supports: Mapping[Itemset, int]
+    border: Mapping[Itemset, int] = field(default_factory=dict)
 
     def __post_init__(self):
         object.__setattr__(self, "supports",
                            MappingProxyType(dict(self.supports)))
-        object.__setattr__(self, "_by_prefix_cache", None)
+        object.__setattr__(self, "border",
+                           MappingProxyType(dict(self.border)))
+        object.__setattr__(self, "_index_cache", None)
 
     @property
-    def _by_prefix(self) -> Mapping[Itemset, tuple]:
-        idx = self._by_prefix_cache
+    def _index(self) -> _SnapshotIndex:
+        idx = self._index_cache
         if idx is None:
-            acc: Dict[Itemset, List[Tuple[int, Itemset]]] = {}
-            for x, s in self.supports.items():
-                for cut in range(len(x)):
-                    acc.setdefault(x[:cut], []).append((-s, x))
-            idx = MappingProxyType(
-                {p: tuple((x, -ns) for ns, x in sorted(v))
-                 for p, v in acc.items()})
-            object.__setattr__(self, "_by_prefix_cache", idx)
+            idx = _SnapshotIndex(self.supports)
+            object.__setattr__(self, "_index_cache", idx)
         return idx
 
-    def support(self, itemset: Sequence[int]) -> Optional[int]:
+    def support(self, itemset: Sequence[int],
+                include_infrequent: bool = False) -> Optional[int]:
         """Exact support of a FREQUENT itemset; None if it was not
-        frequent at this generation (its true support is below
-        ``min_support`` — or it was never counted)."""
-        return self.supports.get(tuple(sorted(itemset)))
+        frequent at this generation. With ``include_infrequent`` the
+        negative border answers too (exact sub-threshold supports);
+        None then means the itemset was never counted."""
+        x = tuple(sorted(itemset))
+        s = self.supports.get(x)
+        if s is None and include_infrequent:
+            s = self.border.get(x)
+        return s
+
+    def lookup(self, itemset: Sequence[int]
+               ) -> Optional[Tuple[int, bool]]:
+        """``(support, infrequent)`` for anything this generation
+        counted — frequent or negative border — else None."""
+        x = tuple(sorted(itemset))
+        s = self.supports.get(x)
+        if s is not None:
+            return s, False
+        s = self.border.get(x)
+        if s is not None:
+            return s, True
+        return None
 
     def top_k(self, prefix: Sequence[int] = (), k: int = 10
               ) -> List[Tuple[Itemset, int]]:
         """The k highest-support frequent itemsets strictly extending
         ``prefix`` (itemsets whose leading items equal it), best
-        first. ``prefix=()`` ranks everything."""
-        return list(self._by_prefix.get(tuple(sorted(prefix)), ())[:k])
+        first; ties rank lexicographically. ``prefix=()`` ranks
+        everything. Large snapshots rank device-resident (see
+        ``TOPK_DEVICE_MIN``)."""
+        return self._index.top_k(tuple(sorted(prefix)), k)
 
     def frequent(self, min_support: Optional[int] = None
                  ) -> Dict[Itemset, int]:
@@ -127,36 +274,196 @@ class PatternSnapshot:
                 if s >= min_support}
 
 
-class PatternServer:
-    """Query layer over a :class:`StreamingMiner`: every query reads
-    the miner's current snapshot ONCE (one atomic reference load) and
-    answers from it — no lock is shared with mining, so a refresh in
-    flight never blocks a query and a query never sees generation
-    N+1's itemsets with generation N's supports."""
+class QueryPlanner:
+    """Decomposes a batch of support queries against ONE captured
+    generation — snapshot, known store, singleton supports, and the
+    segment set they cover, all read under the owner's state lock, so
+    every answer in the batch is consistent with that generation.
 
-    def __init__(self, miner: "StreamingMiner"):
+    The empty itemset is the transaction count, singletons read the
+    item-support vector, and any |X| >= 2 itemset already counted
+    (published, negative border, or an earlier query's backfill)
+    answers from the known store. The rest become prefix-intersection
+    + extension-count sweeps ``(x[:-1], (x[-1],))`` — the dispatcher
+    AND-reduces the k-1 prefix rows per segment and popcounts the
+    intersection with the last item's row: exactly a candidate
+    sweep's shape, so query and candidate requests coalesce into the
+    same flushes."""
+
+    def __init__(self, snapshot: PatternSnapshot,
+                 known: Dict[Itemset, int],
+                 item_support: np.ndarray,
+                 segments: Sequence[int]):
+        self.snapshot = snapshot
+        self.known = known
+        self.item_support = item_support
+        self.segments = tuple(segments)
+
+    def plan(self, itemsets: Sequence[Itemset]):
+        """``(answers, sweeps, slots)``: ``answers[i]`` is a
+        ``(support, swept)`` pair for dict-answerable queries and a
+        None placeholder otherwise; ``sweeps[j]`` is the
+        ``(prefix, exts)`` request spec answering
+        ``itemsets[slots[j]]``."""
+        answers: List[Optional[Tuple[int, bool]]] = [None] * len(itemsets)
+        sweeps: List[Tuple[Any, Tuple[int, ...]]] = []
+        slots: List[int] = []
+        for j, x in enumerate(itemsets):
+            if not x:
+                answers[j] = (int(self.snapshot.n_transactions), False)
+            elif len(x) == 1:
+                answers[j] = (int(self.item_support[x[0]]), False)
+            else:
+                s = self.known.get(x)
+                if s is not None:
+                    answers[j] = (int(s), False)
+                else:
+                    sweeps.append((x[0] if len(x) == 2 else x[:-1],
+                                   (x[-1],)))
+                    slots.append(j)
+        return answers, sweeps, slots
+
+
+class _QueryGate:
+    """Counts in-flight query sweeps against one state lock so
+    compaction — which renumbers the segment ids those sweeps hold —
+    can wait for them to land. ``begin`` requires the lock held;
+    ``end`` takes it itself; ``wait_idle`` (lock held) releases it
+    while waiting."""
+
+    def __init__(self, lock):
+        self.cv = threading.Condition(lock)
+        self.inflight = 0
+
+    def begin(self) -> None:
+        self.inflight += 1
+
+    def end(self) -> None:
+        with self.cv:
+            self.inflight -= 1
+            if not self.inflight:
+                self.cv.notify_all()
+
+    def wait_idle(self, timeout: float) -> bool:
+        deadline = time.monotonic() + timeout
+        while self.inflight:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                return False
+            self.cv.wait(left)
+        return True
+
+
+def _serve_queries(owner, itemsets: Sequence[Sequence[int]]
+                   ) -> List[Tuple[int, bool]]:
+    """The shared serving path (StreamingMiner and Tenant): plan under
+    the state lock, sweep the misses as one priority burst on a
+    round-robin dispatcher, backfill the known store, and return
+    ``(support, swept)`` per itemset."""
+    xs: List[Itemset] = []
+    for raw in itemsets:
+        x = tuple(sorted({int(i) for i in raw}))
+        for i in x:
+            if not 0 <= i < owner.n_items:
+                raise ValueError(
+                    f"item id {i} outside [0, {owner.n_items})")
+        xs.append(x)
+    with owner._state:
+        planner = owner._query_view()
+        answers, sweeps, slots = planner.plan(xs)
+        if slots:
+            runtime = owner._ensure_runtime()
+            known_ref = planner.known
+            owner._gate.begin()
+    if not slots:
+        return answers
+    try:
+        disp = runtime.dispatchers[
+            next(owner._q_rr) % len(runtime.dispatchers)]
+        futs = disp.submit_many(sweeps, segments=planner.segments,
+                                priority=True)
+        counts = [int(f.result()[0]) for f in futs]
+    finally:
+        owner._gate.end()
+    seg_words = sum(owner.arena.seg_words(g) for g in planner.segments)
+    nbytes = sum((len(p) if isinstance(p, tuple) else 1) + 1
+                 for p, _ in sweeps) * seg_words * 4
+    updates: Dict[Itemset, int] = {}
+    for j, c in zip(slots, counts):
+        answers[j] = (c, True)
+        updates[xs[j]] = c
+    owner._commit_answers(known_ref, updates)
+    owner._bill_query(len(slots), nbytes)
+    return answers
+
+
+def _count_value(counter) -> int:
+    """Current value of an ``itertools.count`` used as a counter:
+    ``next()`` is one C call, so concurrent servers never lose
+    increments the way ``self.n += 1`` (a read-modify-write of three
+    bytecodes) does."""
+    return counter.__reduce__()[1][0]
+
+
+class PatternServer:
+    """Query layer over anything that publishes a ``snapshot`` and
+    answers ``query_supports`` — a :class:`StreamingMiner` or a
+    :class:`Tenant`.
+
+    ``support`` is TOTAL and exact: itemsets the published generation
+    counted (frequent or negative border) are dict hits on the
+    snapshot's backing store; anything never counted is answered by a
+    priority sweep through the live dispatchers and backfilled, so a
+    repeat of the same query is a dict hit. ``support_many`` amortizes
+    planning and coalesces every miss into one flush-bound burst.
+    Per-kind served counters (``hit`` / ``sweep`` / ``top_k``) are
+    lock-free ``itertools.count`` instances merged on read."""
+
+    def __init__(self, miner):
         self._miner = miner
-        self.queries = 0          # served-query gauge (approximate
-                                  # under concurrency; serving metric,
-                                  # not an invariant)
+        self._n_hit = itertools.count()
+        self._n_sweep = itertools.count()
+        self._n_top_k = itertools.count()
 
     @property
     def snapshot(self) -> PatternSnapshot:
         return self._miner.snapshot
 
-    def support(self, itemset: Sequence[int]) -> Optional[int]:
-        self.queries += 1
-        return self.snapshot.support(itemset)
+    def support(self, itemset: Sequence[int]) -> int:
+        """Exact support of ANY itemset over the refreshed database
+        (no longer Optional: unknown itemsets sweep)."""
+        return self.support_many([itemset])[0]
+
+    def support_many(self, itemsets: Sequence[Sequence[int]]
+                     ) -> List[int]:
+        answers = self._miner.query_supports(itemsets)
+        for _, swept in answers:
+            next(self._n_sweep if swept else self._n_hit)
+        return [s for s, _ in answers]
 
     def top_k(self, prefix: Sequence[int] = (), k: int = 10
               ) -> List[Tuple[Itemset, int]]:
-        self.queries += 1
+        next(self._n_top_k)
         return self.snapshot.top_k(prefix, k)
 
     def frequent(self, min_support: Optional[int] = None
                  ) -> Dict[Itemset, int]:
-        self.queries += 1
+        next(self._n_hit)
         return self.snapshot.frequent(min_support)
+
+    @property
+    def queries(self) -> int:
+        """Total served queries (sum of the per-kind counters)."""
+        return (_count_value(self._n_hit)
+                + _count_value(self._n_sweep)
+                + _count_value(self._n_top_k))
+
+    def merged_stats(self) -> Dict[str, int]:
+        out = {"hit": _count_value(self._n_hit),
+               "sweep": _count_value(self._n_sweep),
+               "top_k": _count_value(self._n_top_k)}
+        out["queries"] = sum(out.values())
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +509,14 @@ class RefreshReport:
     metrics: Optional[MiningMetrics] = None
 
 
+def _check_items(db, n_items: int) -> None:
+    for txn in db:
+        for i in txn:
+            if not 0 <= i < n_items:
+                raise ValueError(
+                    f"item id {i} outside [0, {n_items})")
+
+
 # ---------------------------------------------------------------------------
 # the streaming miner
 # ---------------------------------------------------------------------------
@@ -217,15 +532,24 @@ class StreamingMiner:
     border itemsets can die). ``mesh`` accepts the same values as
     ``fpm.mine``: None, an int (logical shards), or a jax Mesh.
 
+    Engine substrate: ONE persistent :class:`EngineRuntime`
+    (scheduler workers + per-shard sweep dispatchers), created lazily
+    on the first refresh or query sweep and lent to every refresh's
+    :class:`MiningRun` — so query sweeps submitted between (and
+    during) refreshes coalesce into the same dispatcher flushes as
+    candidate sweeps. Idle cost is zero (untimed parking); ``close``
+    (or garbage collection) tears it down.
+
     Locking: refreshes serialize on ``_refresh_lock``; quick state
     mutations (segment appends, counter/snapshot commits, compaction)
     serialize on ``_state``. An ``ingest`` therefore NEVER blocks
     behind an in-flight ``refresh`` — the refresh captures its
     generation boundary (segment count) up front, sweeps only
     boundary segments, and the mid-refresh batch simply lands in the
-    next generation. Queries via :attr:`snapshot` /
-    :class:`PatternServer` are lock-free. Until the first ``refresh``
-    the published snapshot is the empty generation 0.
+    next generation. Snapshot queries are lock-free; query SWEEPS
+    register with a gate so compaction (which renumbers segments)
+    waits for them. Until the first ``refresh`` the published
+    snapshot is the empty generation 0.
 
     Segment compaction (LSM-style): every publish may fold the
     refreshed (cold) segments back into one wide store —
@@ -259,7 +583,7 @@ class StreamingMiner:
                             representation=representation)
         n_shards, devices = _resolve_mesh(mesh)
         initial_db = [list(t) for t in initial_db]
-        self._check_items(initial_db)
+        _check_items(initial_db, n_items)
         # one packing pass yields the bitmaps AND the per-item ones
         # counts — the level-1 supports and the density-model seed,
         # with no post-hoc popcount sweep
@@ -274,14 +598,66 @@ class StreamingMiner:
         # negative border), exact over the refreshed segments — the
         # reuse store that lets clean classes skip their sweeps
         self._known: Dict[Itemset, int] = {}
+        # known entries written by query backfills (not by mining):
+        # the delta plan only revisits the candidate frontier, so at
+        # refresh the dirty ones among these are dropped rather than
+        # left to go stale
+        self._query_known: Set[Itemset] = set()
         self._refreshed_segments = self.arena.n_segments
         self.generation = 0
         self.compact_segments = compact_segments
         self.compact_ratio = compact_ratio
         self._state = threading.RLock()     # quick mutations + commits
         self._refresh_lock = threading.Lock()   # one refresh at a time
+        self._gate = _QueryGate(self._state)
+        self._q_rr = itertools.count()      # dispatcher round-robin
+        self._runtime: Optional[EngineRuntime] = None
+        self.query_sweeps = 0
+        self.query_sweep_bytes = 0
         self._snapshot = PatternSnapshot(
             0, self.n_transactions, self._resolve_ms(), {})
+
+    # ------------------------------------------------------------ runtime --
+    def _ensure_runtime(self) -> EngineRuntime:
+        """The persistent engine substrate, created on first use so
+        snapshot-only readers never pay for worker threads."""
+        with self._state:
+            if self._runtime is None:
+                kw = self._run_kw
+                self._runtime = EngineRuntime(
+                    self.arena, policy=kw["policy"],
+                    n_workers=kw["n_workers"],
+                    granularity=kw["granularity"],
+                    backend=kw["backend"], max_batch=kw["max_batch"],
+                    flush_us=kw["flush_us"])
+            return self._runtime
+
+    @property
+    def runtime(self) -> EngineRuntime:
+        """The persistent engine substrate (created on first read if
+        needed) — benchmarks read its dispatcher gauges."""
+        return self._ensure_runtime()
+
+    def close(self) -> None:
+        """Shut down the persistent runtime (scheduler workers + sweep
+        dispatchers). Snapshot reads keep working; refreshes or query
+        sweeps afterwards spin up a fresh runtime."""
+        with self._state:
+            runtime, self._runtime = self._runtime, None
+        if runtime is not None:
+            runtime.shutdown()
+
+    def __enter__(self) -> "StreamingMiner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):   # pragma: no cover - gc-timing dependent
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # ------------------------------------------------------------ queries --
     @property
@@ -305,12 +681,43 @@ class StreamingMiner:
             return max(1, int(self._ms_spec * n_transactions))
         return int(self._ms_spec)
 
-    def _check_items(self, db) -> None:
-        for txn in db:
-            for i in txn:
-                if not 0 <= i < self.n_items:
-                    raise ValueError(
-                        f"item id {i} outside [0, {self.n_items})")
+    def _query_view(self) -> QueryPlanner:
+        # caller holds _state: snapshot, known store, item supports and
+        # the refreshed-segment set are one consistent generation
+        return QueryPlanner(self._snapshot, self._known,
+                            self._item_support,
+                            range(self._refreshed_segments))
+
+    def _commit_answers(self, known_ref: Dict[Itemset, int],
+                        updates: Dict[Itemset, int]) -> None:
+        with self._state:
+            # a refresh may have published a NEW known store while the
+            # sweep was in flight — the answers were exact for the
+            # generation they were planned against, so they are
+            # returned to the caller either way, but backfilling them
+            # into the wrong generation's store would corrupt it
+            if self._known is known_ref:
+                known_ref.update(updates)
+                self._query_known.update(updates)
+
+    def _bill_query(self, n_sweeps: int, nbytes: int) -> None:
+        with self._state:
+            self.query_sweeps += n_sweeps
+            self.query_sweep_bytes += nbytes
+
+    def query_supports(self, itemsets: Sequence[Sequence[int]]
+                       ) -> List[Tuple[int, bool]]:
+        """Exact ``(support, swept)`` for ARBITRARY itemsets over the
+        refreshed database — dict hits where the published generation
+        already counted, one coalesced priority sweep burst for the
+        rest (see :class:`QueryPlanner`)."""
+        return _serve_queries(self, itemsets)
+
+    def support_many(self, itemsets: Sequence[Sequence[int]]
+                     ) -> List[int]:
+        """Batched exact supports (``query_supports`` minus the swept
+        flags)."""
+        return [s for s, _ in self.query_supports(itemsets)]
 
     # ------------------------------------------------------------- ingest --
     def ingest(self, batch: Sequence[Sequence[int]]) -> IngestReport:
@@ -323,7 +730,7 @@ class StreamingMiner:
         segment lands in the NEXT generation (the running refresh
         sweeps only its captured boundary segments)."""
         batch = [list(t) for t in batch]
-        self._check_items(batch)
+        _check_items(batch, self.n_items)
         t0 = time.time()
         seg_bm = pack_database(batch, self.n_items)   # outside any lock
         with self._state:
@@ -360,20 +767,30 @@ class StreamingMiner:
                 pending = tuple(range(self._refreshed_segments,
                                       boundary))
                 boundary_tx = sum(self._seg_tx[:boundary])
+                # all-or-nothing: mine against WORKING copies and
+                # commit only at publish, so a failed refresh (task
+                # error mid-mine) leaves the miner's state untouched
+                # and a retry cannot double-add the pending segments'
+                # deltas. The shallow _known copy is cheap next to the
+                # mining it fronts.
+                known = dict(self._known)
+                qk = set(self._query_known)
             base_segments = tuple(range(boundary))
             deltas = np.zeros(self.n_items, np.int64)
             for g in pending:
                 seg = arena.seg_view(g)[:self.n_items]
                 deltas += tidlist.popcount32(seg).sum(axis=1)
             dirty = frozenset(int(i) for i in np.nonzero(deltas)[0])
-            # all-or-nothing: mine against WORKING copies and commit
-            # only at publish, so a failed refresh (task error mid-
-            # mine) leaves the miner's state untouched and a retry
-            # cannot double-add the pending segments' deltas. The
-            # shallow _known copy is cheap next to the mining it
-            # fronts.
+            # query backfills live outside the candidate frontier, so
+            # the delta plan is not guaranteed to revisit them — drop
+            # the ones whose support may have changed (every item
+            # dirty) rather than let them serve stale counts; they
+            # re-sweep on the next miss
+            for x in [x for x in qk
+                      if x and all(i in dirty for i in x)]:
+                known.pop(x, None)
+                qk.discard(x)
             item_support = self._item_support + deltas
-            known = dict(self._known)
             ms = self._resolve_ms(boundary_tx)
             prev = self._snapshot.supports
 
@@ -402,6 +819,7 @@ class StreamingMiner:
             frequent = sorted(result)
             h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
             run = MiningRun(arena, item_counts=item_support,
+                            runtime=self._ensure_runtime(),
                             **self._run_kw)
             run.metrics.frequent += len(frequent)
             try:
@@ -416,11 +834,17 @@ class StreamingMiner:
             # exact assembly from the reuse store: skipped (clean)
             # subtrees never touched `result`, but their supports are
             # in the known store — and downward closure makes the
-            # filter exact
+            # filter exact. The sub-threshold remainder IS the
+            # negative border, published alongside so the serving
+            # layer answers "how infrequent" without a sweep.
             final = dict(singles)
+            border: Dict[Itemset, int] = {}
             for x, s in known.items():
-                if len(x) <= self.max_k and s >= ms:
-                    final[x] = s
+                if len(x) <= self.max_k:
+                    if s >= ms:
+                        final[x] = s
+                    else:
+                        border[x] = s
 
             # single-pass border classification: one membership probe
             # per published itemset (the old two-set construction was
@@ -433,7 +857,8 @@ class StreamingMiner:
                     born += 1
             died = len(prev) - stayed
             snapshot = PatternSnapshot(self.generation + 1,
-                                       boundary_tx, ms, final)
+                                       boundary_tx, ms, final,
+                                       border=border)
             report = RefreshReport(
                 generation=snapshot.generation,
                 n_transactions=boundary_tx,
@@ -461,6 +886,7 @@ class StreamingMiner:
                 # commit point: plain assignments, then the swap
                 self._item_support = item_support
                 self._known = known
+                self._query_known = qk
                 self._refreshed_segments = boundary
                 self._snapshot = snapshot       # the atomic swap
                 self.generation = snapshot.generation
@@ -473,9 +899,11 @@ class StreamingMiner:
     # --------------------------------------------------------- compaction --
     def _maybe_compact(self) -> int:
         """Fold the refreshed segments into one when the policy fires
-        (caller holds the state lock, no refresh mining in flight —
-        segment ids are not referenced by any live sweep). Returns the
-        number of segments removed."""
+        (caller holds the state lock, no refresh mining in flight).
+        In-flight query sweeps hold segment ids compaction renumbers,
+        so the gate is drained first — briefly, with queries winning:
+        on timeout the fold is skipped and the policy re-fires at the
+        next publish. Returns the number of segments removed."""
         r = self._refreshed_segments
         if r < 2:
             return 0
@@ -483,6 +911,8 @@ class StreamingMiner:
         tail = sum(self.arena.seg_words(g) for g in range(1, r))
         if not (r > self.compact_segments
                 or tail <= self.compact_ratio * max(lead, 1)):
+            return 0
+        if not self._gate.wait_idle(1.0):
             return 0
         return self._compact(r)
 
@@ -496,8 +926,11 @@ class StreamingMiner:
     def compact_now(self) -> int:
         """Force-fold every refreshed segment regardless of policy
         (maintenance hook; also what the cadence-equivalence tests
-        drive). Returns the number of segments removed."""
+        drive). Returns the number of segments removed — 0 if query
+        sweeps stayed in flight past the drain timeout."""
         with self._refresh_lock, self._state:
+            if not self._gate.wait_idle(5.0):
+                return 0
             return self._compact(self._refreshed_segments)
 
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
@@ -509,3 +942,386 @@ class StreamingMiner:
                     f"segments={n_seg} "
                     f"pending={pending} "
                     f"known={len(self._known)}>")
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving
+# ---------------------------------------------------------------------------
+
+class Tenant:
+    """One stream inside a :class:`TenantHub`: the full ingest →
+    refresh → snapshot/serve lifecycle scoped to the tenant's own
+    tagged segment set, sharing the hub's arena and engine runtime
+    with every other tenant. Create via :meth:`TenantHub.tenant`."""
+
+    def __init__(self, hub: "TenantHub", tid, min_support,
+                 weight: float = 1.0):
+        self.hub = hub
+        self.tid = tid
+        self.weight = float(weight)
+        self.n_items = hub.n_items
+        self.max_k = hub.max_k
+        self.arena = hub.arena
+        self._ms_spec = min_support
+        self.n_transactions = 0
+        self.generation = 0
+        self._segments: List[int] = []   # refreshed (mined) segments
+        self._pending: List[int] = []    # ingested, not yet refreshed
+        self._seg_tx: Dict[int, int] = {}
+        self._item_support = np.zeros(hub.n_items, np.int64)
+        self._known: Dict[Itemset, int] = {}
+        self._query_known: Set[Itemset] = set()
+        self._refresh_lock = threading.Lock()
+        self._snapshot = PatternSnapshot(0, 0, self._resolve_ms(0), {})
+        self._server: Optional[PatternServer] = None
+        # serving plumbing shared hub-wide (one lock, one gate, one
+        # dispatcher round-robin) — queries from every tenant coalesce
+        self._state = hub._state
+        self._gate = hub._gate
+        self._q_rr = hub._q_rr
+        # per-tenant meters
+        self.sweep_bytes = 0             # mining sweeps (refreshes)
+        self.query_sweeps = 0
+        self.query_sweep_bytes = 0
+        self.last_flush_occupancy = 0.0
+
+    # shared serving protocol --------------------------------------------
+    def _ensure_runtime(self) -> EngineRuntime:
+        return self.hub._ensure_runtime()
+
+    def _resolve_ms(self, n_transactions: int) -> int:
+        if isinstance(self._ms_spec, float):
+            return max(1, int(self._ms_spec * n_transactions))
+        return int(self._ms_spec)
+
+    def _query_view(self) -> QueryPlanner:
+        return QueryPlanner(self._snapshot, self._known,
+                            self._item_support,
+                            tuple(self._segments))
+
+    def _commit_answers(self, known_ref, updates) -> None:
+        with self._state:
+            if self._known is known_ref:
+                known_ref.update(updates)
+                self._query_known.update(updates)
+
+    def _bill_query(self, n_sweeps: int, nbytes: int) -> None:
+        with self._state:
+            self.query_sweeps += n_sweeps
+            self.query_sweep_bytes += nbytes
+
+    # public surface ------------------------------------------------------
+    @property
+    def snapshot(self) -> PatternSnapshot:
+        return self._snapshot
+
+    @property
+    def needs_refresh(self) -> bool:
+        with self._state:
+            return bool(self._pending)
+
+    @property
+    def server(self) -> PatternServer:
+        if self._server is None:
+            self._server = PatternServer(self)
+        return self._server
+
+    def query_supports(self, itemsets: Sequence[Sequence[int]]
+                       ) -> List[Tuple[int, bool]]:
+        return _serve_queries(self, itemsets)
+
+    def support_many(self, itemsets: Sequence[Sequence[int]]
+                     ) -> List[int]:
+        return [s for s, _ in self.query_supports(itemsets)]
+
+    def ingest(self, batch: Sequence[Sequence[int]]) -> IngestReport:
+        """Append a batch as one fresh segment TAGGED with this
+        tenant's id — other tenants never sweep it, and arena
+        compaction refuses to fold across the tag."""
+        batch = [list(t) for t in batch]
+        _check_items(batch, self.n_items)
+        t0 = time.time()
+        seg_bm = pack_database(batch, self.n_items)
+        with self._state:
+            h0 = self.arena.h2d_bytes
+            seg = self.arena.add_segment(seg_bm, tenant=self.tid)
+            self._pending.append(seg)
+            self._seg_tx[seg] = len(batch)
+            self.n_transactions += len(batch)
+            return IngestReport(
+                segment=seg, n_transactions=len(batch),
+                words=seg_bm.shape[1],
+                payload_bytes=self.arena.seg_nbytes(seg),
+                h2d_bytes=self.arena.h2d_bytes - h0,
+                wall_s=time.time() - t0)
+
+    def refresh(self, before_publish=None) -> RefreshReport:
+        """StreamingMiner.refresh over the tenant's segment set: the
+        delta plan's base is the tenant's refreshed+pending segments
+        (a non-contiguous subset of the shared arena), and every
+        spawned task carries the tenant tag so the weighted-fair drain
+        rule arbitrates between concurrently refreshing tenants."""
+        with self._refresh_lock:
+            t0 = time.time()
+            hub, arena = self.hub, self.arena
+            runtime = self._ensure_runtime()
+            with self._state:
+                pending = tuple(self._pending)
+                base_segments = tuple(self._segments) + pending
+                boundary_tx = sum(self._seg_tx[g]
+                                  for g in base_segments)
+                known = dict(self._known)
+                qk = set(self._query_known)
+            deltas = np.zeros(self.n_items, np.int64)
+            for g in pending:
+                seg = arena.seg_view(g)[:self.n_items]
+                deltas += tidlist.popcount32(seg).sum(axis=1)
+            dirty = frozenset(int(i) for i in np.nonzero(deltas)[0])
+            for x in [x for x in qk
+                      if x and all(i in dirty for i in x)]:
+                known.pop(x, None)
+                qk.discard(x)
+            item_support = self._item_support + deltas
+            ms = self._resolve_ms(boundary_tx)
+            prev = self._snapshot.supports
+
+            def hotness(prefix: Itemset) -> float:
+                if len(prefix) == 1:
+                    return float(item_support[prefix[0]])
+                return float(known.get(prefix, 0))
+
+            plan = DeltaPlan(
+                known=known,
+                dirty_items=dirty,
+                segments=pending,
+                base_segments=base_segments,
+                priority_of=hotness if known else None,
+                tenant=self.tid)
+            singles: Dict[Itemset, int] = {
+                (i,): int(s) for i, s in enumerate(item_support)
+                if s >= ms}
+            result = dict(singles)
+            frequent = sorted(result)
+            h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
+            run = MiningRun(arena, item_counts=item_support,
+                            runtime=runtime, **hub._run_kw)
+            run.metrics.frequent += len(frequent)
+            try:
+                mine_more(run, ms, self.max_k, result, frequent,
+                          delta=plan)
+            finally:
+                run.close()
+            metrics = run.finalize(t0)
+            metrics.h2d_bytes = arena.h2d_bytes - h2d0
+            metrics.d2d_bytes = arena.d2d_bytes - d2d0
+            final = dict(singles)
+            border: Dict[Itemset, int] = {}
+            for x, s in known.items():
+                if len(x) <= self.max_k:
+                    if s >= ms:
+                        final[x] = s
+                    else:
+                        border[x] = s
+            stayed = sum(1 for x in final if x in prev)
+            born = len(final) - stayed
+            died = len(prev) - stayed
+            snapshot = PatternSnapshot(self.generation + 1,
+                                       boundary_tx, ms, final,
+                                       border=border)
+            report = RefreshReport(
+                generation=snapshot.generation,
+                n_transactions=boundary_tx,
+                min_support=ms,
+                frequent=len(final),
+                segments_refreshed=pending,
+                dirty_items=len(dirty),
+                stayed=stayed, born=born, died=died,
+                reused=plan.reused,
+                swept_delta=plan.swept_delta,
+                swept_full=plan.swept_full,
+                rows_touched=metrics.rows_touched,
+                bytes_swept=metrics.bytes_swept,
+                h2d_bytes=metrics.h2d_bytes,
+                d2d_bytes=metrics.d2d_bytes,
+                wall_s=time.time() - t0,
+                metrics=metrics)
+            if before_publish is not None:
+                before_publish(snapshot)
+            with self._state:
+                self._item_support = item_support
+                self._known = known
+                self._query_known = qk
+                self._segments = list(base_segments)
+                landed = set(pending)
+                self._pending = [g for g in self._pending
+                                 if g not in landed]
+                self._snapshot = snapshot
+                self.generation = snapshot.generation
+                self.sweep_bytes += metrics.bytes_swept
+                self.last_flush_occupancy = metrics.batch_occupancy
+            report.wall_s = time.time() - t0
+            return report
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        with self._state:
+            return (f"<Tenant {self.tid!r} gen={self.generation} "
+                    f"tx={self.n_transactions} "
+                    f"segments={len(self._segments)} "
+                    f"pending={len(self._pending)}>")
+
+
+class TenantHub:
+    """Multi-tenant serving: several independent transaction streams
+    multiplexed onto ONE :class:`BitmapArena` and ONE persistent
+    :class:`EngineRuntime`.
+
+    Each :class:`Tenant` owns a disjoint set of arena segments
+    (tagged at ingest, so compaction never folds across tenants), its
+    own min-support spec, known store, and published snapshot;
+    refreshes and query sweeps from every tenant share the scheduler
+    workers and per-shard dispatchers, which is exactly what makes
+    cross-tenant coalescing (and the fairness problem) real. Fairness:
+    re-mine tasks carry the tenant tag, and the clustered drain rule
+    serves the worker-local tenant with the highest
+    ``weight / (served + 1)`` deficit first — a heavy tenant gets
+    proportionally more engine turns but can never starve a light
+    one. Per-tenant meters (queries by kind, sweep bytes, flush
+    occupancy, tasks served) surface through :meth:`tenant_stats`."""
+
+    def __init__(self, n_items: int, *, policy: str = "clustered",
+                 n_workers: int = 4, max_k: int = 6,
+                 granularity: str = "bucket", backend: str = "auto",
+                 arena: str = "auto", cache_size: int = 32,
+                 max_batch: int = MAX_BATCH,
+                 flush_us: float = FLUSH_US, mesh=None,
+                 representation: str = "auto"):
+        if n_items < 1:
+            raise ValueError(f"n_items must be >= 1, got {n_items}")
+        self.n_items = n_items
+        self.max_k = max_k
+        self._run_kw = dict(policy=policy, n_workers=n_workers,
+                            granularity=granularity, backend=backend,
+                            cache_size=cache_size, max_batch=max_batch,
+                            flush_us=flush_us,
+                            representation=representation)
+        n_shards, devices = _resolve_mesh(mesh)
+        # the arena starts with one empty (zero-width) segment; every
+        # real segment arrives tagged via Tenant.ingest
+        self.arena = BitmapArena.from_bitmaps(
+            pack_database([], n_items), backing=arena,
+            n_shards=n_shards, devices=devices)
+        self._state = threading.RLock()
+        self._gate = _QueryGate(self._state)
+        self._q_rr = itertools.count()
+        self._runtime: Optional[EngineRuntime] = None
+        self._tenants: Dict[Any, Tenant] = {}
+
+    def _ensure_runtime(self) -> EngineRuntime:
+        with self._state:
+            if self._runtime is None:
+                kw = self._run_kw
+                self._runtime = EngineRuntime(
+                    self.arena, policy=kw["policy"],
+                    n_workers=kw["n_workers"],
+                    granularity=kw["granularity"],
+                    backend=kw["backend"], max_batch=kw["max_batch"],
+                    flush_us=kw["flush_us"])
+                self._push_weights()
+            return self._runtime
+
+    def _push_weights(self) -> None:
+        # caller holds _state
+        runtime = self._runtime
+        if runtime is None:
+            return      # pushed when the runtime is first built
+        policy = runtime.sched.policy
+        if isinstance(policy, ClusteredPolicy):
+            policy.set_weights(
+                {tid: t.weight for tid, t in self._tenants.items()}
+                or None)
+
+    def tenant(self, tid, min_support=None, *,
+               weight: float = 1.0) -> Tenant:
+        """Register a new tenant stream (``min_support`` required) or
+        fetch an existing one by id."""
+        with self._state:
+            t = self._tenants.get(tid)
+            if t is None:
+                if min_support is None:
+                    raise ValueError(
+                        "min_support is required when registering a "
+                        "new tenant")
+                t = Tenant(self, tid, min_support, weight)
+                self._tenants[tid] = t
+                self._push_weights()
+            return t
+
+    @property
+    def tenants(self) -> Tuple[Tenant, ...]:
+        with self._state:
+            return tuple(self._tenants.values())
+
+    def refresh_all(self) -> Dict[Any, RefreshReport]:
+        """Refresh every tenant with pending segments (sequentially —
+        callers wanting overlap run per-tenant ``refresh`` from their
+        own threads; the shared runtime arbitrates)."""
+        out = {}
+        for t in self.tenants:
+            if t.needs_refresh or t.generation == 0:
+                out[t.tid] = t.refresh()
+        return out
+
+    def tenant_stats(self) -> Dict[Any, Dict[str, Any]]:
+        """Per-tenant serving/mining meters: generation, stream size,
+        queries served by kind, sweep bytes (mining + query), last
+        refresh's flush occupancy, scheduler tasks served under the
+        fairness rule, and the configured weight."""
+        with self._state:
+            served: Dict[Any, int] = {}
+            if self._runtime is not None and isinstance(
+                    self._runtime.sched.policy, ClusteredPolicy):
+                served = self._runtime.sched.policy.tenant_served()
+            out: Dict[Any, Dict[str, Any]] = {}
+            for tid, t in self._tenants.items():
+                q = (t._server.merged_stats()
+                     if t._server is not None else
+                     {"hit": 0, "sweep": 0, "top_k": 0, "queries": 0})
+                out[tid] = {
+                    "generation": t.generation,
+                    "transactions": t.n_transactions,
+                    "segments": len(t._segments) + len(t._pending),
+                    "frequent": len(t._snapshot.supports),
+                    "weight": t.weight,
+                    "tasks_served": int(served.get(tid, 0)),
+                    "sweep_bytes": t.sweep_bytes,
+                    "query_sweeps": t.query_sweeps,
+                    "query_sweep_bytes": t.query_sweep_bytes,
+                    "flush_occupancy": t.last_flush_occupancy,
+                    "queries": q,
+                }
+            return out
+
+    def close(self) -> None:
+        """Shut down the shared runtime; snapshots keep serving."""
+        with self._state:
+            runtime, self._runtime = self._runtime, None
+        if runtime is not None:
+            runtime.shutdown()
+
+    def __enter__(self) -> "TenantHub":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):   # pragma: no cover - gc-timing dependent
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def __repr__(self) -> str:   # pragma: no cover - debugging aid
+        with self._state:
+            return (f"<TenantHub items={self.n_items} "
+                    f"tenants={len(self._tenants)} "
+                    f"segments={self.arena.n_segments}>")

@@ -290,6 +290,10 @@ class BitmapArena:
         # per-segment word-column stores sharing one slot space;
         # segment 0 is the load-time database
         self._seg_words: List[int] = [n_words_]
+        # owning tenant per segment (multi-tenant serving): None =
+        # default/single-tenant. Purely bookkeeping — sweeps restrict
+        # by explicit segment lists, so tenants isolate by construction
+        self._seg_tenant: List[object] = [None]
         self._stores: List[np.ndarray] = [np.zeros((cap, n_words_),
                                                    np.uint32)]
         self._refs = np.zeros(cap, np.int32)
@@ -361,6 +365,16 @@ class BitmapArena:
         ingest must upload to a device mirror (and nothing more)."""
         return self.n_base * self._seg_words[seg] * 4
 
+    def seg_tenant(self, seg: int):
+        """Owning tenant of one segment (None = default)."""
+        return self._seg_tenant[seg]
+
+    def tenant_segments(self, tenant) -> Tuple[int, ...]:
+        """All segment ids owned by ``tenant``, ascending — the
+        segment set every one of that tenant's sweeps restricts to."""
+        return tuple(g for g, t in enumerate(self._seg_tenant)
+                     if t == tenant)
+
     def _covered(self, handle: int, seg: int) -> bool:
         return seg < int(self._cover[handle])
 
@@ -384,15 +398,22 @@ class BitmapArena:
         streaming engine's fully-synced mirrors means no extra h2d.
 
         Must not run concurrently with sweeps that hold segment ids —
-        the streaming engine serializes it with refresh/ingest.
+        the streaming engine serializes it with refresh/ingest (and
+        gates it behind in-flight query sweeps). Refuses (returns 0)
+        when the merge prefix spans more than one tenant: positional
+        merging would fuse foreign transactions into one segment and
+        every tenant-restricted segment list would go stale.
         Returns the number of segments removed (``upto - 1``)."""
         with self._lock:
             if not 2 <= upto <= len(self._seg_words):
+                return 0
+            if len(set(self._seg_tenant[:upto])) > 1:
                 return 0
             new_w = sum(self._seg_words[:upto])
             merged = np.concatenate(self._stores[:upto], axis=1)
             self._stores[:upto] = [np.ascontiguousarray(merged)]
             self._seg_words[:upto] = [new_w]
+            self._seg_tenant[:upto] = [self._seg_tenant[0]]
             self.compaction_bytes += self.n_rows * new_w * 4
             self.compactions += 1
             # cover remap: >= upto -> minus (upto-1); in (0, upto) -> 1
@@ -444,14 +465,16 @@ class BitmapArena:
             del new_dev[0]
         self._dev[shard] = new_dev
 
-    def add_segment(self, base_bitmaps: np.ndarray) -> int:
+    def add_segment(self, base_bitmaps: np.ndarray,
+                    tenant=None) -> int:
         """Append a fresh transaction segment: ``base_bitmaps`` is the
         ``[n_base, W_seg]`` packed item bitmaps of the NEW transactions
         only. Existing segments are untouched — no repack, no
         re-upload; with eager ("jax") backing the new segment's base
         payload is mirrored immediately and its bytes (exactly
-        :meth:`seg_nbytes`) are the entire h2d bill. Returns the new
-        segment id."""
+        :meth:`seg_nbytes`) are the entire h2d bill. ``tenant`` tags
+        the segment's owner for multi-tenant serving (None = default).
+        Returns the new segment id."""
         bm = np.ascontiguousarray(base_bitmaps, dtype=np.uint32)
         if bm.ndim != 2 or bm.shape[0] != self.n_base:
             raise ValueError(
@@ -464,6 +487,7 @@ class BitmapArena:
             store = np.zeros((cap, w), np.uint32)
             store[:self.n_base] = bm
             self._seg_words.append(w)
+            self._seg_tenant.append(tenant)
             self._stores.append(store)
             # base item rows now extend into the new segment; live
             # non-base rows keep their creation-time coverage and read

@@ -67,6 +67,11 @@ def main():
     ap.add_argument("--stream-frac", type=float, default=0.1,
                     help="fraction of the dataset replayed as the "
                          "ingest stream (with --stream)")
+    ap.add_argument("--serve", type=int, default=0, metavar="N",
+                    help="after the stream replay, serve N queries of "
+                         "each kind (known-hit, batched unknown-itemset "
+                         "sweep, top-k) through the PatternServer and "
+                         "print per-kind p50/p95/p99 (with --stream)")
     args = ap.parse_args()
 
     db, prof = load(args.dataset, args.seed)
@@ -123,6 +128,40 @@ def main():
         srv = PatternServer(sm)
         top = srv.top_k((), 5)
         print(f"stream final == serial ✓; top-5: {top}")
+        if args.serve:
+            import itertools
+
+            hot = [x for x, _ in top] or [(0,)]
+            fresh = itertools.chain.from_iterable(
+                itertools.combinations(range(n_items), k)
+                for k in range(args.max_k + 1, n_items + 1))
+            lat = {"hit": [], "sweep": [], "top_k": []}
+            for i in range(args.serve):
+                x = hot[i % len(hot)]
+                t0 = time.perf_counter_ns()
+                srv.support(x)
+                lat["hit"].append((time.perf_counter_ns() - t0) / 1e3)
+                t0 = time.perf_counter_ns()
+                srv.top_k(x[:1], 5)
+                lat["top_k"].append((time.perf_counter_ns() - t0) / 1e3)
+            batch = 8
+            for _ in range(args.serve):
+                xs = list(itertools.islice(fresh, batch))
+                t0 = time.perf_counter_ns()
+                srv.support_many(xs)
+                lat["sweep"].append(
+                    (time.perf_counter_ns() - t0) / 1e3 / len(xs))
+            import numpy as np
+            for kind, us in lat.items():
+                a = np.asarray(us)
+                print(f"serve {kind:6s}: n={len(us):4d} "
+                      f"p50={np.percentile(a, 50):8.1f}us "
+                      f"p95={np.percentile(a, 95):8.1f}us "
+                      f"p99={np.percentile(a, 99):8.1f}us")
+            print(f"serve stats: {srv.merged_stats()} "
+                  f"query_sweeps={sm.query_sweeps} "
+                  f"query_sweep_bytes={sm.query_sweep_bytes}")
+        sm.close()
         return
 
     for policy in args.policies:

@@ -330,11 +330,13 @@ def test_failed_refresh_leaves_state_intact_and_retry_is_exact():
 
     orig = fpm_mod.resolve_backend
     fpm_mod.resolve_backend = lambda spec: Bomb()
-    try:
+    sm.close()        # next refresh rebuilds the persistent runtime
+    try:              # through the patched resolver → hits the bomb
         with pytest.raises(RuntimeError, match="boom"):
             sm.refresh()
     finally:
         fpm_mod.resolve_backend = orig
+        sm.close()    # drop the poisoned runtime before the retry
     # nothing published, nothing folded, queries still serve gen 1
     assert sm.snapshot.generation == 1
     assert dict(sm.snapshot.supports) == g1
