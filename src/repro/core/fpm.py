@@ -105,6 +105,16 @@ class MiningMetrics:
     migrations: int = 0
     per_device: List[Dict[str, float]] = field(default_factory=list)
     scheduler: Dict[str, float] = field(default_factory=dict)
+    # multi-host gauges (cluster runs only): hosts in the run, bytes
+    # that crossed the interconnect (descriptor flushes + count
+    # replies + level exchanges + steal migrations), the steal share
+    # of them, cross-host bucket migrations, and one per-host row
+    # (bytes_swept / sweep_s / eval_s / eval_bytes) for capacity math
+    n_hosts: int = 1
+    net_bytes: int = 0
+    steal_net: int = 0
+    cross_steals: int = 0
+    per_host: List[Dict[str, float]] = field(default_factory=list)
     # hybrid-representation gauges: sweeps split by the prefix row's
     # representation, the byte share of bytes_swept that went through
     # the sparse (gather-intersect) path, sparse rows pushed, both
@@ -391,7 +401,7 @@ class EngineRuntime:
     def __init__(self, store: BitmapArena, *, policy: str = "clustered",
                  n_workers: int = 8, granularity: str = "bucket",
                  backend: str = "auto", max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US):
+                 flush_us: float = FLUSH_US, cluster=None):
         backend_obj = resolve_backend(backend)
         n_shards = store.n_shards
         if n_shards > 1:
@@ -399,12 +409,16 @@ class EngineRuntime:
         self.store = store
         self.n_workers = n_workers
         self.backend = backend_obj
+        # multi-host context (repro.core.cluster): the dispatchers
+        # reduce every flush across hosts through it, and the engine
+        # cores partition work / exchange level results through it
+        self.cluster = cluster
         self.device_of = [i % n_shards for i in range(n_workers)]
         self.dispatchers = [
             SweepDispatcher(store, backend_obj,
                             n_clients=self.device_of.count(s),
                             max_batch=max_batch, flush_us=flush_us,
-                            shard=s)
+                            shard=s, cluster=cluster)
             for s in range(n_shards)]
         self.sched = TaskScheduler(
             n_workers,
@@ -476,11 +490,14 @@ class MiningRun:
         self.sched = runtime.sched
         self.metrics = MiningMetrics(n_devices=store.n_shards)
         self.caches: Dict[int, _PrefixCache] = {}   # thread ident -> cache
-        self.sweep_joins = store.n_shards > 1
+        # cluster mode also forces dispatcher-routed joins: a direct
+        # host join would skip the cross-host reduction
+        self.sweep_joins = (store.n_shards > 1
+                            or runtime.cluster is not None)
         # gauge baselines: zero for an owned runtime, the accumulated
         # counters for a borrowed one — finalize() reports deltas
         self._disp0 = [(d.flushes, d.requests, d.queue_flushes,
-                        d.queue_requests, d.query_requests)
+                        d.queue_requests, d.query_requests, d.sweep_s)
                        for d in self.dispatchers]
         self._sched0 = self.sched.merged_stats()
 
@@ -491,7 +508,7 @@ class MiningRun:
             cache.drain()
 
     def _disp_stats(self, d, base) -> Dict[str, float]:
-        f0, r0, qf0, qr0, q0 = base
+        f0, r0, qf0, qr0, q0, s0 = base
         fl = d.flushes - f0
         rq = d.requests - r0
         return {"device": d.shard, "flushes": fl,
@@ -499,7 +516,8 @@ class MiningRun:
                 "batch_occupancy": rq / fl if fl else 0.0,
                 "query_requests": d.query_requests - q0,
                 "queue_flushes": d.queue_flushes - qf0,
-                "queue_requests": d.queue_requests - qr0}
+                "queue_requests": d.queue_requests - qr0,
+                "sweep_s": d.sweep_s - s0}
 
     def finalize(self, t0: float) -> MiningMetrics:
         """Fill the metrics from scheduler/dispatcher/arena gauges.
@@ -561,7 +579,7 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
          granularity: str = "bucket", backend: str = "auto",
          arena: str = "auto", max_batch: int = MAX_BATCH,
          flush_us: float = FLUSH_US, mesh=None,
-         representation: str = "auto", item_counts=None,
+         representation: str = "auto", item_counts=None, hosts: int = 1,
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
@@ -593,7 +611,24 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     this one code path, with cross-shard traffic in
     ``MiningMetrics.d2d_bytes`` and per-device dispatcher gauges in
     ``MiningMetrics.per_device``.
+    ``hosts`` > 1 runs the multi-HOST decomposition instead (see
+    repro.core.cluster): the transaction axis word-partitions over N
+    logical hosts in this process — each with its own arena slice,
+    scheduler and dispatchers — with two-phase support counting and
+    cross-host steal-as-migration. Bit-identical results; cluster
+    traffic lands in ``MiningMetrics.net_bytes``/``steal_net``.
     """
+    if hosts > 1:
+        if mesh is not None:
+            raise ValueError("hosts= and mesh= are mutually exclusive "
+                             "(a host owns its whole slice)")
+        from repro.core.cluster import mine_cluster
+        return mine_cluster(bitmaps, min_support, hosts=hosts,
+                            policy=policy, n_workers=n_workers,
+                            max_k=max_k, cache_size=cache_size,
+                            granularity=granularity, backend=backend,
+                            max_batch=max_batch, flush_us=flush_us,
+                            item_counts=item_counts)
     n_shards, devices = _resolve_mesh(mesh)
     store = BitmapArena.from_bitmaps(bitmaps, backing=arena,
                                      n_shards=n_shards, devices=devices)
@@ -624,21 +659,24 @@ def mine_more(run: MiningRun, min_support: int, max_k: int,
     ``mine`` (delta=None: sweep everything) and the streaming refresh
     (delta: reuse known supports, delta-sweep dirty candidates over the
     pending segments only, carry staleness priorities)."""
+    cluster = run.runtime.cluster
     if run.granularity == "depth-first":
         _mine_depth_first(run.store, run.dispatchers, min_support,
                           max_k, run.sched, run.metrics, result,
-                          frequent, delta=delta, model=run.model)
+                          frequent, delta=delta, model=run.model,
+                          cluster=cluster)
     else:
         _mine_levelwise(run.store, run.dispatchers, min_support, max_k,
                         run.sched, run.metrics, result, frequent,
                         run.granularity, run.cache_size, run.caches,
                         sweep_joins=run.sweep_joins, delta=delta,
-                        model=run.model)
+                        model=run.model, cluster=cluster)
 
 
 def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                     metrics, result, frequent, granularity, cache_size,
-                    caches, sweep_joins=False, delta=None, model=None):
+                    caches, sweep_joins=False, delta=None, model=None,
+                    cluster=None):
     """Level-synchronous engines: plan level k, spawn, barrier, plan
     level k+1 (the paper's §2 shape, at candidate or bucket grain).
     ``sweep_joins`` routes even candidate-granularity scalar joins
@@ -734,7 +772,8 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                 st.sweeps_submitted += 1
                 disp = dispatchers[sched.worker_device()]
                 return int(disp.sweep(ph, (cand[-1],),
-                                      segments=segments)[0])
+                                      segments=segments,
+                                      desc=cand[:-1])[0])
             if sparse:
                 # cached sparse prefixes are tid-lists (never
                 # diffsets), so the gather count IS the support
@@ -764,7 +803,8 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
             else:
                 st.dense_sweeps += 1
             disp = dispatchers[sched.worker_device()]
-            return disp.sweep(ph, bucket.exts, segments=segments)
+            return disp.sweep(ph, bucket.exts, segments=segments,
+                              desc=bucket.prefix)
         finally:
             store.release(ph)
 
@@ -873,6 +913,11 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         dirty sweep sets share one level barrier. The collected counts
         cover ``segments`` only when restricted (the caller adds them
         to the known supports)."""
+        if cluster is not None:
+            # task partition: every host plans the SAME global frontier
+            # but sweeps only its owned prefixes; the level exchange
+            # merges the counted pairs back so thresholds stay global
+            cands = [c for c in cands if cluster.owns(c[:-1])]
         if not cands:
             return lambda: []
         if granularity in ("bucket", "auto"):
@@ -908,28 +953,57 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         level: List[Tuple[Itemset, int]] = []
         if delta is None:
             collect = _spawn_sweeps(cands, None)
-            sched.wait_all()
+            if cluster is None:
+                sched.wait_all()
+            else:
+                cluster.level_wait(sched)
             if df_miner is not None:
                 _raise_task_errors(detached_tasks)
                 df_miner.raise_errors()
             level = collect()
+            if cluster is not None:
+                level = cluster.exchange(level)
         else:
             clean, dirty, fresh = delta.classify_buckets(
                 group_by_prefix(cands))
             level.extend(clean)                 # clean: zero rows read
-            delta.reused += len(clean)
-            delta.swept_full += len(fresh)
-            delta.swept_delta += sum(len(b.exts) for b in dirty)
+            if cluster is None or cluster.host_id == 0:
+                # a loopback cluster SHARES the plan: bill its
+                # avoided-work counters once, not once per host
+                delta.reused += len(clean)
+                delta.swept_full += len(fresh)
+                delta.swept_delta += sum(len(b.exts) for b in dirty)
+            if cluster is not None:
+                dirty = [b for b in dirty if cluster.owns(b.prefix)]
             collect_fresh = _spawn_sweeps(fresh, delta.base_segments)
             collect_dirty = _spawn_delta_chunks(dirty)
-            sched.wait_all()
-            for c, s in collect_fresh():
-                delta.known[c] = s
-                level.append((c, s))
-            for c, d in collect_dirty():
-                s = delta.known[c] + d          # delta over pending segs
-                delta.known[c] = s
-                level.append((c, s))
+            if cluster is None:
+                sched.wait_all()
+                for c, s in collect_fresh():
+                    delta.known[c] = s
+                    level.append((c, s))
+                for c, d in collect_dirty():
+                    s = delta.known[c] + d      # delta over pending segs
+                    delta.known[c] = s
+                    level.append((c, s))
+            else:
+                cluster.level_wait(sched)
+                mined = ([(c, s, True) for c, s in collect_fresh()]
+                         + [(c, d, False) for c, d in collect_dirty()])
+
+                def _apply(merged):
+                    # runs ONCE per known-store (host 0 under loopback,
+                    # where hosts share the plan): fold fresh supports
+                    # and dirty deltas into ``known``, return the
+                    # globally-thresholdable (itemset, support) pairs
+                    out = []
+                    for c, v, is_fresh in merged:
+                        s = v if is_fresh else delta.known[c] + v
+                        delta.known[c] = s
+                        out.append((c, s))
+                    return out
+
+                level.extend(cluster.exchange(mined, update=_apply))
         for c, s in level:
             if s >= min_support:
                 result[c] = s
@@ -999,7 +1073,7 @@ class _ClassMiner:
     windows)."""
 
     def __init__(self, store, dispatchers, min_support, max_k, sched,
-                 metrics, result, delta=None, model=None):
+                 metrics, result, delta=None, model=None, cluster=None):
         self.store = store
         self.dispatchers = dispatchers
         self.min_support = min_support
@@ -1009,6 +1083,8 @@ class _ClassMiner:
         self.result = result
         self.delta = delta
         self.model = model
+        self.cluster = cluster    # multi-host: root classes partition
+                                  # by owner, sweeps reduce per flush
         self.n_w = store.n_words
         self.lock = threading.Lock()
         self.all_tasks: List = []
@@ -1103,7 +1179,8 @@ class _ClassMiner:
                                 for e, s in zip(exts, counts)]
                 else:
                     st.sweeps_submitted += 1
-                    counts, pbits = disp.sweep_bits(ph, exts)
+                    counts, pbits = disp.sweep_bits(ph, exts,
+                                                    desc=prefix)
                     if is_diff:
                         # dEclat arithmetic: the backend counted
                         # |diff ∩ e|; the parent's sibling supports
@@ -1133,10 +1210,12 @@ class _ClassMiner:
                 # the generation-boundary segments, never ones an
                 # overlapped ingest appended mid-refresh
                 ffut = (disp.submit(ph, tuple(fresh_e),
-                                    segments=delta.base_segments)
+                                    segments=delta.base_segments,
+                                    desc=prefix)
                         if fresh_e else None)
                 dfut = (disp.submit(ph, tuple(dirty_e),
-                                    segments=delta.segments)
+                                    segments=delta.segments,
+                                    desc=prefix)
                         if dirty_e else None)
                 updates: Dict[Itemset, int] = {}
                 if ffut is not None:
@@ -1365,6 +1444,9 @@ class _ClassMiner:
         sup = {p[0]: result[p] for p in frequent}
         for i, it in enumerate(items[:-1]):
             sibs = tuple(items[i + 1:])
+            if (self.cluster is not None
+                    and not self.cluster.owns((it,))):
+                continue              # a peer host mines this subtree
             if self.delta is not None and not self.needs_visit((it,),
                                                                sibs):
                 continue              # clean root class: skip entirely
@@ -1381,13 +1463,26 @@ class _ClassMiner:
 
 def _mine_depth_first(store, dispatchers, min_support, max_k, sched,
                       metrics, result, frequent, delta=None,
-                      model=None):
-    """Barrier-free engine driver: see :class:`_ClassMiner`."""
+                      model=None, cluster=None):
+    """Barrier-free engine driver: see :class:`_ClassMiner`. Under a
+    cluster the root classes partition by owner host (global counts
+    from the per-flush reduction make every subtree decision
+    host-independent) and ONE terminal exchange replicates the mined
+    itemsets — barrier-free within the whole subtree forest, exactly
+    one collective at the end."""
     miner = _ClassMiner(store, dispatchers, min_support, max_k, sched,
-                        metrics, result, delta=delta, model=model)
+                        metrics, result, delta=delta, model=model,
+                        cluster=cluster)
     miner.spawn_roots(frequent, result)
-    sched.wait_all()                            # the ONLY wait
-    miner.raise_errors()
+    if cluster is None:
+        sched.wait_all()                        # the ONLY wait
+        miner.raise_errors()
+    else:
+        cluster.level_wait(sched)
+        miner.raise_errors()
+        mined = [(c, s) for c, s in result.items() if len(c) > 1]
+        for c, s in cluster.exchange(mined):
+            result[c] = s
 
 
 def mine_serial(bitmaps: np.ndarray, min_support: int, max_k: int = 8

@@ -87,12 +87,21 @@ class SweepRequest:
     unknown-itemset sweeps): it jumps to the front of the pending
     queue (guaranteed into the next flush) and caps the dispatcher's
     straggler wait at ``QUERY_FLUSH_US`` — queries coalesce with
-    candidate sweeps but never wait out the full mining window."""
+    candidate sweeps but never wait out the full mining window.
+
+    ``desc`` is the request's portable descriptor for multi-host runs:
+    the prefix as base ITEM ids, meaningful on any host's arena slice.
+    Arena handles are host-local (a cached prefix row exists only on
+    the host that built it), so cluster mode's cross-host reduction
+    re-evaluates the flush from descriptors — call sites sweeping a
+    derived handle must pass the prefix itemset here. Tuple prefixes
+    and base-row handles self-describe; single-host runs ignore it."""
     prefix_handle: "int | Tuple[int, ...]"
     ext_handles: Tuple[int, ...]
     shard: int = 0
     segments: Optional[Tuple[int, ...]] = None
     priority: bool = False
+    desc: Optional[Tuple[int, ...]] = None
     future: Future = field(default_factory=Future)
 
     @property
@@ -567,7 +576,7 @@ class SweepDispatcher:
     def __init__(self, arena: BitmapArena, backend: JoinBackend,
                  n_clients: int, max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US, shard: int = 0,
-                 query_flush_us: float = QUERY_FLUSH_US):
+                 query_flush_us: float = QUERY_FLUSH_US, cluster=None):
         self.arena = arena
         self.backend = backend
         self.n_clients = max(1, n_clients)
@@ -575,6 +584,13 @@ class SweepDispatcher:
         self.flush_s = max(0.0, flush_us) * 1e-6
         self.query_flush_s = max(0.0, query_flush_us) * 1e-6
         self.shard = shard
+        # multi-host context: when set, every flush is two-phase —
+        # local partial counts over this arena's owned words, then
+        # cluster.reduce_flush sums the peers' partials for the same
+        # descriptors. One reduction per flush, so the collective
+        # amortizes exactly like the dispatcher amortizes launches.
+        self.cluster = cluster
+        self.sweep_s = 0.0            # local backend busy time (s)
         self._pending: List[SweepRequest] = []
         self._n_priority = 0          # priority requests in _pending
         self._cv = threading.Condition()
@@ -596,14 +612,15 @@ class SweepDispatcher:
     def submit(self, prefix_handle: int,
                ext_handles: Sequence[int],
                segments: Optional[Sequence[int]] = None,
-               priority: bool = False) -> Future:
+               priority: bool = False,
+               desc: Optional[Tuple[int, ...]] = None) -> Future:
         p = (tuple(int(h) for h in prefix_handle)
              if isinstance(prefix_handle, tuple) else int(prefix_handle))
         req = SweepRequest(p, tuple(ext_handles),
                            shard=self.shard,
                            segments=(tuple(segments)
                                      if segments is not None else None),
-                           priority=priority)
+                           priority=priority, desc=desc)
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
@@ -679,18 +696,26 @@ class SweepDispatcher:
                 raise RuntimeError("dispatcher is stopped")
             self.flushes += 1
             self.requests += len(reqs)
-        return self.backend.sweep_many(self.arena, reqs)
+        t0 = time.perf_counter()
+        results = self.backend.sweep_many(self.arena, reqs)
+        with self._cv:
+            self.sweep_s += time.perf_counter() - t0
+        if self.cluster is not None:
+            results = self.cluster.reduce_flush(reqs, results)
+        return results
 
     def sweep(self, prefix_handle: int,
               ext_handles: Sequence[int],
-              segments: Optional[Sequence[int]] = None) -> np.ndarray:
+              segments: Optional[Sequence[int]] = None,
+              desc: Optional[Tuple[int, ...]] = None) -> np.ndarray:
         """Blocking convenience: enqueue and wait for the counts.
         ``segments`` restricts the join to a segment subset (a
         streaming delta sweep)."""
         return self.submit(prefix_handle, ext_handles,
-                           segments=segments).result()
+                           segments=segments, desc=desc).result()
 
-    def sweep_bits(self, prefix_handle: int, ext_handles: Sequence[int]
+    def sweep_bits(self, prefix_handle: int, ext_handles: Sequence[int],
+                   desc: Optional[Tuple[int, ...]] = None
                    ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
         """Depth-first class sweep: ``(counts, bits)`` where ``bits``
         is the [E, S] payload∩ext matrix of the SAME gather the counts
@@ -708,9 +733,11 @@ class SweepDispatcher:
         return no bits. Billed as a 1-request flush so
         ``flushes × occupancy == requests`` stays exact."""
         if not self.backend.host_parallel:
-            return self.sweep(prefix_handle, ext_handles), None
+            return self.sweep(prefix_handle, ext_handles,
+                              desc=desc), None
         req = self._make_requests(
             [(prefix_handle, tuple(ext_handles))], None)[0]
+        req.desc = desc
         with self._cv:
             if self._stop:
                 raise RuntimeError("dispatcher is stopped")
@@ -722,7 +749,13 @@ class SweepDispatcher:
                 self.arena.note_access(req.shard, (*req.prefix_handles,
                                                    *req.ext_handles))
             return self.backend.sweep_sparse_bits(self.arena, req)
-        return self.backend.sweep_many(self.arena, [req])[0], None
+        t0 = time.perf_counter()
+        counts = self.backend.sweep_many(self.arena, [req])[0]
+        with self._cv:
+            self.sweep_s += time.perf_counter() - t0
+        if self.cluster is not None:
+            counts = self.cluster.reduce_flush([req], [counts])[0]
+        return counts, None
 
     @property
     def batch_occupancy(self) -> float:
@@ -737,7 +770,8 @@ class SweepDispatcher:
                 "batch_occupancy": self.batch_occupancy,
                 "query_requests": self.query_requests,
                 "queue_flushes": self.queue_flushes,
-                "queue_requests": self.queue_requests}
+                "queue_requests": self.queue_requests,
+                "sweep_s": self.sweep_s}
 
     # -------------------------------------------------------------- loop --
     def _loop(self):
@@ -770,7 +804,12 @@ class SweepDispatcher:
                 self.queue_flushes += 1
                 self.queue_requests += len(batch)
             try:
+                t0 = time.perf_counter()
                 results = self.backend.sweep_many(self.arena, batch)
+                with self._cv:
+                    self.sweep_s += time.perf_counter() - t0
+                if self.cluster is not None:
+                    results = self.cluster.reduce_flush(batch, results)
             except BaseException as e:  # noqa: BLE001 - resolve futures:
                 for r in batch:         # a swallowed error would deadlock
                     r.future.set_exception(e)   # every blocked worker

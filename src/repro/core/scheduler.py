@@ -400,6 +400,13 @@ class TaskScheduler:
         self._stop = False
         self._rngs = [random.Random(seed + i) for i in range(n_workers)]
         self._spawn_rr = 0
+        # cross-host steal hooks (cluster mode): _remote_steal_cb(i)
+        # tries to migrate a bucket from a peer host's scheduler and
+        # returns the number of tasks adopted; _remote_work_cb() says
+        # whether any peer still has work, so idle workers keep a
+        # timed park instead of sleeping through a steal opportunity.
+        self._remote_steal_cb: Optional[Callable[[int], int]] = None
+        self._remote_work_cb: Optional[Callable[[], bool]] = None
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), daemon=True)
             for i in range(n_workers)]
@@ -484,6 +491,74 @@ class TaskScheduler:
         for t in self._threads:
             t.join(timeout=5)
 
+    # ---------------------------------------------------- cross-host steal --
+    def set_remote_hooks(self, steal_cb: Callable[[int], int],
+                         work_cb: Callable[[], bool]) -> None:
+        """Install the cluster's cross-host steal protocol. ``steal_cb``
+        runs on an idle worker AFTER its local probes all failed — the
+        last-resort escalation that keeps the locality preference (own
+        queue, then local victims, then a peer host)."""
+        self._remote_steal_cb = steal_cb
+        self._remote_work_cb = work_cb
+        with self._cv:
+            # force every already-parked worker through a fresh probe:
+            # a worker that parked UNTIMED before the hooks existed
+            # would otherwise sleep through every steal opportunity
+            # (no local put will ever wake a host that owns no work)
+            self._work_seq += 1
+            if self._parked:
+                self._cv.notify_all()
+
+    def idle(self) -> bool:
+        """True when nothing is outstanding here — spawned work that
+        was DONATED to a peer counts against the adopter, so a cluster
+        level is quiescent iff every host's scheduler is idle."""
+        return self._outstanding == 0
+
+    def queued_approx(self) -> int:
+        """Racy total of queued (not yet running) tasks — the steal
+        victim-selection signal, same contract as ``approx_len``."""
+        return sum(self.policy.approx_len(i) for i in range(self.n))
+
+    def donate_bucket(self) -> List[Task]:
+        """Victim side of a cross-host steal: remove one bucket's tasks
+        from this scheduler entirely — they stop counting against OUR
+        outstanding total the moment they leave, and the adopter books
+        them before any runs, so the window where neither host counts
+        them is covered by the caller's migration lock (the global
+        termination check takes the same lock)."""
+        got: List[Task] = []
+        for v in range(self.n):
+            if self.policy.approx_len(v) == 0:
+                continue
+            got = list(self.policy.steal(0, v) or [])
+            if got:
+                break
+        if got:
+            with self._cv:
+                self._outstanding -= len(got)
+                if self._outstanding == 0:
+                    self._cv.notify_all()
+        return got
+
+    def adopt(self, tasks: List[Task], worker: int = 0) -> None:
+        """Thief side: book and enqueue migrated tasks on ``worker``'s
+        queue. The tasks keep their closures — they still sweep through
+        the ORIGIN host's dispatcher/arena (that is the migration's
+        "shipped prefix slice"), and children they spawn route back to
+        the origin scheduler too, keeping every arena handle on the
+        host that owns it."""
+        if not tasks:
+            return
+        with self._cv:
+            for t in tasks:
+                self._spawned += 1
+                self._outstanding += 1
+                self.policy.put(worker, t)
+            self._work_seq += 1
+            if self._parked:
+                self._cv.notify_all()
+
     # ----------------------------------------------------------- worker --
     def _acquire(self, i: int) -> Optional[Task]:
         task = self.policy.get(i)
@@ -515,6 +590,19 @@ class TaskScheduler:
                         self.policy.put(i, t)
                     self._signal_work()
                 return got[0]
+        # local queues and victims are all dry: escalate to a
+        # cross-host steal if a cluster installed one. The callback
+        # adopts a peer bucket onto THIS worker's queue, so a plain
+        # re-probe picks it up.
+        cb = self._remote_steal_cb
+        if cb is not None and (self._remote_work_cb is None
+                               or self._remote_work_cb()):
+            st.steal_attempts += 1
+            n = cb(i)
+            if n > 0:
+                st.steals += 1
+                st.tasks_stolen += n
+                return self.policy.get(i)
         return None
 
     def _worker(self, i: int):
@@ -550,11 +638,19 @@ class TaskScheduler:
                         return
                     self._parked += 1
                     try:
+                        # with cluster hooks installed, "nothing
+                        # outstanding HERE" is not "nothing to do": a
+                        # peer host may have (or later GET) stealable
+                        # work, and no local put will ever wake us for
+                        # it — so cluster mode always keeps the timed
+                        # park. ~20 cheap probes/s per idle worker,
+                        # only while a cluster is attached.
+                        untimed = (self._outstanding == 0
+                                   and self._remote_work_cb is None)
                         self._cv.wait_for(
                             lambda: (self._stop
                                      or self._work_seq != seen),
-                            timeout=(None if self._outstanding == 0
-                                     else 0.05))
+                            timeout=(None if untimed else 0.05))
                     finally:
                         self._parked -= 1
                 continue

@@ -559,7 +559,20 @@ class StreamingMiner:
     cheap to fold, so it folds immediately). The repack bytes are
     billed in the arena's ``compaction_bytes`` gauge and reported per
     refresh. Set ``compact_ratio=0.0`` and a huge ``compact_segments``
-    to disable."""
+    to disable.
+
+    Multi-host (``hosts > 1``, loopback): the initial database is
+    word-partitioned into one local arena per logical host; each
+    ``ingest`` routes its whole segment to the least-loaded owner host
+    and appends ZERO-WIDTH twins on the peers, so segment ids stay
+    globally aligned and refresh deltas are host-local by construction.
+    A refresh drives one engine per host over ONE shared
+    :class:`DeltaPlan` (two-phase per-flush reduction keeps supports
+    global; idle hosts steal whole buckets from busy peers, billed to
+    ``steal_net``); queries serve through host 0's runtime, whose
+    dispatcher reduction covers the peers. Compaction is disabled —
+    it would have to renumber every host's segment table in lockstep.
+    Mutually exclusive with ``mesh``."""
 
     def __init__(self, n_items: int, min_support, *,
                  initial_db: Sequence[Sequence[int]] = (),
@@ -570,12 +583,24 @@ class StreamingMiner:
                  flush_us: float = FLUSH_US, mesh=None,
                  representation: str = "auto",
                  compact_segments: int = 8,
-                 compact_ratio: float = 0.5):
+                 compact_ratio: float = 0.5,
+                 hosts: int = 1):
         if n_items < 1:
             raise ValueError(f"n_items must be >= 1, got {n_items}")
+        if hosts > 1:
+            if mesh is not None:
+                raise ValueError("hosts= and mesh= are mutually "
+                                 "exclusive")
+            if representation not in ("auto", "bitmap"):
+                raise ValueError(
+                    "hosts > 1 requires representation='bitmap' "
+                    "(sparse payloads are positional in one host's "
+                    "slice)")
+            representation = "bitmap"
         self.n_items = n_items
         self.max_k = max_k
         self._ms_spec = min_support
+        self._hosts = max(1, int(hosts))
         self._run_kw = dict(policy=policy, n_workers=n_workers,
                             granularity=granularity, backend=backend,
                             cache_size=cache_size, max_batch=max_batch,
@@ -589,8 +614,23 @@ class StreamingMiner:
         # with no post-hoc popcount sweep
         bitmaps, item_counts = pack_database(initial_db, n_items,
                                              return_counts=True)
-        self.arena = BitmapArena.from_bitmaps(
-            bitmaps, backing=arena, n_shards=n_shards, devices=devices)
+        if self._hosts > 1:
+            from repro.core import cluster as _cluster
+            ranges = tidlist.partition_words(bitmaps.shape[1],
+                                             self._hosts)
+            self._harenas = [BitmapArena.from_bitmaps(
+                np.ascontiguousarray(bitmaps[:, a:b]), backing=arena)
+                for a, b in ranges]
+            self.arena = self._harenas[0]
+            self._bus = _cluster._LoopbackBus(self._hosts,
+                                              self._harenas)
+            self._hctxs = [_cluster.LoopbackContext(self._bus, h)
+                           for h in range(self._hosts)]
+        else:
+            self._harenas = None
+            self.arena = BitmapArena.from_bitmaps(
+                bitmaps, backing=arena, n_shards=n_shards,
+                devices=devices)
         self.n_transactions = len(initial_db)
         self._seg_tx = [len(initial_db)]   # transactions per segment
         self._item_support = item_counts
@@ -612,6 +652,7 @@ class StreamingMiner:
         self._gate = _QueryGate(self._state)
         self._q_rr = itertools.count()      # dispatcher round-robin
         self._runtime: Optional[EngineRuntime] = None
+        self._hruntimes: Optional[List[EngineRuntime]] = None
         self.query_sweeps = 0
         self.query_sweep_bytes = 0
         self._snapshot = PatternSnapshot(
@@ -624,12 +665,28 @@ class StreamingMiner:
         with self._state:
             if self._runtime is None:
                 kw = self._run_kw
-                self._runtime = EngineRuntime(
-                    self.arena, policy=kw["policy"],
-                    n_workers=kw["n_workers"],
-                    granularity=kw["granularity"],
-                    backend=kw["backend"], max_batch=kw["max_batch"],
-                    flush_us=kw["flush_us"])
+                if self._hosts > 1:
+                    self._hruntimes = [EngineRuntime(
+                        self._harenas[h], policy=kw["policy"],
+                        n_workers=kw["n_workers"],
+                        granularity=kw["granularity"],
+                        backend=kw["backend"],
+                        max_batch=kw["max_batch"],
+                        flush_us=kw["flush_us"],
+                        cluster=self._hctxs[h])
+                        for h in range(self._hosts)]
+                    self._bus.scheds = [rt.sched
+                                        for rt in self._hruntimes]
+                    self._bus.install_steal()
+                    self._runtime = self._hruntimes[0]
+                else:
+                    self._runtime = EngineRuntime(
+                        self.arena, policy=kw["policy"],
+                        n_workers=kw["n_workers"],
+                        granularity=kw["granularity"],
+                        backend=kw["backend"],
+                        max_batch=kw["max_batch"],
+                        flush_us=kw["flush_us"])
             return self._runtime
 
     @property
@@ -644,7 +701,12 @@ class StreamingMiner:
         sweeps afterwards spin up a fresh runtime."""
         with self._state:
             runtime, self._runtime = self._runtime, None
-        if runtime is not None:
+            hrts = getattr(self, "_hruntimes", None)
+            self._hruntimes = None
+        if hrts is not None:
+            for rt in hrts:
+                rt.shutdown()
+        elif runtime is not None:
             runtime.shutdown()
 
     def __enter__(self) -> "StreamingMiner":
@@ -734,6 +796,27 @@ class StreamingMiner:
         t0 = time.time()
         seg_bm = pack_database(batch, self.n_items)   # outside any lock
         with self._state:
+            if self._hosts > 1:
+                # whole-segment ownership: the least-loaded host gets
+                # the payload, every peer a zero-width twin — segment
+                # ids stay aligned across all host arenas, and this
+                # segment's refresh delta is host-local by construction
+                owner = min(range(self._hosts),
+                            key=lambda h: (self._harenas[h].n_words, h))
+                h0 = sum(ar.h2d_bytes for ar in self._harenas)
+                empty = np.zeros((seg_bm.shape[0], 0), np.uint32)
+                for h, ar in enumerate(self._harenas):
+                    seg = ar.add_segment(
+                        seg_bm if h == owner else empty)
+                self._seg_tx.append(len(batch))
+                self.n_transactions += len(batch)
+                return IngestReport(
+                    segment=seg, n_transactions=len(batch),
+                    words=seg_bm.shape[1],
+                    payload_bytes=self._harenas[owner].seg_nbytes(seg),
+                    h2d_bytes=sum(ar.h2d_bytes
+                                  for ar in self._harenas) - h0,
+                    wall_s=time.time() - t0)
             h0 = self.arena.h2d_bytes
             seg = self.arena.add_segment(seg_bm)
             self._seg_tx.append(len(batch))
@@ -777,9 +860,14 @@ class StreamingMiner:
                 qk = set(self._query_known)
             base_segments = tuple(range(boundary))
             deltas = np.zeros(self.n_items, np.int64)
+            arenas = self._harenas if self._hosts > 1 else (arena,)
             for g in pending:
-                seg = arena.seg_view(g)[:self.n_items]
-                deltas += tidlist.popcount32(seg).sum(axis=1)
+                # a pending segment lives whole on its owner host; the
+                # peers' zero-width twins contribute nothing
+                for ar in arenas:
+                    seg = ar.seg_view(g)[:self.n_items]
+                    if seg.shape[1]:
+                        deltas += tidlist.popcount32(seg).sum(axis=1)
             dirty = frozenset(int(i) for i in np.nonzero(deltas)[0])
             # query backfills live outside the candidate frontier, so
             # the delta plan is not guaranteed to revisit them — drop
@@ -817,19 +905,23 @@ class StreamingMiner:
                 if s >= ms}
             result = dict(singles)
             frequent = sorted(result)
-            h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
-            run = MiningRun(arena, item_counts=item_support,
-                            runtime=self._ensure_runtime(),
-                            **self._run_kw)
-            run.metrics.frequent += len(frequent)
-            try:
-                mine_more(run, ms, self.max_k, result, frequent,
-                          delta=plan)
-            finally:
-                run.close()
-            metrics = run.finalize(t0)
-            metrics.h2d_bytes = arena.h2d_bytes - h2d0
-            metrics.d2d_bytes = arena.d2d_bytes - d2d0
+            if self._hosts > 1:
+                metrics = self._refresh_cluster(plan, item_support,
+                                                ms, singles, t0)
+            else:
+                h2d0, d2d0 = arena.h2d_bytes, arena.d2d_bytes
+                run = MiningRun(arena, item_counts=item_support,
+                                runtime=self._ensure_runtime(),
+                                **self._run_kw)
+                run.metrics.frequent += len(frequent)
+                try:
+                    mine_more(run, ms, self.max_k, result, frequent,
+                              delta=plan)
+                finally:
+                    run.close()
+                metrics = run.finalize(t0)
+                metrics.h2d_bytes = arena.h2d_bytes - h2d0
+                metrics.d2d_bytes = arena.d2d_bytes - d2d0
 
             # exact assembly from the reuse store: skipped (clean)
             # subtrees never touched `result`, but their supports are
@@ -896,6 +988,86 @@ class StreamingMiner:
             report.wall_s = time.time() - t0
             return report
 
+    # ------------------------------------------------------- multi-host --
+    def _refresh_cluster(self, plan: DeltaPlan, item_support, ms: int,
+                         singles: Dict[Itemset, int],
+                         t0: float) -> MiningMetrics:
+        """One refresh generation over the loopback cluster: N driver
+        threads, each a :class:`MiningRun` on its host's arena slice
+        and persistent cluster runtime, all sharing ONE delta plan (the
+        plan's known store is the working copy the caller commits).
+        Cluster gauges persist for the miner's lifetime, so the merged
+        metrics report THIS refresh's deltas."""
+        from repro.core import cluster as _cluster
+        self._ensure_runtime()
+        bus = self._bus
+        g = bus.gauges
+        h2d0 = sum(ar.h2d_bytes for ar in self._harenas)
+        d2d0 = sum(ar.d2d_bytes for ar in self._harenas)
+        with g.lock:
+            g0 = (g.net_bytes, g.steal_net, g.cross_steals,
+                  list(g.eval_s), list(g.eval_bytes))
+        n = self._hosts
+        mets: List[Optional[MiningMetrics]] = [None] * n
+        errs: List[Optional[BaseException]] = [None] * n
+
+        def driver(h: int) -> None:
+            try:
+                result_h = dict(singles)
+                frequent_h = sorted(result_h)
+                run = MiningRun(self._harenas[h],
+                                item_counts=item_support,
+                                runtime=self._hruntimes[h],
+                                **self._run_kw)
+                # level-1 frequent is global — bill it once (host 0)
+                if h == 0:
+                    run.metrics.frequent += len(frequent_h)
+                try:
+                    mine_more(run, ms, self.max_k, result_h,
+                              frequent_h, delta=plan)
+                finally:
+                    run.close()
+                mets[h] = run.finalize(t0)
+            except BaseException as e:  # noqa: BLE001 - unblock peers
+                errs[h] = e
+                bus.abort()
+
+        threads = [threading.Thread(target=driver, args=(h,),
+                                    name=f"stream-host-{h}")
+                   for h in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if any(e is not None for e in errs):
+            bus.barrier.reset()      # un-break it for the next refresh
+            for e in errs:
+                if e is not None and not isinstance(e, RuntimeError):
+                    raise e
+            for e in errs:
+                if e is not None:
+                    raise e
+        m = _cluster.merge_metrics(mets, g,
+                                   self._run_kw["granularity"])
+        m.net_bytes -= g0[0]
+        m.steal_net -= g0[1]
+        m.cross_steals -= g0[2]
+        for row in m.per_host:
+            row["eval_s"] -= g0[3][row["host"]]
+            row["eval_bytes"] -= g0[4][row["host"]]
+        m.h2d_bytes = sum(ar.h2d_bytes for ar in self._harenas) - h2d0
+        m.d2d_bytes = sum(ar.d2d_bytes for ar in self._harenas) - d2d0
+        return m
+
+    @property
+    def cluster_gauges(self) -> Optional[Dict[str, int]]:
+        """Lifetime interconnect billing (``net_bytes`` /
+        ``steal_net`` / ``cross_steals`` / ``reduced_flushes``) — None
+        unless ``hosts > 1``."""
+        if self._hosts < 2:
+            return None
+        return self._bus.gauges.snapshot()
+
     # --------------------------------------------------------- compaction --
     def _maybe_compact(self) -> int:
         """Fold the refreshed segments into one when the policy fires
@@ -905,7 +1077,7 @@ class StreamingMiner:
         on timeout the fold is skipped and the policy re-fires at the
         next publish. Returns the number of segments removed."""
         r = self._refreshed_segments
-        if r < 2:
+        if r < 2 or self._hosts > 1:
             return 0
         lead = self.arena.seg_words(0)
         tail = sum(self.arena.seg_words(g) for g in range(1, r))
@@ -927,7 +1099,10 @@ class StreamingMiner:
         """Force-fold every refreshed segment regardless of policy
         (maintenance hook; also what the cadence-equivalence tests
         drive). Returns the number of segments removed — 0 if query
-        sweeps stayed in flight past the drain timeout."""
+        sweeps stayed in flight past the drain timeout, and always 0
+        when ``hosts > 1`` (compaction is single-host only)."""
+        if self._hosts > 1:
+            return 0
         with self._refresh_lock, self._state:
             if not self._gate.wait_idle(5.0):
                 return 0

@@ -191,6 +191,30 @@ def sorted_difference(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return a[b[idx] != a]
 
 
+def partition_words(n_words_: int, n_hosts: int) -> List[Tuple[int, int]]:
+    """Contiguous balanced word ranges ``[(w0, w1), ...]`` over the
+    transaction axis, one per host.
+
+    Multi-host mining slices the packed ``[n_items, W]`` database on
+    the word (= 32-transaction block) axis: host ``h`` builds its
+    local :class:`BitmapArena` from ``bitmaps[:, w0:w1]`` and sweeps
+    only those columns. Word granularity keeps every host's slice a
+    plain view with no bit surgery, and the remainder is spread over
+    the leading hosts so slice widths differ by at most one word.
+    Hosts beyond ``n_words_`` get empty ``(w, w)`` ranges — legal, the
+    backends skip zero-width segments."""
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    base, extra = divmod(n_words_, n_hosts)
+    ranges: List[Tuple[int, int]] = []
+    w = 0
+    for h in range(n_hosts):
+        width = base + (1 if h < extra else 0)
+        ranges.append((w, w + width))
+        w += width
+    return ranges
+
+
 # ---------------------------------------------------------------------------
 # BitmapArena: the device-resident home of every TID bitmap
 # ---------------------------------------------------------------------------

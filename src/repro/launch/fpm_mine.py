@@ -16,6 +16,56 @@ from repro.core.tidlist import pack_database
 from repro.data.transactions import PROFILES, load, min_support_count
 
 
+def _spawn_hosts(args) -> None:
+    """Parent of a ``--hosts N`` run: pick a coordinator port, spawn
+    one rank subprocess per host with the CPU-cluster environment
+    (``JAX_PLATFORMS=cpu`` plus the collective-combine XLA thresholds
+    the big-model launchers tune, so a per-flush reduction fuses into
+    one transfer rather than many), forward rank 0's report, and
+    propagate the first failing exit code."""
+    import os
+    import socket
+    import subprocess
+    import sys
+
+    if args.stream:
+        raise SystemExit("--hosts and --stream are mutually exclusive "
+                         "(use StreamingMiner(hosts=N) for multi-host "
+                         "streaming)")
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        coord = f"127.0.0.1:{s.getsockname()[1]}"
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + " --xla_gpu_all_reduce_combine_threshold_bytes=134217728"
+        + " --xla_gpu_all_gather_combine_threshold_bytes=134217728"
+        + " --xla_gpu_reduce_scatter_combine_threshold_bytes"
+        + "=134217728").strip()
+    base = [sys.executable, "-m", "repro.launch.fpm_mine",
+            "--dataset", args.dataset,
+            "--workers", str(args.workers),
+            "--policies", args.policies[0],
+            "--granularity", args.granularity,
+            "--max-k", str(args.max_k),
+            "--seed", str(args.seed),
+            "--_coordinator", coord,
+            "--_nprocs", str(args.hosts)]
+    if args.support is not None:
+        base += ["--support", str(args.support)]
+    print(f"hosts: spawning {args.hosts} ranks @ {coord} "
+          f"(JAX_PLATFORMS=cpu, collective-combine XLA flags)")
+    procs = [subprocess.Popen(
+        base + ["--_rank", str(r)], env=env,
+        stdout=None if r == 0 else subprocess.DEVNULL)
+        for r in range(args.hosts)]
+    codes = [p.wait() for p in procs]
+    for r, c in enumerate(codes):
+        if c:
+            raise SystemExit(f"rank {r} exited with {c}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="chess", choices=list(PROFILES))
@@ -53,6 +103,20 @@ def main():
                          "device, device-affine workers). Uses the "
                          "first N jax devices when available, logical "
                          "shards otherwise; 0 = shared-memory run")
+    ap.add_argument("--hosts", type=int, default=0, metavar="N",
+                    help="multi-host mode: spawn N worker processes "
+                         "forming a jax.distributed CPU cluster; each "
+                         "owns a word-slice of the transaction axis "
+                         "and support counting is two-phase (local "
+                         "partial counts + per-flush cross-host "
+                         "reduction). 0 = single process")
+    # child-rank plumbing for --hosts (set by the parent, not by hand)
+    ap.add_argument("--_rank", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--_nprocs", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--_coordinator", default=None,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--support", type=float, default=None,
                     help="override the profile's min-support fraction")
     ap.add_argument("--max-k", type=int, default=6)
@@ -74,6 +138,9 @@ def main():
                          "print per-kind p50/p95/p99 (with --stream)")
     args = ap.parse_args()
 
+    if args.hosts >= 2 and args._rank is None:
+        return _spawn_hosts(args)
+
     db, prof = load(args.dataset, args.seed)
     n_items = (prof.n_dense_items if prof.kind == "dense"
                else prof.n_items)
@@ -83,6 +150,25 @@ def main():
     ms = max(1, int(frac * len(db)))
     print(f"dataset=synth:{args.dataset} |D|={len(db)} items={n_items} "
           f"min_support={ms} ({frac:.4f})")
+
+    if args._rank is not None:
+        # one rank of a --hosts cluster: every process packed the same
+        # database above, keeps only its word-slice, and mines with
+        # the KV-store reduction transport
+        from repro.core.cluster import mine_distributed_process
+        res, met = mine_distributed_process(
+            bitmaps, ms, rank=args._rank, n_procs=args._nprocs,
+            coordinator=args._coordinator, policy=args.policies[0],
+            n_workers=args.workers, max_k=args.max_k,
+            granularity=args.granularity)
+        if args._rank == 0:
+            s = met.scheduler
+            print(f"{args.policies[0]:10s} hosts={met.n_hosts} "
+                  f"wall={met.wall_s:6.2f}s "
+                  f"frequent={len(res)} "
+                  f"steals={int(s.get('steals', 0)):6d} "
+                  f"net={met.net_bytes}B steal_net={met.steal_net}B")
+        return
 
     mesh = mesh_over_devices(args.mesh)
     if mesh is not None:
@@ -189,6 +275,9 @@ def main():
             line += (f" d2d={met.d2d_bytes}B "
                      f"migrations={met.migrations} "
                      f"dev_occ={occ}")
+        if met.n_hosts > 1:
+            line += (f" hosts={met.n_hosts} net={met.net_bytes}B "
+                     f"steal_net={met.steal_net}B")
         if args.granularity == "depth-first":
             line += (f" peak_retained={met.peak_retained_bitmaps}"
                      f" ({met.peak_bytes_retained} B)")
