@@ -59,6 +59,7 @@ from repro.core import fpm, tidlist
 from repro.core.join_backend import FLUSH_US, MAX_BATCH, SweepRequest
 from repro.core.scheduler import stable_hash
 from repro.core.tidlist import BitmapArena, partition_words
+from repro.obs import schema as obs_schema
 
 Itemset = Tuple[int, ...]
 
@@ -514,7 +515,7 @@ def _drive(store: BitmapArena, runtime, min_support: int, max_k: int, *,
     threaded through the runtime. Representation is pinned to "bitmap":
     sparse payloads are positional in the LOCAL slice and must not leak
     into cross-host descriptors."""
-    t0 = time.time()
+    t0 = time.perf_counter()   # monotonic: finalize() subtracts from it
     supports = np.asarray(item_counts)
     result: Dict[Itemset, int] = {
         (i,): int(supports[i]) for i in range(store.n_base)
@@ -565,20 +566,15 @@ def merge_metrics(per_host: List["fpm.MiningMetrics"],
         m.candidates = per_host[0].candidates
         m.frequent = per_host[0].frequent
     m.representation = per_host[0].representation
-    sched: Dict[str, float] = {}
-    for h in per_host:
-        for k, v in h.scheduler.items():
-            sched[k] = sched.get(k, 0) + v
-    if sched:
-        sched["tasks_per_steal"] = (sched.get("tasks_stolen", 0)
-                                    / max(sched.get("steals", 0), 1))
-    m.scheduler = sched
-    per_dev: List[Dict[str, float]] = []
-    for hid, h in enumerate(per_host):
-        for row in h.per_device:
-            per_dev.append({**row, "host": hid})
-    m.per_device = per_dev
-    total_req = sum(int(r["sweep_requests"]) for r in per_dev)
+    # scheduler/per_device/per_host rows all travel the repro.obs
+    # schema: counters sum, derived ratios rebuild after the merge
+    m.scheduler = obs_schema.scheduler_stats(obs_schema.merge_counters(
+        [h.scheduler for h in per_host],
+        obs_schema.SCHEDULER_COUNTERS))
+    m.per_device = [
+        obs_schema.device_stats({**row, "host": hid})
+        for hid, h in enumerate(per_host) for row in h.per_device]
+    total_req = sum(int(r["sweep_requests"]) for r in m.per_device)
     m.batch_occupancy = (total_req / m.flushes if m.flushes else 0.0)
     g = gauges.snapshot()
     m.n_hosts = len(per_host)
@@ -586,12 +582,13 @@ def merge_metrics(per_host: List["fpm.MiningMetrics"],
     m.steal_net = g["steal_net"]
     m.cross_steals = g["cross_steals"]
     m.per_host = [
-        {"host": hid,
-         "bytes_swept": h.bytes_swept,
-         "sweep_s": sum(float(r.get("sweep_s", 0.0))
-                        for r in h.per_device),
-         "eval_s": gauges.eval_s[hid],
-         "eval_bytes": gauges.eval_bytes[hid]}
+        obs_schema.host_stats(
+            {"host": hid,
+             "bytes_swept": h.bytes_swept,
+             "sweep_s": sum(float(r.get("sweep_s", 0.0))
+                            for r in h.per_device),
+             "eval_s": gauges.eval_s[hid],
+             "eval_bytes": gauges.eval_bytes[hid]})
         for hid, h in enumerate(per_host)]
     return m
 
@@ -603,6 +600,7 @@ def mine_cluster(bitmaps: np.ndarray, min_support: int, *,
                  backend: str = "auto", max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US, item_counts=None,
                  owner_fn: Optional[Callable[[Itemset], int]] = None,
+                 tracer=None,
                  ) -> Tuple[Dict[Itemset, int], "fpm.MiningMetrics"]:
     """Loopback-cluster ``mine()``: N logical hosts in one process,
     each with its own word-sliced arena, scheduler and dispatchers,
@@ -612,7 +610,9 @@ def mine_cluster(bitmaps: np.ndarray, min_support: int, *,
 
     ``owner_fn`` overrides the ``stable_hash`` bucket→host map (tests
     use it to force every bucket onto one host so cross-host steals
-    MUST fire)."""
+    MUST fire). ``tracer`` (a shared :class:`repro.obs.Tracer`) merges
+    every host's lanes into ONE global timeline — each host's workers,
+    dispatchers and driver record under its own Chrome-trace pid."""
     if hosts < 2:
         raise ValueError(f"mine_cluster needs hosts >= 2, got {hosts}")
     n_items, n_w = bitmaps.shape
@@ -627,7 +627,8 @@ def mine_cluster(bitmaps: np.ndarray, min_support: int, *,
                                   n_workers=n_workers,
                                   granularity=granularity,
                                   backend=backend, max_batch=max_batch,
-                                  flush_us=flush_us, cluster=ctxs[h])
+                                  flush_us=flush_us, cluster=ctxs[h],
+                                  tracer=tracer)
                 for h in range(hosts)]
     bus.scheds = [rt.sched for rt in runtimes]
     bus.install_steal()

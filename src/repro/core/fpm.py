@@ -70,6 +70,8 @@ from repro.core.join_backend import (FLUSH_US, MAX_BATCH, SweepDispatcher,
                                      resolve_backend)
 from repro.core.scheduler import TaskScheduler, make_policy
 from repro.core.tidlist import BitmapArena
+from repro.obs import MetricsRegistry
+from repro.obs import schema as obs_schema
 
 GRANULARITIES = ("bucket", "candidate", "depth-first", "auto")
 
@@ -401,7 +403,7 @@ class EngineRuntime:
     def __init__(self, store: BitmapArena, *, policy: str = "clustered",
                  n_workers: int = 8, granularity: str = "bucket",
                  backend: str = "auto", max_batch: int = MAX_BATCH,
-                 flush_us: float = FLUSH_US, cluster=None):
+                 flush_us: float = FLUSH_US, cluster=None, tracer=None):
         backend_obj = resolve_backend(backend)
         n_shards = store.n_shards
         if n_shards > 1:
@@ -413,19 +415,44 @@ class EngineRuntime:
         # reduce every flush across hosts through it, and the engine
         # cores partition work / exchange level results through it
         self.cluster = cluster
+        # observability (repro.obs): one tracer threaded through every
+        # layer this runtime owns — scheduler workers, dispatcher
+        # threads and the arena all record into its per-thread rings.
+        # None (the default) keeps every instrumented site on the
+        # one-branch disabled fast path. In cluster mode the host rank
+        # becomes the Chrome-trace pid, one lane group per host.
+        self.tracer = tracer
+        trace_pid = cluster.host_id if cluster is not None else 0
+        self.trace_pid = trace_pid
+        if tracer is not None:
+            store.tracer = tracer
         self.device_of = [i % n_shards for i in range(n_workers)]
         self.dispatchers = [
             SweepDispatcher(store, backend_obj,
                             n_clients=self.device_of.count(s),
                             max_batch=max_batch, flush_us=flush_us,
-                            shard=s, cluster=cluster)
+                            shard=s, cluster=cluster, tracer=tracer,
+                            trace_pid=trace_pid)
             for s in range(n_shards)]
         self.sched = TaskScheduler(
             n_workers,
             make_policy(policy, n_workers,
                         _cluster_fn(granularity, policy)),
             device_of=self.device_of,
-            migrate_cb=lambda hs, src, dst: store.migrate(hs, dst))
+            migrate_cb=lambda hs, src, dst: store.migrate(hs, dst),
+            tracer=tracer, trace_pid=trace_pid)
+        # pull-based snapshot API: live gauges, readable any time
+        self.registry = MetricsRegistry()
+        self.registry.register("scheduler", self.sched.merged_stats)
+        self.registry.register(
+            "per_device", lambda: [d.stats() for d in self.dispatchers])
+        self.registry.register(
+            "arena", lambda: {"h2d_bytes": store.h2d_bytes,
+                              "d2d_bytes": store.d2d_bytes,
+                              "migrations": store.migrations,
+                              "compactions": store.compactions,
+                              "compaction_bytes": store.compaction_bytes,
+                              "live_extra": store.live_extra})
 
     def shutdown(self) -> None:
         self.sched.shutdown()
@@ -451,7 +478,8 @@ class MiningRun:
                  backend: str = "auto", max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US,
                  representation: str = "auto", item_counts=None,
-                 runtime: Optional[EngineRuntime] = None):
+                 runtime: Optional[EngineRuntime] = None,
+                 tracer=None):
         if granularity not in GRANULARITIES:
             raise ValueError(
                 f"granularity must be one of {GRANULARITIES}, "
@@ -464,7 +492,7 @@ class MiningRun:
             runtime = EngineRuntime(
                 store, policy=policy, n_workers=n_workers,
                 granularity=granularity, backend=backend,
-                max_batch=max_batch, flush_us=flush_us)
+                max_batch=max_batch, flush_us=flush_us, tracer=tracer)
             self._owns_runtime = True
         else:
             if runtime.store is not store:
@@ -509,15 +537,13 @@ class MiningRun:
 
     def _disp_stats(self, d, base) -> Dict[str, float]:
         f0, r0, qf0, qr0, q0, s0 = base
-        fl = d.flushes - f0
-        rq = d.requests - r0
-        return {"device": d.shard, "flushes": fl,
-                "sweep_requests": rq,
-                "batch_occupancy": rq / fl if fl else 0.0,
-                "query_requests": d.query_requests - q0,
-                "queue_flushes": d.queue_flushes - qf0,
-                "queue_requests": d.queue_requests - qr0,
-                "sweep_s": d.sweep_s - s0}
+        return obs_schema.device_stats(
+            {"device": d.shard, "flushes": d.flushes - f0,
+             "sweep_requests": d.requests - r0,
+             "query_requests": d.query_requests - q0,
+             "queue_flushes": d.queue_flushes - qf0,
+             "queue_requests": d.queue_requests - qr0,
+             "sweep_s": d.sweep_s - s0})
 
     def finalize(self, t0: float) -> MiningMetrics:
         """Fill the metrics from scheduler/dispatcher/arena gauges.
@@ -527,14 +553,15 @@ class MiningRun:
         fresh arena so they equal the run; ``refresh`` snapshots them
         before/after to report per-refresh deltas."""
         metrics, store = self.metrics, self.store
-        metrics.wall_s = time.time() - t0
-        now = self.sched.merged_stats()
-        sched_delta = {k: now[k] - self._sched0.get(k, 0)
-                       for k in now}
-        steals = sched_delta.get("steals", 0)
-        sched_delta["tasks_per_steal"] = (
-            sched_delta.get("tasks_stolen", 0) / max(steals, 1))
-        metrics.scheduler = sched_delta
+        # perf_counter epoch (matches the caller's t0): time.time() is
+        # not monotonic — an NTP step mid-run corrupted wall_s
+        metrics.wall_s = time.perf_counter() - t0
+        # delta the COUNTERS only, then rebuild the derived ratio —
+        # the obs schema is the one place the key set lives
+        metrics.scheduler = obs_schema.scheduler_stats(
+            obs_schema.delta_counters(self.sched.merged_stats(),
+                                      self._sched0,
+                                      obs_schema.SCHEDULER_COUNTERS))
         metrics.rows_touched = int(metrics.scheduler["rows_touched"])
         metrics.bytes_swept = int(metrics.scheduler["bytes_swept"])
         metrics.cache_hits = sum(c.hits for c in self.caches.values())
@@ -580,6 +607,7 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
          arena: str = "auto", max_batch: int = MAX_BATCH,
          flush_us: float = FLUSH_US, mesh=None,
          representation: str = "auto", item_counts=None, hosts: int = 1,
+         trace=None,
          ) -> Tuple[Dict[Itemset, int], MiningMetrics]:
     """bitmaps: [n_items, W] uint32 packed TID bitmaps.
 
@@ -617,6 +645,9 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
     scheduler and dispatchers — with two-phase support counting and
     cross-host steal-as-migration. Bit-identical results; cluster
     traffic lands in ``MiningMetrics.net_bytes``/``steal_net``.
+    ``trace`` attaches a :class:`repro.obs.Tracer`: workers,
+    dispatchers and the arena record span timelines into it (export
+    with ``repro.obs.write_chrome_trace``; None = tracing off).
     """
     if hosts > 1:
         if mesh is not None:
@@ -628,11 +659,11 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
                             max_k=max_k, cache_size=cache_size,
                             granularity=granularity, backend=backend,
                             max_batch=max_batch, flush_us=flush_us,
-                            item_counts=item_counts)
+                            item_counts=item_counts, tracer=trace)
     n_shards, devices = _resolve_mesh(mesh)
     store = BitmapArena.from_bitmaps(bitmaps, backing=arena,
                                      n_shards=n_shards, devices=devices)
-    t0 = time.time()
+    t0 = time.perf_counter()
     # level 1 before the runtime spins up worker/dispatcher threads:
     # if it raises there is nothing to tear down
     if item_counts is None:
@@ -642,7 +673,7 @@ def mine(bitmaps: np.ndarray, min_support: int, *,
                     granularity=granularity, cache_size=cache_size,
                     backend=backend, max_batch=max_batch,
                     flush_us=flush_us, representation=representation,
-                    item_counts=item_counts)
+                    item_counts=item_counts, tracer=trace)
     run.metrics.frequent += len(frequent)
     try:
         mine_more(run, min_support, max_k, result, frequent)
@@ -660,6 +691,11 @@ def mine_more(run: MiningRun, min_support: int, max_k: int,
     (delta: reuse known supports, delta-sweep dirty candidates over the
     pending segments only, carry staleness priorities)."""
     cluster = run.runtime.cluster
+    tr = run.sched.tracer
+    if tr is not None:
+        # whichever thread drives this run gets the "driver" lane (one
+        # per host in cluster mode — drivers are distinct threads)
+        tr.set_lane("driver", sort_index=0, pid=run.runtime.trace_pid)
     if run.granularity == "depth-first":
         _mine_depth_first(run.store, run.dispatchers, min_support,
                           max_k, run.sched, run.metrics, result,
@@ -938,7 +974,9 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
         return collect
 
     k = 2
+    tr = sched.tracer
     while frequent and k <= max_k:
+        t_level = tr.now() if tr is not None else 0.0
         # detached subtrees' itemsets never rejoin ``frequent``, so the
         # Apriori prune needs the full known-frequent membership (the
         # result dict is complete here: the level barrier below also
@@ -1010,6 +1048,11 @@ def _mine_levelwise(store, dispatchers, min_support, max_k, sched,
                 frequent.append(c)
         frequent.sort()
         metrics.frequent += len(frequent)
+        if tr is not None:
+            # driver-lane level span: the barrier-to-barrier extent
+            tr.span(f"level-{k}", t_level, cat="level",
+                    args={"candidates": len(cands),
+                          "frequent": len(frequent)})
         k += 1
 
 

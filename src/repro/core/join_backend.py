@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core import tidlist
 from repro.core.tidlist import BitmapArena
+from repro.obs import schema as obs_schema
 
 # Dispatcher defaults: how many requests one kernel launch may carry,
 # and how long (µs) the dispatcher waits for stragglers to coalesce
@@ -576,9 +577,14 @@ class SweepDispatcher:
     def __init__(self, arena: BitmapArena, backend: JoinBackend,
                  n_clients: int, max_batch: int = MAX_BATCH,
                  flush_us: float = FLUSH_US, shard: int = 0,
-                 query_flush_us: float = QUERY_FLUSH_US, cluster=None):
+                 query_flush_us: float = QUERY_FLUSH_US, cluster=None,
+                 tracer=None, trace_pid: int = 0):
         self.arena = arena
         self.backend = backend
+        # observability: None = off; spans record flush formation on
+        # the dispatcher lane and blocking sweeps on the caller's lane
+        self.tracer = tracer
+        self.trace_pid = trace_pid
         self.n_clients = max(1, n_clients)
         self.max_batch = max(1, max_batch)
         self.flush_s = max(0.0, flush_us) * 1e-6
@@ -702,6 +708,12 @@ class SweepDispatcher:
             self.sweep_s += time.perf_counter() - t0
         if self.cluster is not None:
             results = self.cluster.reduce_flush(reqs, results)
+        tr = self.tracer
+        if tr is not None:
+            # inline burst: the flush span lands on the CALLING
+            # worker's lane (that is where the time went)
+            tr.span("flush", t0, cat="flush",
+                    args=self._flush_args(reqs, inline=True))
         return results
 
     def sweep(self, prefix_handle: int,
@@ -711,8 +723,17 @@ class SweepDispatcher:
         """Blocking convenience: enqueue and wait for the counts.
         ``segments`` restricts the join to a segment subset (a
         streaming delta sweep)."""
-        return self.submit(prefix_handle, ext_handles,
-                           segments=segments, desc=desc).result()
+        tr = self.tracer
+        if tr is None:
+            return self.submit(prefix_handle, ext_handles,
+                               segments=segments, desc=desc).result()
+        t0 = tr.now()
+        counts = self.submit(prefix_handle, ext_handles,
+                             segments=segments, desc=desc).result()
+        # caller-side wait: nests inside the worker's task span
+        tr.span("sweep", t0, cat="sweep",
+                args={"ext": len(ext_handles)})
+        return counts
 
     def sweep_bits(self, prefix_handle: int, ext_handles: Sequence[int],
                    desc: Optional[Tuple[int, ...]] = None
@@ -743,18 +764,28 @@ class SweepDispatcher:
                 raise RuntimeError("dispatcher is stopped")
             self.flushes += 1
             self.requests += 1
+        tr = self.tracer
         if req.is_sparse(self.arena) and getattr(
                 self.backend, "sweep_sparse_bits", None) is not None:
             if self.arena.n_shards > 1:
                 self.arena.note_access(req.shard, (*req.prefix_handles,
                                                    *req.ext_handles))
-            return self.backend.sweep_sparse_bits(self.arena, req)
+            t0 = time.perf_counter()
+            out = self.backend.sweep_sparse_bits(self.arena, req)
+            if tr is not None:
+                tr.span("sweep", t0, cat="sweep",
+                        args={"ext": len(req.ext_handles),
+                              "sparse": True})
+            return out
         t0 = time.perf_counter()
         counts = self.backend.sweep_many(self.arena, [req])[0]
         with self._cv:
             self.sweep_s += time.perf_counter() - t0
         if self.cluster is not None:
             counts = self.cluster.reduce_flush([req], [counts])[0]
+        if tr is not None:
+            tr.span("sweep", t0, cat="sweep",
+                    args={"ext": len(req.ext_handles), "sparse": False})
         return counts, None
 
     @property
@@ -763,18 +794,40 @@ class SweepDispatcher:
 
     def stats(self) -> Dict[str, float]:
         """This dispatcher's gauges — the per-device rows of
-        ``MiningMetrics.per_device`` (arena-global h2d/d2d gauges live
-        on the arena, not here)."""
-        return {"device": self.shard, "flushes": self.flushes,
-                "sweep_requests": self.requests,
-                "batch_occupancy": self.batch_occupancy,
-                "query_requests": self.query_requests,
-                "queue_flushes": self.queue_flushes,
-                "queue_requests": self.queue_requests,
-                "sweep_s": self.sweep_s}
+        ``MiningMetrics.per_device``, on the ``repro.obs.schema``
+        device schema (arena-global h2d/d2d gauges live on the arena,
+        not here)."""
+        return obs_schema.device_stats(
+            {"device": self.shard, "flushes": self.flushes,
+             "sweep_requests": self.requests,
+             "query_requests": self.query_requests,
+             "queue_flushes": self.queue_flushes,
+             "queue_requests": self.queue_requests,
+             "sweep_s": self.sweep_s})
+
+    def _flush_args(self, batch: Sequence[SweepRequest],
+                    inline: bool = False) -> Dict[str, float]:
+        """Span payload for one flush: occupancy, an upper-bound byte
+        figure (rows × full arena width — segment-restricted sweeps
+        read less), and the dense/sparse representation split. Only
+        runs when a tracer is attached."""
+        arena = self.arena
+        rows = sum(len(r.prefix_handles) + len(r.ext_handles)
+                   for r in batch)
+        sparse = sum(1 for r in batch if r.is_sparse(arena))
+        return {"requests": len(batch), "occupancy": len(batch),
+                "rows": rows, "batch_bytes": rows * arena.n_words * 4,
+                "sparse": sparse, "dense": len(batch) - sparse,
+                "queries": sum(1 for r in batch if r.priority),
+                "inline": inline}
 
     # -------------------------------------------------------------- loop --
     def _loop(self):
+        tr = self.tracer
+        if tr is not None:
+            tr.set_lane(f"dispatcher-{self.shard}",
+                        sort_index=1000 + self.shard,
+                        pid=self.trace_pid)
         full = min(self.max_batch, self.n_clients)
         while True:
             with self._cv:
@@ -806,10 +859,18 @@ class SweepDispatcher:
             try:
                 t0 = time.perf_counter()
                 results = self.backend.sweep_many(self.arena, batch)
+                t1 = time.perf_counter()
                 with self._cv:
-                    self.sweep_s += time.perf_counter() - t0
+                    self.sweep_s += t1 - t0
                 if self.cluster is not None:
                     results = self.cluster.reduce_flush(batch, results)
+                    if tr is not None:
+                        # the cross-host reduction tail of this flush
+                        tr.span("net-flush", t1, cat="net",
+                                args={"requests": len(batch)})
+                if tr is not None:
+                    tr.span("flush", t0, cat="flush",
+                            args=self._flush_args(batch))
             except BaseException as e:  # noqa: BLE001 - resolve futures:
                 for r in batch:         # a swallowed error would deadlock
                     r.future.set_exception(e)   # every blocked worker

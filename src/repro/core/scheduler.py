@@ -29,6 +29,8 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import schema as obs_schema
+
 
 def stable_hash(key: Any) -> int:
     """Process-stable hash for worker placement: CRC32 of a canonical
@@ -380,8 +382,14 @@ class TaskScheduler:
                  seed: int = 0,
                  device_of: Optional[Sequence[int]] = None,
                  migrate_cb: Optional[
-                     Callable[[List[int], int, int], Any]] = None):
+                     Callable[[List[int], int, int], Any]] = None,
+                 tracer=None, trace_pid: int = 0):
         self.n = n_workers
+        # observability: None = tracing off (workers pay one `is not
+        # None` test per event site); trace_pid is the host rank lane
+        # group in cluster mode
+        self.tracer = tracer
+        self.trace_pid = trace_pid
         self.device_of = (list(device_of) if device_of is not None
                           else [0] * n_workers)
         if len(self.device_of) != n_workers:
@@ -566,6 +574,8 @@ class TaskScheduler:
             return task
         st = self.stats[i]
         rng = self._rngs[i]
+        tr = self.tracer
+        t_steal = tr.now() if tr is not None else 0.0
         for _ in range(4 * self.n):
             victim = rng.randrange(self.n)
             if victim == i:
@@ -589,6 +599,10 @@ class TaskScheduler:
                     for t in got[1:]:
                         self.policy.put(i, t)
                     self._signal_work()
+                if tr is not None:
+                    tr.span("steal", t_steal, cat="steal",
+                            args={"victim": victim, "tasks": len(got),
+                                  "migrated": src != dst, "hit": True})
                 return got[0]
         # local queues and victims are all dry: escalate to a
         # cross-host steal if a cluster installed one. The callback
@@ -602,13 +616,23 @@ class TaskScheduler:
             if n > 0:
                 st.steals += 1
                 st.tasks_stolen += n
+                if tr is not None:
+                    tr.span("steal", t_steal, cat="steal",
+                            args={"remote": True, "tasks": n,
+                                  "hit": True})
                 return self.policy.get(i)
+        if tr is not None:
+            tr.span("steal", t_steal, cat="steal", args={"hit": False})
         return None
 
     def _worker(self, i: int):
         st = self.stats[i]
         self._tls.stats = st
         self._tls.worker_id = i
+        tr = self.tracer
+        if tr is not None:
+            tr.set_lane(f"worker-{i}", sort_index=10 + i,
+                        pid=self.trace_pid)
         while True:
             # Snapshot the put sequence BEFORE probing the queues: a
             # spawn that lands between a failed probe and the park bumps
@@ -633,6 +657,7 @@ class TaskScheduler:
                 # no running task to spawn, so a fully idle scheduler
                 # parks untimed: a persistent serving runtime costs
                 # zero wakeups between refreshes.
+                t_park = tr.now() if tr is not None else 0.0
                 with self._cv:
                     if self._stop:
                         return
@@ -653,7 +678,10 @@ class TaskScheduler:
                             timeout=(None if untimed else 0.05))
                     finally:
                         self._parked -= 1
+                if tr is not None:
+                    tr.span("park", t_park, cat="idle")
                 continue
+            t_task = tr.now() if tr is not None else 0.0
             try:
                 task.result = task.fn(*task.args)
             except BaseException as e:  # noqa: BLE001 - must not leak:
@@ -663,6 +691,15 @@ class TaskScheduler:
                 task.args = ()      # drop arg refs even on error:
                                     # parent-handed bitmaps must free
                                     # once consumed
+            if tr is not None:
+                attr = task.attr
+                args = {"depth": task.depth}
+                if isinstance(attr, tuple) and len(attr) == 2:
+                    args["bucket"] = attr[0]
+                    args["prefix"] = repr(attr[1])
+                elif attr is not None:
+                    args["prefix"] = repr(attr)
+                tr.span("task", t_task, cat="task", args=args)
             st.tasks_run += 1
             with self._cv:
                 self._outstanding -= 1
@@ -671,17 +708,16 @@ class TaskScheduler:
 
     # ------------------------------------------------------------ stats --
     def merged_stats(self) -> Dict[str, float]:
+        """Scheduler-wide counters on the ``repro.obs.schema``
+        scheduler schema (counters int, ``tasks_per_steal`` the only
+        derived float — recomputed, never summed)."""
         s = list(self.stats) + [self._external_stats]
-        total = sum(w.tasks_run for w in s)
-        steals = sum(w.steals for w in s)
-        return {
-            "tasks_run": total,
+        return obs_schema.scheduler_stats({
+            "tasks_run": sum(w.tasks_run for w in s),
             "spawned": self._spawned,
-            "steals": steals,
+            "steals": sum(w.steals for w in s),
             "tasks_stolen": sum(w.tasks_stolen for w in s),
             "steal_attempts": sum(w.steal_attempts for w in s),
-            "tasks_per_steal": (sum(w.tasks_stolen for w in s)
-                                / max(steals, 1)),
             # drain-bucket switches are counted at the queue by the
             # clustered policies; non-bucket policies report 0
             "bucket_switches": sum(getattr(self.policy, "switches",
@@ -693,7 +729,7 @@ class TaskScheduler:
             "dense_sweeps": sum(w.dense_sweeps for w in s),
             "sparse_sweeps": sum(w.sparse_sweeps for w in s),
             "sparse_bytes_swept": sum(w.sparse_bytes_swept for w in s),
-        }
+        })
 
 
 def make_policy(name: str, n_workers: int,

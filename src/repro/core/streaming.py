@@ -81,6 +81,8 @@ from repro.core.itemsets import Itemset
 from repro.core.join_backend import FLUSH_US, MAX_BATCH
 from repro.core.scheduler import ClusteredPolicy
 from repro.core.tidlist import BitmapArena, pack_database
+from repro.obs import LatencyRecorder, MetricsRegistry
+from repro.obs import schema as obs_schema
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +362,7 @@ def _serve_queries(owner, itemsets: Sequence[Sequence[int]]
     the state lock, sweep the misses as one priority burst on a
     round-robin dispatcher, backfill the known store, and return
     ``(support, swept)`` per itemset."""
+    t_q = time.perf_counter()
     xs: List[Itemset] = []
     for raw in itemsets:
         x = tuple(sorted({int(i) for i in raw}))
@@ -376,6 +379,10 @@ def _serve_queries(owner, itemsets: Sequence[Sequence[int]]
             known_ref = planner.known
             owner._gate.begin()
     if not slots:
+        # pure snapshot hits: per-query share of the batched call
+        owner.latency.record(
+            "hit", (time.perf_counter() - t_q) / max(len(xs), 1),
+            n=len(xs))
         return answers
     try:
         disp = runtime.dispatchers[
@@ -394,6 +401,9 @@ def _serve_queries(owner, itemsets: Sequence[Sequence[int]]
         updates[xs[j]] = c
     owner._commit_answers(known_ref, updates)
     owner._bill_query(len(slots), nbytes)
+    owner.latency.record(
+        "sweep", (time.perf_counter() - t_q) / max(len(xs), 1),
+        n=len(xs))
     return answers
 
 
@@ -444,7 +454,12 @@ class PatternServer:
     def top_k(self, prefix: Sequence[int] = (), k: int = 10
               ) -> List[Tuple[Itemset, int]]:
         next(self._n_top_k)
-        return self.snapshot.top_k(prefix, k)
+        t0 = time.perf_counter()
+        out = self.snapshot.top_k(prefix, k)
+        rec = getattr(self._miner, "latency", None)
+        if rec is not None:
+            rec.record("top_k", time.perf_counter() - t0)
+        return out
 
     def frequent(self, min_support: Optional[int] = None
                  ) -> Dict[Itemset, int]:
@@ -459,11 +474,18 @@ class PatternServer:
                 + _count_value(self._n_top_k))
 
     def merged_stats(self) -> Dict[str, int]:
-        out = {"hit": _count_value(self._n_hit),
-               "sweep": _count_value(self._n_sweep),
-               "top_k": _count_value(self._n_top_k)}
-        out["queries"] = sum(out.values())
-        return out
+        """Per-kind query counters on the ``repro.obs.schema`` query
+        schema (all ints; ``queries`` is the derived sum)."""
+        return obs_schema.query_stats(
+            {"hit": _count_value(self._n_hit),
+             "sweep": _count_value(self._n_sweep),
+             "top_k": _count_value(self._n_top_k)})
+
+    def latency_percentiles(self) -> Dict[str, Dict[str, float]]:
+        """Exact per-kind p50/p95/p99 from the miner's
+        :class:`repro.obs.LatencyRecorder` (empty if absent)."""
+        rec = getattr(self._miner, "latency", None)
+        return rec.percentiles() if rec is not None else {}
 
 
 # ---------------------------------------------------------------------------
@@ -584,7 +606,7 @@ class StreamingMiner:
                  representation: str = "auto",
                  compact_segments: int = 8,
                  compact_ratio: float = 0.5,
-                 hosts: int = 1):
+                 hosts: int = 1, tracer=None):
         if n_items < 1:
             raise ValueError(f"n_items must be >= 1, got {n_items}")
         if hosts > 1:
@@ -601,6 +623,14 @@ class StreamingMiner:
         self.max_k = max_k
         self._ms_spec = min_support
         self._hosts = max(1, int(hosts))
+        # observability: optional tracer threaded into the runtime(s);
+        # the latency recorder is always on (its cost is one lock +
+        # append per query batch — noise next to a snapshot hit)
+        self.tracer = tracer
+        self.latency = LatencyRecorder()
+        # perf_counter of each pending (un-refreshed) segment's
+        # ingest, FIFO — refresh_lag reads the head
+        self._pending_since: List[float] = []
         self._run_kw = dict(policy=policy, n_workers=n_workers,
                             granularity=granularity, backend=backend,
                             cache_size=cache_size, max_batch=max_batch,
@@ -673,7 +703,8 @@ class StreamingMiner:
                         backend=kw["backend"],
                         max_batch=kw["max_batch"],
                         flush_us=kw["flush_us"],
-                        cluster=self._hctxs[h])
+                        cluster=self._hctxs[h],
+                        tracer=self.tracer)
                         for h in range(self._hosts)]
                     self._bus.scheds = [rt.sched
                                         for rt in self._hruntimes]
@@ -686,7 +717,8 @@ class StreamingMiner:
                         granularity=kw["granularity"],
                         backend=kw["backend"],
                         max_batch=kw["max_batch"],
-                        flush_us=kw["flush_us"])
+                        flush_us=kw["flush_us"],
+                        tracer=self.tracer)
             return self._runtime
 
     @property
@@ -793,7 +825,7 @@ class StreamingMiner:
         sweeps only its captured boundary segments)."""
         batch = [list(t) for t in batch]
         _check_items(batch, self.n_items)
-        t0 = time.time()
+        t0 = time.perf_counter()
         seg_bm = pack_database(batch, self.n_items)   # outside any lock
         with self._state:
             if self._hosts > 1:
@@ -810,23 +842,34 @@ class StreamingMiner:
                         seg_bm if h == owner else empty)
                 self._seg_tx.append(len(batch))
                 self.n_transactions += len(batch)
-                return IngestReport(
+                self._pending_since.append(t0)
+                return self._ingest_done(IngestReport(
                     segment=seg, n_transactions=len(batch),
                     words=seg_bm.shape[1],
                     payload_bytes=self._harenas[owner].seg_nbytes(seg),
                     h2d_bytes=sum(ar.h2d_bytes
                                   for ar in self._harenas) - h0,
-                    wall_s=time.time() - t0)
+                    wall_s=time.perf_counter() - t0), t0)
             h0 = self.arena.h2d_bytes
             seg = self.arena.add_segment(seg_bm)
             self._seg_tx.append(len(batch))
             self.n_transactions += len(batch)
-            return IngestReport(
+            self._pending_since.append(t0)
+            return self._ingest_done(IngestReport(
                 segment=seg, n_transactions=len(batch),
                 words=seg_bm.shape[1],
                 payload_bytes=self.arena.seg_nbytes(seg),
                 h2d_bytes=self.arena.h2d_bytes - h0,
-                wall_s=time.time() - t0)
+                wall_s=time.perf_counter() - t0), t0)
+
+    def _ingest_done(self, rep: IngestReport, t0: float) -> IngestReport:
+        tr = self.tracer
+        if tr is not None:
+            tr.span("ingest", t0, cat="stream",
+                    args={"segment": rep.segment,
+                          "tx": rep.n_transactions,
+                          "bytes": rep.payload_bytes})
+        return rep
 
     # ------------------------------------------------------------ refresh --
     def refresh(self, before_publish=None) -> RefreshReport:
@@ -843,7 +886,7 @@ class StreamingMiner:
         appends mid-refresh are invisible to this generation and fold
         in on the next one."""
         with self._refresh_lock:
-            t0 = time.time()
+            t0 = time.perf_counter()
             arena = self.arena
             with self._state:
                 boundary = arena.n_segments
@@ -968,12 +1011,14 @@ class StreamingMiner:
                 bytes_swept=metrics.bytes_swept,
                 h2d_bytes=metrics.h2d_bytes,
                 d2d_bytes=metrics.d2d_bytes,
-                wall_s=time.time() - t0,
+                wall_s=time.perf_counter() - t0,
                 metrics=metrics)
             # the hook observes the world just before the swap and may
             # itself ingest — so it runs OUTSIDE the state lock
             if before_publish is not None:
                 before_publish(snapshot)
+            tr = self.tracer
+            t_pub = tr.now() if tr is not None else 0.0
             with self._state:
                 # commit point: plain assignments, then the swap
                 self._item_support = item_support
@@ -982,10 +1027,21 @@ class StreamingMiner:
                 self._refreshed_segments = boundary
                 self._snapshot = snapshot       # the atomic swap
                 self.generation = snapshot.generation
+                # this generation absorbed the pending segments — their
+                # ingest times leave the lag window at the commit point
+                del self._pending_since[:len(pending)]
                 c0 = arena.compaction_bytes
                 report.compacted_segments = self._maybe_compact()
                 report.compaction_bytes = arena.compaction_bytes - c0
-            report.wall_s = time.time() - t0
+            report.wall_s = time.perf_counter() - t0
+            if tr is not None:
+                tr.span("publish", t_pub, cat="stream",
+                        args={"generation": snapshot.generation})
+                tr.span("refresh", t0, cat="stream",
+                        args={"generation": snapshot.generation,
+                              "segments": len(pending),
+                              "frequent": len(final)})
+                tr.counter("refresh_lag", {"s": self.refresh_lag})
             return report
 
     # ------------------------------------------------------- multi-host --
@@ -1067,6 +1123,48 @@ class StreamingMiner:
         if self._hosts < 2:
             return None
         return self._bus.gauges.snapshot()
+
+    # ------------------------------------------------------ observability --
+    @property
+    def refresh_lag(self) -> float:
+        """Seconds the oldest not-yet-published ingest has waited
+        (0.0 when every ingested segment is covered by the current
+        generation). The staleness gauge a streaming deployment
+        alarms on: it grows while deltas queue and snaps back to
+        zero at each publish."""
+        with self._state:
+            if not self._pending_since:
+                return 0.0
+            return time.perf_counter() - self._pending_since[0]
+
+    def metrics_registry(self) -> "MetricsRegistry":
+        """Pull-based metrics for this miner: a fresh
+        :class:`repro.obs.MetricsRegistry` whose ``snapshot()``
+        reads live state — stream gauges (generation, transaction
+        and pending-segment counts, ``refresh_lag_s``), per-kind
+        query-latency percentiles, and — once the engine runtime
+        exists — the scheduler / per-device / arena sources it
+        registers."""
+        reg = MetricsRegistry()
+
+        def stream() -> Dict[str, object]:
+            with self._state:
+                pending = self.arena.n_segments - self._refreshed_segments
+                lag = (time.perf_counter() - self._pending_since[0]
+                       if self._pending_since else 0.0)
+                return {"generation": self.generation,
+                        "n_transactions": self.n_transactions,
+                        "pending_segments": pending,
+                        "refresh_lag_s": lag}
+
+        reg.register("stream", stream)
+        reg.register("query_latency", self.latency.percentiles)
+        rt = self._runtime
+        if rt is not None:
+            for name in rt.registry.names():
+                reg.register(name, lambda n=name, r=rt:
+                             r.registry.snapshot()[n])
+        return reg
 
     # --------------------------------------------------------- compaction --
     def _maybe_compact(self) -> int:
@@ -1159,6 +1257,8 @@ class Tenant:
         self.query_sweeps = 0
         self.query_sweep_bytes = 0
         self.last_flush_occupancy = 0.0
+        self.latency = LatencyRecorder()
+        self._pending_since: List[float] = []
 
     # shared serving protocol --------------------------------------------
     def _ensure_runtime(self) -> EngineRuntime:
@@ -1215,12 +1315,13 @@ class Tenant:
         compaction refuses to fold across the tag."""
         batch = [list(t) for t in batch]
         _check_items(batch, self.n_items)
-        t0 = time.time()
+        t0 = time.perf_counter()
         seg_bm = pack_database(batch, self.n_items)
         with self._state:
             h0 = self.arena.h2d_bytes
             seg = self.arena.add_segment(seg_bm, tenant=self.tid)
             self._pending.append(seg)
+            self._pending_since.append(t0)
             self._seg_tx[seg] = len(batch)
             self.n_transactions += len(batch)
             return IngestReport(
@@ -1228,7 +1329,7 @@ class Tenant:
                 words=seg_bm.shape[1],
                 payload_bytes=self.arena.seg_nbytes(seg),
                 h2d_bytes=self.arena.h2d_bytes - h0,
-                wall_s=time.time() - t0)
+                wall_s=time.perf_counter() - t0)
 
     def refresh(self, before_publish=None) -> RefreshReport:
         """StreamingMiner.refresh over the tenant's segment set: the
@@ -1237,7 +1338,7 @@ class Tenant:
         spawned task carries the tenant tag so the weighted-fair drain
         rule arbitrates between concurrently refreshing tenants."""
         with self._refresh_lock:
-            t0 = time.time()
+            t0 = time.perf_counter()
             hub, arena = self.hub, self.arena
             runtime = self._ensure_runtime()
             with self._state:
@@ -1318,7 +1419,7 @@ class Tenant:
                 bytes_swept=metrics.bytes_swept,
                 h2d_bytes=metrics.h2d_bytes,
                 d2d_bytes=metrics.d2d_bytes,
-                wall_s=time.time() - t0,
+                wall_s=time.perf_counter() - t0,
                 metrics=metrics)
             if before_publish is not None:
                 before_publish(snapshot)
@@ -1330,12 +1431,22 @@ class Tenant:
                 landed = set(pending)
                 self._pending = [g for g in self._pending
                                  if g not in landed]
+                del self._pending_since[:len(pending)]
                 self._snapshot = snapshot
                 self.generation = snapshot.generation
                 self.sweep_bytes += metrics.bytes_swept
                 self.last_flush_occupancy = metrics.batch_occupancy
-            report.wall_s = time.time() - t0
+            report.wall_s = time.perf_counter() - t0
             return report
+
+    @property
+    def refresh_lag(self) -> float:
+        """Seconds this tenant's oldest unpublished ingest has waited
+        (see :attr:`StreamingMiner.refresh_lag`)."""
+        with self._state:
+            if not self._pending_since:
+                return 0.0
+            return time.perf_counter() - self._pending_since[0]
 
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
         with self._state:
@@ -1460,7 +1571,7 @@ class TenantHub:
             for tid, t in self._tenants.items():
                 q = (t._server.merged_stats()
                      if t._server is not None else
-                     {"hit": 0, "sweep": 0, "top_k": 0, "queries": 0})
+                     obs_schema.query_stats({}))
                 out[tid] = {
                     "generation": t.generation,
                     "transactions": t.n_transactions,

@@ -10,6 +10,7 @@ re-expressed; DESIGN.md §3).
 from __future__ import annotations
 
 import threading
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -350,6 +351,9 @@ class BitmapArena:
         self.migrations = 0           # rows re-owned by migrate()
         self.compaction_bytes = 0     # host bytes repacked by compact()
         self.compactions = 0          # compact() calls that merged
+        # observability: None = off (the engines attach a tracer;
+        # h2d/d2d/compaction then emit spans on the calling lane)
+        self.tracer = None
         # hybrid sparse representation: per-slot tag plus a
         # variable-length tid/diffset store sharing the same handle
         # space, refcounting, coverage and accounting as word-columns.
@@ -428,6 +432,7 @@ class BitmapArena:
         merging would fuse foreign transactions into one segment and
         every tenant-restricted segment list would go stale.
         Returns the number of segments removed (``upto - 1``)."""
+        t0 = time.perf_counter() if self.tracer is not None else 0.0
         with self._lock:
             if not 2 <= upto <= len(self._seg_words):
                 return 0
@@ -447,6 +452,11 @@ class BitmapArena:
                 np.minimum(cov, 1)).astype(np.int32)
             for s in range(self.n_shards):
                 self._merge_mirror(s, upto)
+            if self.tracer is not None:
+                self.tracer.span(
+                    "compaction", t0, cat="arena",
+                    args={"merged": upto,
+                          "bytes": self.n_rows * new_w * 4})
             return upto - 1
 
     def _merge_mirror(self, shard: int, upto: int) -> None:
@@ -806,6 +816,9 @@ class BitmapArena:
         base rows are replicated everywhere and never migrate. Returns
         the number of rows moved."""
         moved = 0
+        tr = self.tracer
+        t0 = time.perf_counter() if tr is not None else 0.0
+        d2d0 = self.d2d_bytes
         with self._lock:
             dn = self._dev_n[dst]
             inv = self._invalid[dst]
@@ -833,6 +846,10 @@ class BitmapArena:
                             mig.setdefault(g, set()).add(h)
                 self.migrations += 1
                 moved += 1
+        if tr is not None and moved:
+            tr.span("d2d-migrate", t0, cat="arena",
+                    args={"rows": moved, "dst": dst,
+                          "bytes": self.d2d_bytes - d2d0})
         return moved
 
     def retain(self, handle: int) -> None:
@@ -1051,12 +1068,18 @@ class BitmapArena:
         :meth:`device_rows`."""
         if self.n_shards == 1:
             return
+        tr = self.tracer
+        d2d0 = self.d2d_bytes if tr is not None else 0
         with self._lock:
             self._note_sparse(shard, handles)
             segs = (segments if segments is not None
                     else range(len(self._seg_words)))
             for g in segs:
                 self._sync_plan(shard, g, handles)
+        if tr is not None and self.d2d_bytes != d2d0:
+            tr.instant("d2d", cat="arena",
+                       args={"shard": shard,
+                             "bytes": self.d2d_bytes - d2d0})
 
     def _note_sparse(self, shard: int, handles: Sequence[int]) -> None:
         """Cross-shard residency billing for sparse rows (caller holds
@@ -1097,6 +1120,8 @@ class BitmapArena:
             if needed is not None:
                 self.note_access(shard, needed, segments=(segment,))
             return None
+        tr = self.tracer
+        t_sync = time.perf_counter() if tr is not None else 0.0
         with self._lock:
             if needed is not None:
                 self._note_sparse(shard, needed)
@@ -1148,15 +1173,24 @@ class BitmapArena:
                          ].set(_place(fe_rows))
         self._dev[shard][segment] = dev
         if h2d_delta:
-            self.count_h2d(h2d_delta)
+            self.count_h2d(h2d_delta, _traced=False)
+            if tr is not None:
+                # only syncs that actually moved payload get a span —
+                # the steady-state no-op sync stays invisible
+                tr.span("h2d-sync", t_sync, cat="arena",
+                        args={"shard": shard, "segment": segment,
+                              "bytes": h2d_delta})
         return dev
 
-    def count_h2d(self, nbytes: int) -> None:
+    def count_h2d(self, nbytes: int, _traced: bool = True) -> None:
         """Backends add per-batch host→device payload here (the
         host-gather fallback path). Locked: with one dispatcher thread
         per shard, concurrent flushes update the shared gauge."""
         with self._lock:
             self.h2d_bytes += nbytes
+        if _traced and self.tracer is not None:
+            self.tracer.instant("h2d", cat="arena",
+                                args={"bytes": nbytes})
 
     def __repr__(self) -> str:   # pragma: no cover - debugging aid
         return (f"<BitmapArena rows={self.n_rows} base={self.n_base} "

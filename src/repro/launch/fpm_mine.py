@@ -14,6 +14,22 @@ from repro.core.fpm import (GRANULARITIES, mesh_over_devices, mine,
                             mine_serial)
 from repro.core.tidlist import pack_database
 from repro.data.transactions import PROFILES, load, min_support_count
+from repro.obs import Tracer, summary_table, write_chrome_trace
+
+
+def _finish_trace(args, tracer, wall_s: float) -> None:
+    """Flush the run's tracer: Chrome-trace JSON for ``--trace`` (one
+    lane per worker/dispatcher, loadable at https://ui.perfetto.dev)
+    and the terminal time-in-state table for ``--trace-summary``."""
+    if tracer is None:
+        return
+    if args.trace:
+        write_chrome_trace(tracer, args.trace)
+        print(f"trace: wrote {args.trace} "
+              f"({len(tracer.events())} events) — open in "
+              f"https://ui.perfetto.dev")
+    if args.trace_summary:
+        print(summary_table(tracer, wall_s))
 
 
 def _spawn_hosts(args) -> None:
@@ -131,6 +147,15 @@ def main():
     ap.add_argument("--stream-frac", type=float, default=0.1,
                     help="fraction of the dataset replayed as the "
                          "ingest stream (with --stream)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a time-resolved trace of the run "
+                         "(task/flush/steal spans, one lane per "
+                         "worker) and write Chrome trace-event JSON "
+                         "loadable in Perfetto")
+    ap.add_argument("--trace-summary", action="store_true",
+                    help="print the per-worker time-in-state table "
+                         "(sweep/eval/idle/steal) after the run; "
+                         "implies tracing even without --trace")
     ap.add_argument("--serve", type=int, default=0, metavar="N",
                     help="after the stream replay, serve N queries of "
                          "each kind (known-hit, batched unknown-itemset "
@@ -180,6 +205,9 @@ def main():
     t_serial = time.time() - t0
     print(f"serial: {len(ref)} frequent itemsets in {t_serial:.2f}s")
 
+    tracer = (Tracer() if (args.trace or args.trace_summary)
+              else None)
+
     if args.stream:
         from repro.core.streaming import PatternServer, StreamingMiner
         n_stream = max(args.stream, int(args.stream_frac * len(db)))
@@ -192,7 +220,9 @@ def main():
                             backend=args.backend, arena=args.arena,
                             max_batch=args.max_batch,
                             flush_us=args.flush_us, mesh=mesh,
-                            representation=args.representation)
+                            representation=args.representation,
+                            tracer=tracer)
+        t_stream0 = time.perf_counter()
         rep = sm.refresh()
         print(f"stream gen1: |D|={rep.n_transactions} "
               f"frequent={rep.frequent} wall={rep.wall_s:.2f}s "
@@ -247,9 +277,13 @@ def main():
             print(f"serve stats: {srv.merged_stats()} "
                   f"query_sweeps={sm.query_sweeps} "
                   f"query_sweep_bytes={sm.query_sweep_bytes}")
+            print(f"serve recorder: {srv.latency_percentiles()}")
+        _finish_trace(args, tracer,
+                      time.perf_counter() - t_stream0)
         sm.close()
         return
 
+    traced_wall = 0.0
     for policy in args.policies:
         res, met = mine(bitmaps, ms, policy=policy,
                         n_workers=args.workers, max_k=args.max_k,
@@ -257,7 +291,8 @@ def main():
                         backend=args.backend, arena=args.arena,
                         max_batch=args.max_batch, flush_us=args.flush_us,
                         mesh=mesh, representation=args.representation,
-                        item_counts=item_counts)
+                        item_counts=item_counts, trace=tracer)
+        traced_wall += met.wall_s
         assert res == ref, f"{policy} result mismatch!"
         s = met.scheduler
         line = (f"{policy:10s} wall={met.wall_s:6.2f}s "
@@ -293,6 +328,7 @@ def main():
                      f"sparsify={met.sparsify_ops}"
                      f"/{met.sparsify_bytes}B")
         print(line)
+    _finish_trace(args, tracer, traced_wall)
 
 
 if __name__ == "__main__":

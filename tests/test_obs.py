@@ -1,0 +1,316 @@
+"""Observability: tracer rings, exporters, schema, traced engine runs."""
+import json
+import threading
+
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.fpm import mine
+from repro.core.tidlist import pack_database
+from repro.data.transactions import load
+from repro.obs import (LatencyRecorder, MetricsRegistry, Tracer,
+                       check_nesting, chrome_trace, schema,
+                       summary_table, time_in_state, write_chrome_trace)
+
+
+@pytest.fixture(scope="module")
+def small_db():
+    db, p = load("mushroom", seed=0)
+    return [t for t in db[:300]], p
+
+
+def _span(tr, name, t0, dt, cat="task"):
+    """Synthesize a span with exact [t0, t0+dt] extent on the calling
+    thread's ring (bypasses the wall clock for deterministic tests)."""
+    tr._ring().append(("X", name, cat, t0, dt, None))
+
+
+# ---------------------------------------------------------------- tracer --
+
+def test_span_records_duration_and_args():
+    tr = Tracer()
+    t0 = tr.now()
+    tr.span("work", t0, cat="task", args={"k": 1})
+    (ev,) = tr.events()
+    assert ev.ph == "X" and ev.name == "work" and ev.cat == "task"
+    assert ev.dur >= 0.0 and ev.args == {"k": 1}
+
+
+def test_ring_overflow_drops_oldest_without_corruption():
+    tr = Tracer(ring_size=8)
+    for i in range(20):
+        _span(tr, f"s{i}", float(i), 0.5)
+    evs = tr.events()
+    # last cap events survive, in append order, uncorrupted
+    assert [e.name for e in evs] == [f"s{i}" for i in range(12, 20)]
+    assert all(e.dur == 0.5 for e in evs)
+    assert tr.dropped() == 12
+    assert "dropped" in str(chrome_trace(tr).get("otherData", {}))
+
+
+def test_ring_is_per_thread_and_lane_order_is_stable():
+    tr = Tracer()
+    tr.set_lane("driver", sort_index=0)
+    _span(tr, "main", 0.0, 1.0)
+
+    def worker(i):
+        tr.set_lane(f"worker-{i}", sort_index=10 + i)
+        _span(tr, f"w{i}", 0.0, 1.0)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in (1, 0)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # sort_index, not registration order, decides display order
+    assert tr.lane_names() == ["driver", "worker-0", "worker-1"]
+
+
+def test_disabled_fast_path_is_structural(small_db):
+    # the off switch is tracer=None at every site — a plain run must
+    # not build rings anywhere
+    db, p = small_db
+    bm, counts = pack_database(db, p.n_dense_items, return_counts=True)
+    res, met = mine(bm, int(0.3 * len(db)), policy="clustered",
+                    n_workers=2, max_k=4, item_counts=counts)
+    assert met.wall_s > 0
+
+
+# ------------------------------------------------------------- exporters --
+
+def test_nesting_well_formed_and_violation_detected():
+    tr = Tracer()
+    _span(tr, "child", 1.0, 2.0)
+    _span(tr, "parent", 0.0, 10.0)
+    _span(tr, "after", 11.0, 1.0)
+    assert check_nesting(tr.events()) == []
+    _span(tr, "straddle", 11.5, 2.0)   # starts inside "after", ends past
+    bad = check_nesting(tr.events())
+    assert len(bad) == 1 and "straddle" in bad[0]
+
+
+def test_time_in_state_bills_nested_child_to_its_own_category():
+    tr = Tracer()
+    tr.set_lane("worker-0", sort_index=10)
+    _span(tr, "sweep", 2.0, 3.0, cat="sweep")
+    _span(tr, "task", 0.0, 10.0, cat="task")
+    _span(tr, "park", 10.0, 4.0, cat="idle")
+    (row,) = time_in_state(tr).values()
+    assert row["sweep"] == pytest.approx(3.0)
+    assert row["eval"] == pytest.approx(7.0)      # 10 − nested 3
+    assert row["idle"] == pytest.approx(4.0)
+    assert row["total"] == pytest.approx(14.0)
+    assert row["extent"] == pytest.approx(14.0)
+    table = summary_table(tr, wall_s=14.0)
+    assert "worker-0" in table and "100.0%" in table
+
+
+def test_chrome_trace_json_round_trip(tmp_path):
+    tr = Tracer()
+    tr.set_lane("driver", sort_index=0, pid=3)
+    _span(tr, "level-2", 0.25, 0.5, cat="level")
+    tr.counter("refresh_lag", {"s": 0.125})
+    path = str(tmp_path / "t.trace.json")
+    write_chrome_trace(tr, path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    names = {e["ph"]: e for e in evs}
+    assert {"M", "X", "C"} <= set(names)
+    x = names["X"]
+    assert x["ts"] == pytest.approx(0.25e6)       # µs
+    assert x["dur"] == pytest.approx(0.5e6)
+    assert x["pid"] == 3 and x["tid"] >= 1
+    c = names["C"]
+    assert c["args"] == {"s": 0.125}
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {"process_name", "thread_name", "thread_sort_index"} <= {
+        m["name"] for m in meta}
+    assert any(m["args"].get("name") == "host-3" for m in meta)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 7), min_size=1, max_size=30),
+                min_size=1, max_size=4))
+def test_merged_timeline_preserves_per_lane_order(lanes):
+    """Property: events() merges rings lane by lane, and within every
+    lane the collected order IS the append order — even across ring
+    overflow (a small cap keeps only the newest suffix, still in
+    order)."""
+    tr = Tracer(ring_size=8)
+
+    def emit(i, seq):
+        tr.set_lane(f"lane-{i}", sort_index=i)
+        for j, _ in enumerate(seq):
+            _span(tr, f"{i}:{j}", float(j), 0.5)
+
+    threads = [threading.Thread(target=emit, args=(i, seq))
+               for i, seq in enumerate(lanes)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    by_lane = {}
+    for ev in tr.events():
+        by_lane.setdefault(ev.lane, []).append(ev.name)
+    assert len(by_lane) == len(lanes)
+    for i, seq in enumerate(lanes):
+        got = [int(n.split(":")[1]) for n in by_lane[f"lane-{i}"]]
+        want = list(range(len(seq)))[-8:]          # drop-oldest suffix
+        assert got == want
+
+
+# ---------------------------------------------------------------- schema --
+
+def test_schema_builders_fill_defaults_and_validate():
+    s = schema.scheduler_stats({"tasks_run": 5, "steals": 2,
+                                "tasks_stolen": 4})
+    schema.validate("scheduler", s)
+    assert s["tasks_per_steal"] == pytest.approx(2.0)
+    q = schema.query_stats({"hit": 1, "sweep": 2})
+    schema.validate("query", q)
+    assert q["queries"] == 3 and q["top_k"] == 0
+    d = schema.device_stats({"device": 1, "flushes": 4,
+                             "sweep_requests": 10, "host": 2})
+    schema.validate("device", d)
+    assert d["batch_occupancy"] == pytest.approx(2.5)
+    schema.validate("host", schema.host_stats({"host": 1}))
+
+
+def test_schema_validate_rejects_drift():
+    with pytest.raises(ValueError, match="missing"):
+        schema.validate("scheduler", {"tasks_run": 1})
+    bad = schema.scheduler_stats({})
+    bad["made_up"] = 7
+    with pytest.raises(ValueError, match="off-schema"):
+        schema.validate("scheduler", bad)
+    bad2 = schema.query_stats({})
+    bad2["hit"] = 1.5
+    with pytest.raises(ValueError, match="must be int"):
+        schema.validate("query", bad2)
+
+
+def test_schema_merge_and_delta_recompose():
+    a = schema.scheduler_stats({"tasks_run": 10, "steals": 2,
+                                "tasks_stolen": 6})
+    b = schema.scheduler_stats({"tasks_run": 4, "steals": 2,
+                                "tasks_stolen": 2})
+    m = schema.scheduler_stats(schema.merge_counters(
+        [a, b], schema.SCHEDULER_COUNTERS))
+    schema.validate("scheduler", m)
+    assert m["tasks_run"] == 14 and m["tasks_per_steal"] == 2.0
+    d = schema.delta_counters(m, b, schema.SCHEDULER_COUNTERS)
+    assert d["tasks_run"] == 10 and "tasks_per_steal" not in d
+
+
+def test_real_producers_conform_to_schema(small_db):
+    db, p = small_db
+    bm, counts = pack_database(db, p.n_dense_items, return_counts=True)
+    res, met = mine(bm, int(0.3 * len(db)), policy="clustered",
+                    n_workers=2, max_k=4, item_counts=counts)
+    schema.validate("scheduler", met.scheduler)
+    for row in met.per_device:
+        schema.validate("device", row)
+
+
+# -------------------------------------------------------------- registry --
+
+def test_registry_snapshot_isolates_failing_source():
+    reg = MetricsRegistry()
+    reg.register("ok", lambda: {"x": 1})
+    reg.register("boom", lambda: 1 / 0)
+    snap = reg.snapshot()
+    assert snap["ok"] == {"x": 1}
+    assert "ZeroDivisionError" in snap["boom"]["error"]
+    reg.unregister("boom")
+    assert reg.names() == ["ok"]
+
+
+def test_latency_recorder_exact_percentiles():
+    rec = LatencyRecorder(cap=1000)
+    for ms in range(1, 101):                       # 1..100 ms
+        rec.record("hit", ms / 1000.0)
+    p = rec.percentiles("hit")
+    assert p["n"] == 100
+    assert p["p50"] == pytest.approx(0.051)        # round(0.50·99) = 50
+    assert p["p95"] == pytest.approx(0.095)        # round(0.95·99) = 94
+    assert p["p99"] == pytest.approx(0.099)        # round(0.99·99) = 98
+    assert p["max"] == pytest.approx(0.100)
+    rec.record("sweep", 0.002, n=3)                # batched share
+    assert rec.counts() == {"hit": 100, "sweep": 3}
+
+
+# ---------------------------------------------------- traced engine runs --
+
+def test_traced_mine_matches_untraced_and_covers_workers(small_db):
+    """The acceptance run: traced bucket/clustered mine yields a
+    Perfetto-loadable trace with one lane per worker carrying task +
+    flush/sweep + steal spans, well-formed nesting, and per-worker
+    time-in-state that tiles the worker's active extent to within
+    5%."""
+    db, p = small_db
+    bm, counts = pack_database(db, p.n_dense_items, return_counts=True)
+    ms = int(0.3 * len(db))
+    ref, _ = mine(bm, ms, policy="clustered", n_workers=4, max_k=4,
+                  granularity="bucket", item_counts=counts)
+    tr = Tracer()
+    res, met = mine(bm, ms, policy="clustered", n_workers=4, max_k=4,
+                    granularity="bucket", item_counts=counts, trace=tr)
+    assert res == ref                              # tracing is inert
+    names = tr.lane_names()
+    workers = [n for n in names if n.startswith("worker-")]
+    assert len(workers) == 4 and "driver" in names
+    assert any(n.startswith("dispatcher-") for n in names)
+    spans = [e for e in tr.events() if e.ph == "X"]
+    cats = {e.cat for e in spans}
+    assert {"task", "level", "flush", "sweep"} <= cats
+    assert any(e.cat == "steal" or e.cat == "idle" for e in spans)
+    assert check_nesting(tr.events()) == []
+    per_worker = {e.lane for e in spans if e.cat == "task"}
+    assert per_worker >= set(workers)              # every worker ran tasks
+    for key, row in time_in_state(tr).items():
+        if not row["lane"].startswith("worker-"):
+            continue
+        # spans tile the worker loop: total within 5% of the lane's
+        # extent (+2ms absolute slack for inter-span bookkeeping)
+        assert row["total"] >= 0.95 * row["extent"] - 0.002, row
+        assert row["total"] <= row["extent"] + 1e-6, row
+    doc = chrome_trace(tr)
+    lanes_with_tasks = {(e["pid"], e["tid"]) for e in doc["traceEvents"]
+                       if e.get("cat") == "task"}
+    assert len(lanes_with_tasks) >= 4
+    json.dumps(doc)                                # serializable
+
+
+def test_traced_streaming_spans_lag_and_latency(small_db):
+    from repro.core.streaming import PatternServer, StreamingMiner
+    db, p = small_db
+    ms = int(0.25 * len(db))
+    tr = Tracer()
+    sm = StreamingMiner(p.n_dense_items, ms, initial_db=db[:200],
+                        n_workers=2, max_k=3, tracer=tr)
+    try:
+        sm.refresh()
+        assert sm.refresh_lag == 0.0
+        sm.ingest(db[200:260])
+        assert sm.refresh_lag > 0.0                # pending segment waits
+        sm.ingest(db[260:300])
+        sm.refresh()
+        assert sm.refresh_lag == 0.0               # publish drains the lag
+        names = {e.name for e in tr.events()}
+        assert {"ingest", "refresh", "publish"} <= names
+        assert any(e.ph == "C" and e.name == "refresh_lag"
+                   for e in tr.events())
+        assert check_nesting(tr.events()) == []
+        srv = PatternServer(sm)
+        srv.support((0,))
+        srv.top_k((), 3)
+        kinds = set(srv.latency_percentiles())
+        assert "top_k" in kinds and ("hit" in kinds or "sweep" in kinds)
+        snap = sm.metrics_registry().snapshot()
+        assert snap["stream"]["generation"] == sm.generation
+        assert snap["stream"]["refresh_lag_s"] == 0.0
+        assert "query_latency" in snap and "scheduler" in snap
+        schema.validate("query", srv.merged_stats())
+    finally:
+        sm.close()
